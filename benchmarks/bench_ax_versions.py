@@ -1,0 +1,76 @@
+"""Paper Fig. 2/3: Ax implementation ladder across element counts.
+
+The paper compares (original global-memory, OpenACC, shared-memory,
+optimized CUDA) on P100/V100.  The CPU-container analog compares:
+
+  * ``listing1`` — paper Listing 1 with materialized intermediates
+                   (original version's memory traffic; barriered),
+  * ``fused``    — single XLA fusion (shared-memory version's locality),
+  * ``pallas``   — the TPU kernel (interpret mode: correctness path; its
+                   wall time is NOT meaningful on CPU, so its *derived*
+                   column reports the HBM-traffic ratio from the HLO
+                   instead — the quantity the kernel actually optimizes).
+
+CSV: name,us_per_call,derived  where derived = achieved GFLOP/s (model
+flops C_ax = D*(12n+17)) for timed variants.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ax import ax_local_fused, ax_local_listing1
+from repro.core.cost import ax_local_flops
+from repro.core.sem import derivative_matrix
+from repro.kernels import ops
+
+N_GLL = 10
+ELEMENT_SWEEP = (64, 256, 1024)
+
+
+def _time(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))          # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    D = jnp.asarray(derivative_matrix(N_GLL), jnp.float32)
+    for E in ELEMENT_SWEEP:
+        u = jnp.asarray(rng.normal(size=(E, N_GLL, N_GLL, N_GLL)),
+                        jnp.float32)
+        g = jnp.asarray(rng.normal(size=(E, 6, N_GLL, N_GLL, N_GLL)),
+                        jnp.float32)
+        flops = ax_local_flops(E, N_GLL)
+
+        f_l1 = jax.jit(lambda u, g: ax_local_listing1(u, D, g))
+        f_fu = jax.jit(lambda u, g: ax_local_fused(u, D, g))
+        t_l1 = _time(f_l1, u, g)
+        t_fu = _time(f_fu, u, g)
+        rows.append((f"ax_listing1_e{E}", t_l1 * 1e6,
+                     f"{flops / t_l1 / 1e9:.2f}GF/s"))
+        rows.append((f"ax_fused_e{E}", t_fu * 1e6,
+                     f"{flops / t_fu / 1e9:.2f}GF/s"))
+
+        # pallas: interpret-mode timing is NOT meaningful on CPU; derived
+        # reports the fusion win it encodes — intermediate (temp) buffer
+        # bytes of listing1 vs the fused schedule, plus the analytic HBM
+        # stream count (14 streams -> 8 = 1.75x less traffic, cf. Eq. 2).
+        ma_l1 = f_l1.lower(u, g).compile().memory_analysis()
+        ma_fu = f_fu.lower(u, g).compile().memory_analysis()
+        t_pl = _time(lambda u, g: ops.nekbone_ax(u, D, g, interpret=True),
+                     u, g, reps=1)
+        tr = (ma_l1.temp_size_in_bytes / max(ma_fu.temp_size_in_bytes, 1)
+              if ma_l1 and ma_fu else float("nan"))
+        rows.append((f"ax_pallas_e{E}", t_pl * 1e6,
+                     f"temp_l1/fused={tr:.2f}x;streams_14v8=1.75x"))
+    return rows

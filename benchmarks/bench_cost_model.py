@@ -1,0 +1,52 @@
+"""Paper §III-A (Eq. 1-2): does the implementation match the cost model?
+
+Counts the *compiled* work of one CG iteration (loop-corrected dot flops
+from the HLO + cost_analysis bytes) against the paper's model
+``C(D, n) = D (12n + 34)`` and the 24D-read/6D-write traffic, across
+polynomial degrees.  CSV derived column: measured/model ratios.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost import cg_iter_bytes, cg_iter_flops, intensity
+from repro.core.nekbone import NekboneCase
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def run():
+    rows = []
+    for n in (6, 8, 10):
+        case = NekboneCase(n=n, grid=(4, 4, 4), dtype=jnp.float32,
+                           ax_impl="fused")
+        D = case.mesh.ndof
+
+        def cg_iter(x, r, p):
+            w = case.ax_full(p)
+            dot = case.dot()
+            alpha = dot(r, r) / dot(p, w)
+            x2 = x + alpha * p
+            r2 = r - alpha * w
+            beta = dot(r2, r2) / dot(r, r)
+            return x2, r2, r2 + beta * p
+
+        aval = jax.ShapeDtypeStruct(case.mask.shape, jnp.float32)
+        compiled = jax.jit(cg_iter).lower(aval, aval, aval).compile()
+        hlo_dot = analyze_hlo(compiled.as_text())["dot_flops"]
+        ca = compiled.cost_analysis()
+        bytes_acc = float(ca.get("bytes accessed", 0))
+
+        model_flops = cg_iter_flops(D, n)
+        model_bytes = sum(cg_iter_bytes(D, itemsize=4))
+        # dots are the 12n part of (12n + 34)
+        dot_model = D * 12 * n
+        rows.append((f"eq1_dotflops_n{n}", 0.0,
+                     f"hlo/model={hlo_dot / dot_model:.3f}"))
+        rows.append((f"eq2_bytes_n{n}", 0.0,
+                     f"xla/model={bytes_acc / model_bytes:.3f}"))
+        rows.append((f"intensity_n{n}", 0.0,
+                     f"I={intensity(n, 4):.3f}flop/B(fp32)"))
+    return rows

@@ -1,0 +1,25 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: paper Fig. 2/3 (version ladder), Fig. 4 (measured
+roofline), §III-A Eq. 1-2 (cost-model adherence).
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_ax_versions, bench_cost_model, bench_roofline
+
+    print("name,us_per_call,derived")
+    for mod, title in ((bench_ax_versions, "Fig2/3: Ax version ladder"),
+                       (bench_roofline, "Fig4: measured roofline"),
+                       (bench_cost_model, "Eq1-2: cost model")):
+        print(f"# --- {title} ---", file=sys.stderr)
+        for name, us, derived in mod.run():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

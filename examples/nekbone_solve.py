@@ -1,0 +1,78 @@
+"""End-to-end Nekbone driver (the paper's application, §V protocol).
+
+Runs the full benchmark the paper measures: SEM Poisson on a box of
+elements at polynomial degree 9, 100 CG iterations, sweeping the element
+count, reporting achieved GFLOP/s against the paper's cost model — plus a
+correctness solve against the manufactured solution and the beyond-paper
+extras (Jacobi preconditioning, mixed-precision iterative refinement).
+
+  PYTHONPATH=src python examples/nekbone_solve.py [--elements 128]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.nekbone import PAPER_CASES
+from repro.core.cg import cg
+from repro.core.cost import cg_iter_flops
+from repro.core.nekbone import NekboneCase
+
+
+def run_case(nelt: int, niter: int = 100):
+    nb = PAPER_CASES[nelt]
+    case = NekboneCase(n=nb.n, grid=nb.grid, dtype=jnp.float32,
+                       ax_impl="fused")
+    u_ex, f = case.manufactured()
+
+    solve = jax.jit(lambda f: case.solve(f, niter=niter))
+    res = solve(f)
+    jax.block_until_ready(res.x)
+    t0 = time.time()
+    res = solve(f)
+    jax.block_until_ready(res.x)
+    dt = time.time() - t0
+
+    flops = cg_iter_flops(case.mesh.ndof, case.n) * niter
+    err = float(case.solution_error(res.x, u_ex))
+    print(f"E={nelt:5d}  ndof={case.mesh.ndof:9d}  {niter} CG iters in "
+          f"{dt:6.2f}s  -> {flops / dt / 1e9:6.2f} GF/s   max-err {err:.2e}")
+    return case, f, u_ex
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--elements", type=int, default=128,
+                    choices=sorted(PAPER_CASES))
+    ap.add_argument("--iters", type=int, default=100)
+    ap.add_argument("--sweep", action="store_true",
+                    help="paper's element sweep (64..1024; slow on CPU)")
+    args = ap.parse_args()
+
+    print("== Nekbone (paper §V: degree 9, 100 CG iterations) ==")
+    sweep = (64, 128, 256) if args.sweep else (args.elements,)
+    for E in sweep:
+        case, f, u_ex = run_case(E, args.iters)
+
+    print("\n== beyond-paper: Jacobi preconditioning ==")
+    r_plain, _ = case.solve_manufactured(tol=1e-6, max_iter=500)
+    r_pc, _ = case.solve_manufactured(tol=1e-6, max_iter=500, precond=True)
+    print(f"iterations to 1e-6: plain={int(r_plain.iters)} "
+          f"jacobi={int(r_pc.iters)}")
+
+    print("\n== beyond-paper: mixed-precision iterative refinement ==")
+    from repro.core.cg import ir_solve
+
+    # (true fp64 outer residuals need JAX_ENABLE_X64=1; the structure of the
+    # refinement loop is identical and demonstrated here in fp32)
+    def inner(r):
+        tol = 1e-5 * jnp.linalg.norm(r.ravel())
+        return cg(case.ax_full, r, tol=tol, max_iter=300, dot=case.dot()).x
+
+    x, norms = ir_solve(case.ax_full, f, inner, outer_iters=3)
+    print("IR residual norms:", [f"{float(n):.2e}" for n in norms])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: Nekbone tensor-product operations on TPU (JAX + Pallas).
+
+Reproduction + TPU adaptation of "Optimization of Tensor-product Operations
+in Nekbone on GPUs" (Karp et al., 2020) with a production-grade multi-pod
+training/serving substrate.  See DESIGN.md for the system map.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Checkpoint substrate: async, atomic, elastic-restore."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

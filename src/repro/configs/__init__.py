@@ -1,0 +1,40 @@
+"""Architecture registry: ``get(name)`` / ``ARCHS`` / per-shape input specs."""
+from __future__ import annotations
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell
+
+from repro.configs import (arctic_480b, codeqwen1_5_7b, gemma2_27b,
+                           hymba_1_5b, llava_next_mistral_7b,
+                           nemotron_4_340b, qwen2_5_14b, qwen3_moe_30b_a3b,
+                           rwkv6_1_6b, whisper_large_v3)
+
+ARCHS: dict[str, ArchConfig] = {
+    c.CONFIG.name: c.CONFIG
+    for c in (rwkv6_1_6b, gemma2_27b, codeqwen1_5_7b, nemotron_4_340b,
+              qwen2_5_14b, llava_next_mistral_7b, whisper_large_v3,
+              qwen3_moe_30b_a3b, arctic_480b, hymba_1_5b)
+}
+
+
+def get(name: str) -> ArchConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}") from None
+
+
+def cells():
+    """All (arch, shape) dry-run cells, with sub-quadratic rule applied.
+
+    ``long_500k`` only runs for archs that are not pure full attention
+    (DESIGN.md §4); pure-attention archs report the cell as 'skipped'.
+    """
+    out = []
+    for name, cfg in ARCHS.items():
+        for sname, cell in SHAPES.items():
+            skipped = (sname == "long_500k" and cfg.is_pure_full_attention)
+            out.append((name, sname, skipped))
+    return out
+
+
+__all__ = ["ARCHS", "get", "cells", "SHAPES", "ArchConfig", "ShapeCell"]

@@ -1,0 +1,124 @@
+"""ShapeDtypeStruct input stand-ins + PartitionSpecs per (arch x shape) cell.
+
+Used by the dry-run (lower/compile with no allocation) and by the launchers.
+``kind``:
+  * train   — ``loss/train_step`` inputs: token batch (+ modality stubs)
+  * prefill — ``serve_prefill`` inputs: full prompt (+ modality stubs)
+  * decode  — ``serve_step`` inputs: one token + KV/recurrent cache of
+              ``seq_len`` (the cache is an *input*, per the assignment:
+              "one new token with a KV cache of seq_len")
+``long_500k`` (batch 1) marks the cache context-parallel: the cache sequence
+axis is sharded over the ``data`` axis (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed.sharding import RULES
+
+__all__ = ["input_specs", "cache_specs", "extra_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _div(mesh, dim, axes):
+    if axes is None or mesh is None:
+        return None
+    ax = (axes,) if isinstance(axes, str) else tuple(axes)
+    sz = 1
+    for a in ax:
+        sz *= mesh.shape[a] if a in mesh.axis_names else 1
+    return axes if (sz > 1 and dim % sz == 0) else None
+
+
+def extra_specs(cfg: ArchConfig, batch: int):
+    """Modality-stub inputs (precomputed embeddings), or None."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.img_tokens:
+        return {"img_embeds": _sds((batch, cfg.img_tokens, cfg.d_model), cdt)}
+    if cfg.enc_layers:
+        return {"audio_embeds": _sds((batch, cfg.audio_ctx, cfg.d_model), cdt)}
+    return None
+
+
+def _extra_pspecs(extra, mesh):
+    if extra is None:
+        return None
+    return {k: P(_div(mesh, v.shape[0], RULES.dp), None, None)
+            for k, v in extra.items()}
+
+
+def cache_specs(cfg: ArchConfig, cache_tree, mesh, *, context_parallel: bool):
+    """PartitionSpec tree for a stacked (leading-L) decode cache."""
+
+    def spec_for(path, leaf):
+        name = getattr(path[-1], "key", str(path[-1]))
+        shape = leaf.shape            # (L, B, ...)
+        B = shape[1]
+        dp = _div(mesh, B, RULES.dp)
+        if name in ("k", "v"):
+            Hkv, S = shape[2], shape[3]
+            if context_parallel:
+                return P(None, None, _div(mesh, Hkv, RULES.tp),
+                         _div(mesh, S, RULES.seq), None)
+            tp_h = _div(mesh, Hkv, RULES.tp)
+            if tp_h is None:          # kv heads < TP degree: shard sequence
+                return P(None, dp, None, _div(mesh, S, RULES.tp), None)
+            return P(None, dp, tp_h, None, None)
+        if name in ("xk", "xv"):
+            return P(None, dp, _div(mesh, shape[2], RULES.tp), None, None)
+        if name == "state":           # rwkv (L, B, H, hd, hd)
+            return P(None, dp, _div(mesh, shape[2], RULES.tp), None, None)
+        if name in ("tm_x", "cm_x"):
+            return P(None, dp, None, None)
+        if name == "conv":            # (L, B, K-1, di)
+            return P(None, dp, None, _div(mesh, shape[3], RULES.tp))
+        if name == "h":               # (L, B, di, n)
+            return P(None, dp, _div(mesh, shape[2], RULES.tp), None)
+        return P(*([None] * len(shape)))
+
+    return jtu.tree_map_with_path(spec_for, cache_tree)
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell, mesh=None):
+    """Returns (avals_kwargs, pspecs_kwargs) for the cell's step function.
+
+    Keys mirror the step-function signatures in ``launch/steps.py``.
+    """
+    B, S = cell.global_batch, cell.seq_len
+    dp = _div(mesh, B, RULES.dp)
+
+    if cell.kind == "train":
+        text = S - (cfg.img_tokens or 0)
+        batch = {"tokens": _sds((B, text + 1), jnp.int32)}
+        bspec = {"tokens": P(dp, None)}
+        extra = extra_specs(cfg, B)
+        return ({"batch": batch, "extra": extra},
+                {"batch": bspec, "extra": _extra_pspecs(extra, mesh)})
+
+    if cell.kind == "prefill":
+        text = S - (cfg.img_tokens or 0)
+        tokens = _sds((B, text), jnp.int32)
+        extra = extra_specs(cfg, B)
+        return ({"tokens": tokens, "extra": extra},
+                {"tokens": P(dp, None), "extra": _extra_pspecs(extra, mesh)})
+
+    if cell.kind == "decode":
+        from repro.models import model as Mdl
+
+        cp = cell.name == "long_500k"
+        cache = jax.eval_shape(
+            lambda: Mdl.init_cache(cfg, B, S, context_parallel=cp))
+        cspec = cache_specs(cfg, cache, mesh, context_parallel=cp)
+        tokens = _sds((B, 1), jnp.int32)
+        index = _sds((), jnp.int32)
+        return ({"tokens": tokens, "cache": cache, "index": index},
+                {"tokens": P(dp, None), "cache": cspec, "index": P()})
+
+    raise ValueError(cell.kind)

@@ -1,0 +1,17 @@
+"""Core Nekbone components: SEM operators, gather-scatter, CG, cost model.
+
+Submodules: ``sem``, ``geom``, ``ax``, ``gs``, ``cg``, ``cost``, ``nekbone``.
+Note: functions whose names collide with submodule names (e.g. ``cg``) are
+not re-exported at package level — import them from their module.
+"""
+from repro.core import ax, cg, cost, geom, gs, nekbone, sem  # noqa: F401
+from repro.core.cost import CostModel
+from repro.core.geom import BoxMesh
+from repro.core.nekbone import NekboneCase
+from repro.core.sem import SEMOperators, derivative_matrix, gll_points_weights
+
+__all__ = [
+    "ax", "cg", "cost", "geom", "gs", "nekbone", "sem",
+    "CostModel", "BoxMesh", "NekboneCase",
+    "SEMOperators", "derivative_matrix", "gll_points_weights",
+]

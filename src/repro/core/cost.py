@@ -1,0 +1,94 @@
+"""The paper's cost model (Eq. 1-2) and exact operation counts.
+
+Paper §III-A:  per CG iteration over ``D`` degrees of freedom with ``n`` GLL
+points per direction,
+
+    C(D, n) = D * (12 n + 34)                 flops            (Eq. 1)
+    reads   = 24 D,   writes = 6 D            fp64 words
+    I(n)    = (12 n + 34) / 240               flop/byte (fp64) (Eq. 2)
+
+The 12n term is the six contractions (3 forward + 3 transposed, 2n flops
+each per point); the constant covers the metric application and the CG
+vector operations.  We keep the model exactly as published and additionally
+expose dtype-general byte counts (the TPU build runs fp32/bf16, which doubles
+/ quadruples I(n) — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["flops_per_dof", "cg_iter_flops", "cg_iter_bytes", "intensity",
+           "ax_local_flops", "ax_local_bytes", "roofline_gflops", "CostModel"]
+
+
+def flops_per_dof(n: int) -> int:
+    """Eq. 1 coefficient: flops per DOF per CG iteration."""
+    return 12 * n + 34
+
+
+def cg_iter_flops(ndof: int, n: int) -> int:
+    """Eq. 1: C(D, n)."""
+    return ndof * flops_per_dof(n)
+
+
+def cg_iter_bytes(ndof: int, itemsize: int = 8) -> tuple[int, int]:
+    """(read_bytes, write_bytes) per CG iteration: 24 D reads, 6 D writes."""
+    return 24 * ndof * itemsize, 6 * ndof * itemsize
+
+
+def intensity(n: int, itemsize: int = 8) -> float:
+    """Eq. 2 generalized to dtype: I = (12n+34) / (30 * itemsize)."""
+    return flops_per_dof(n) / (30.0 * itemsize)
+
+
+def ax_local_flops(nelt: int, n: int) -> int:
+    """Exact flops of the local tensor-product operator (both stages).
+
+    Per point: 3 forward contractions (2n each), metric apply
+    (6 mul + ... = 15: 9 mul + 6 add), 3 transposed contractions (2n each)
+    summed into w (2 adds) => 12n + 17.
+    """
+    return nelt * n ** 3 * (12 * n + 17)
+
+
+def ax_local_bytes(nelt: int, n: int, itemsize: int = 8) -> tuple[int, int]:
+    """Minimal HBM traffic of the fused local operator.
+
+    Reads: u (1 field) + G (6 fields) (+ D, negligible); writes: w (1 field).
+    """
+    ndof = nelt * n ** 3
+    return 7 * ndof * itemsize, 1 * ndof * itemsize
+
+
+def roofline_gflops(bandwidth_gbs: float, n: int, itemsize: int = 8) -> float:
+    """Memory-roofline performance bound: BW * I(n) (paper §VI-B)."""
+    return bandwidth_gbs * intensity(n, itemsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Cost model instance for a given case size."""
+
+    nelt: int
+    n: int
+    itemsize: int = 8
+
+    @property
+    def ndof(self) -> int:
+        return self.nelt * self.n ** 3
+
+    @property
+    def cg_flops(self) -> int:
+        return cg_iter_flops(self.ndof, self.n)
+
+    @property
+    def cg_read_bytes(self) -> int:
+        return cg_iter_bytes(self.ndof, self.itemsize)[0]
+
+    @property
+    def cg_write_bytes(self) -> int:
+        return cg_iter_bytes(self.ndof, self.itemsize)[1]
+
+    @property
+    def intensity(self) -> float:
+        return intensity(self.n, self.itemsize)

@@ -1,0 +1,169 @@
+"""End-to-end Nekbone case: SEM Poisson on a box, solved with CG.
+
+This is the composable entry point for the paper's system:
+
+    case = NekboneCase(n=10, grid=(8, 8, 16))     # degree 9, 1024 elements
+    res  = case.solve_manufactured(niter=100)      # paper's benchmark run
+    err  = case.solution_error(res.x)
+
+The operator pipeline is exactly Nekbone's ``ax``:
+    w = mask( gather_scatter( ax_local(u) ) )
+with ``ax_local`` selectable between the paper-faithful Listing-1 version,
+the XLA-fused version, and the Pallas TPU kernel (DESIGN.md §2).
+
+Distribution: :meth:`sharded_ops` returns the same functions expressed for a
+``shard_map`` over a device mesh, sharding elements along the z element axis
+and assembling interfaces with a ppermute halo exchange (core/gs.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.ax as ax_mod
+import repro.core.cg as cg_mod
+import repro.core.gs as gs_mod
+from repro.core.cost import CostModel
+from repro.core.geom import BoxMesh
+
+__all__ = ["NekboneCase"]
+
+
+@dataclasses.dataclass
+class NekboneCase:
+    """A runnable Nekbone problem instance.
+
+    Args:
+      n:       GLL points per direction (degree + 1). Paper uses 10.
+      grid:    element grid (EX, EY, EZ).
+      lengths: physical box size.
+      dtype:   compute dtype (fp64 validated on CPU; fp32/bf16 TPU target).
+      ax_impl: 'listing1' | 'fused' | 'pallas'.
+    """
+
+    n: int = 10
+    grid: tuple[int, int, int] = (4, 4, 4)
+    lengths: tuple[float, float, float] = (1.0, 1.0, 1.0)
+    dtype: jnp.dtype = jnp.float32
+    ax_impl: str = "fused"
+
+    def __post_init__(self):
+        self.mesh = BoxMesh(self.n, self.grid, self.lengths)
+        ops = self.mesh.ops
+        dt = self.dtype
+        self.D = jnp.asarray(ops.D, dt)
+        self.g = jnp.asarray(self.mesh.geometric_factors(), dt)
+        self.mask = jnp.asarray(self.mesh.dirichlet_mask(), dt)
+        self.mult = jnp.asarray(self.mesh.multiplicity(), dt)
+        self.c = self.mask / self.mult          # Nekbone's weight vector
+        self.bmass = jnp.asarray(self.mesh.mass(), dt)
+
+    # ------------------------------------------------------------------
+    @property
+    def cost(self) -> CostModel:
+        return CostModel(self.mesh.nelt, self.n, jnp.dtype(self.dtype).itemsize)
+
+    # ------------------------------------------------------------------
+    def ax_local(self, u: jnp.ndarray) -> jnp.ndarray:
+        return ax_mod.ax_local(u, self.D, self.g, impl=self.ax_impl)
+
+    def ax_full(self, u: jnp.ndarray) -> jnp.ndarray:
+        """Assembled, masked Poisson operator (single shard)."""
+        w = self.ax_local(u)
+        w = gs_mod.ds_sum_local(w, self.grid)
+        return w * self.mask
+
+    # ------------------------------------------------------------------
+    def manufactured(self):
+        """Manufactured solution  u = prod sin(pi x_d / L_d)  and its rhs.
+
+        Returns ``(u_exact, f)`` with f the *weak-form* right-hand side
+        ``B f_strong`` assembled and masked, ready for CG.
+        """
+        xyz = self.mesh.coords()
+        lx, ly, lz = self.lengths
+        sx = np.sin(np.pi * xyz[..., 0] / lx)
+        sy = np.sin(np.pi * xyz[..., 1] / ly)
+        sz = np.sin(np.pi * xyz[..., 2] / lz)
+        u_ex = sx * sy * sz
+        lap = np.pi ** 2 * (1 / lx ** 2 + 1 / ly ** 2 + 1 / lz ** 2)
+        f_strong = lap * u_ex
+        f = jnp.asarray(f_strong, self.dtype) * self.bmass
+        f = gs_mod.ds_sum_local(f, self.grid) * self.mask
+        return jnp.asarray(u_ex, self.dtype), f
+
+    # ------------------------------------------------------------------
+    def dot(self) -> Callable:
+        return cg_mod.weighted_dot(self.c)
+
+    def solve(self, f: jnp.ndarray, *, niter: int | None = None,
+              tol: float = 1e-8, max_iter: int = 1000,
+              precond: bool = False) -> cg_mod.CGResult:
+        M = None
+        if precond:
+            M = cg_mod.jacobi_preconditioner(self.operator_diagonal())
+        if niter is not None:
+            return cg_mod.cg_fixed_iters(self.ax_full, f, niter=niter,
+                                         dot=self.dot(), precond=M)
+        return cg_mod.cg(self.ax_full, f, tol=tol, max_iter=max_iter,
+                         dot=self.dot(), precond=M)
+
+    def solve_manufactured(self, *, niter: int | None = None, tol: float = 1e-8,
+                           max_iter: int = 1000, precond: bool = False):
+        u_ex, f = self.manufactured()
+        res = self.solve(f, niter=niter, tol=tol, max_iter=max_iter,
+                         precond=precond)
+        return res, u_ex
+
+    def solution_error(self, x: jnp.ndarray, u_exact: jnp.ndarray) -> jnp.ndarray:
+        """Weighted max-norm error against the exact solution."""
+        return jnp.max(jnp.abs((x - u_exact) * self.mask))
+
+    # ------------------------------------------------------------------
+    def operator_diagonal(self) -> jnp.ndarray:
+        """diag(A) for the Jacobi preconditioner, computed structurally.
+
+        diag over the element-local operator then assembled:  for the SEM
+        Poisson operator, diag_local[p] = sum_l D[l,i]^2 G_rr[..l..] + ...;
+        we compute it exactly with three small einsums.
+        """
+        grr = self.g[:, 0]
+        gss = self.g[:, 3]
+        gtt = self.g[:, 5]
+        D2 = self.D * self.D  # (a, b): D[a,b]^2
+        dr = jnp.einsum("li,ekjl->ekji", D2, grr)
+        ds = jnp.einsum("lj,ekli->ekji", D2, gss)
+        dt = jnp.einsum("lk,elji->ekji", D2, gtt)
+        diag = dr + ds + dt
+        diag = gs_mod.ds_sum_local(diag, self.grid)
+        # masked rows: identity-like; keep 1 to avoid division by zero
+        return jnp.where(self.mask > 0, diag, 1.0).astype(self.dtype)
+
+    # ------------------------------------------------------------------
+    # Distributed (shard_map) operator set
+    # ------------------------------------------------------------------
+    def shard_grid(self, n_shards: int) -> tuple[int, int, int]:
+        ex, ey, ez = self.grid
+        if ez % n_shards:
+            raise ValueError(f"EZ={ez} not divisible by {n_shards} shards")
+        return ex, ey, ez // n_shards
+
+    def sharded_ax_full(self, axis_names) -> Callable:
+        """Per-shard assembled operator, for use inside ``shard_map``.
+
+        Shard-local inputs: u, g, mask blocks split along the element axis
+        (z-major ordering makes a leading-axis split a z-split).
+        """
+        axis_names = tuple(axis_names)
+
+        def op(u_local, g_local, mask_local, grid_local):
+            w = ax_mod.ax_local(u_local, self.D, g_local, impl=self.ax_impl)
+            w = gs_mod.ds_sum_sharded(w, grid_local, axis_names)
+            return w * mask_local
+
+        return op

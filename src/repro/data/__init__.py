@@ -1,0 +1,5 @@
+"""Data substrate: deterministic synthetic LM stream + binary shard reader."""
+from repro.data.pipeline import (SyntheticLMStream, MemmapTokenReader,
+                                 make_batch_iterator)
+
+__all__ = ["SyntheticLMStream", "MemmapTokenReader", "make_batch_iterator"]

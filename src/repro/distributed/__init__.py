@@ -1,0 +1,7 @@
+"""Distributed substrate: sharding rules, compression, overlap, CP attention."""
+from repro.distributed import (compression, context_parallel, overlap,  # noqa: F401
+                               sharding)
+from repro.distributed.sharding import RULES, AxisRules, constrain
+
+__all__ = ["compression", "context_parallel", "overlap", "sharding",
+           "RULES", "AxisRules", "constrain"]

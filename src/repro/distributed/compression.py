@@ -1,0 +1,68 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+Cross-pod links are an order of magnitude slower than ICI, so the pod-level
+gradient all-reduce is the multi-pod bottleneck for DP training.  Two
+standard mitigations, both numerically audited by tests:
+
+  * :func:`compressed_psum` — cast to bf16 (or any narrow dtype) before the
+    ``psum`` over the pod axis and accumulate back in f32.  Halves DCN bytes;
+    the mantissa loss is absorbed by Adam's second-moment normalization.
+  * :func:`quantized_psum` — int8 with per-tensor scale and stochastic
+    rounding (4x fewer bytes).  all_gather + dequant + sum so accumulation
+    stays exact in f32 (a raw int8 psum would overflow).
+
+Used by ``launch/train.py`` via ``--grad-compression {none,bf16,int8}``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compressed_psum", "quantized_psum", "psum_tree"]
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str,
+                    dtype=jnp.bfloat16) -> jnp.ndarray:
+    """psum with on-the-wire dtype ``dtype`` and f32 accumulation semantics.
+
+    (all_gather + f32 sum rather than psum-of-bf16 so the reduction does not
+    accumulate rounding across the pod count.)
+    """
+    lo = x.astype(dtype)
+    g = jax.lax.all_gather(lo, axis_name)            # (pods, ...)
+    return jnp.sum(g.astype(jnp.float32), axis=0).astype(x.dtype)
+
+
+def quantized_psum(x: jnp.ndarray, axis_name: str, *,
+                   key: jax.Array | None = None) -> jnp.ndarray:
+    """int8 + per-tensor-scale all-reduce with stochastic rounding."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    y = x.astype(jnp.float32) / scale
+    if key is not None:
+        y = y + jax.random.uniform(key, x.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    qg = jax.lax.all_gather(q, axis_name)            # (pods, ...)
+    sg = jax.lax.all_gather(scale, axis_name)        # (pods,)
+    out = jnp.einsum("p...,p->...", qg.astype(jnp.float32), sg)
+    return out.astype(x.dtype)
+
+
+def psum_tree(tree, axis_name: str, *, compression: str = "none",
+              key: jax.Array | None = None):
+    """Tree-wide gradient all-reduce with selectable wire format."""
+    if compression == "none":
+        return jax.lax.psum(tree, axis_name)
+    if compression == "bf16":
+        return jax.tree.map(
+            lambda g: compressed_psum(g, axis_name), tree)
+    if compression == "int8":
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = (jax.random.split(key, len(leaves)) if key is not None
+                else [None] * len(leaves))
+        out = [quantized_psum(g, axis_name, key=k)
+               for g, k in zip(leaves, keys)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+    raise ValueError(f"unknown compression {compression!r}")

@@ -1,0 +1,59 @@
+"""Context-parallel decode attention (explicit shard_map form).
+
+For ``long_500k`` (one sequence, 512k KV) the cache sequence axis is sharded
+over ``data``.  Each shard computes attention over its KV slice and the
+partial results combine exactly via the log-sum-exp trick:
+
+    out = sum_s exp(m_s - m) * l_s * o_s  /  sum_s exp(m_s - m) * l_s
+
+The GSPMD path (models/attention.decode_attention with a sequence-sharded
+constraint) lets XLA derive the same all-reduces automatically; this module
+is the explicit version — used to *verify* the partitioner's numerics and as
+the hand-tuned fallback if the SPMD schedule regresses (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cp_decode_attention"]
+
+
+def cp_decode_attention(q, k_shard, v_shard, *, axis_name: str,
+                        kv_valid_len, window=None, softcap=None, scale=None):
+    """Per-shard body (call inside shard_map over the sequence shards).
+
+    q:        (B, H, 1, hd) replicated across shards.
+    k_shard:  (B, Hkv, S_local, hd) this shard's KV slice.
+    kv_valid_len: global number of valid cache entries (scalar); with a
+    ``window`` only the last ``window`` of them are attended.
+    Returns (B, H, 1, hd), identical on all shards.
+    """
+    B, H, _, hd = q.shape
+    Hkv, S_loc = k_shard.shape[1], k_shard.shape[2]
+    G = H // Hkv
+    scale = hd ** -0.5 if scale is None else scale
+    i = jax.lax.axis_index(axis_name)
+
+    qg = q.reshape(B, Hkv, G, 1, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                   k_shard.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = i * S_loc + jnp.arange(S_loc)
+    mask = kpos < kv_valid_len
+    if window is not None:
+        mask &= kpos > kv_valid_len - 1 - window
+    s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+
+    m_loc = s.max(-1, keepdims=True)                    # (B,Hkv,G,1,1)
+    p = jnp.exp(s - m_loc)
+    l_loc = p.sum(-1, keepdims=True)
+    o_loc = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_shard.astype(jnp.float32))
+
+    m = jax.lax.pmax(m_loc, axis_name)
+    corr = jnp.exp(m_loc - m)
+    l = jax.lax.psum(l_loc * corr, axis_name)
+    o = jax.lax.psum(o_loc * corr, axis_name)
+    out = o / jnp.where(l == 0, 1.0, l)
+    return out.reshape(B, H, 1, hd).astype(q.dtype)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots (see DESIGN.md §2, §4).
+
+* ``nekbone_ax`` — the paper's tensor-product Poisson operator (primary).
+* ``flash_attn`` — block online-softmax attention (prefill hot-spot).
+* ``wkv6``       — RWKV6 linear-attention recurrence (state streaming).
+
+``ops``   — jitted public wrappers (layout handling, padding, autotuning).
+``ref``   — pure-jnp oracles used by the allclose test sweeps.
+"""
+from repro.kernels import ops, ref  # noqa: F401
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,99 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Each wrapper:
+  * accepts natural shapes and reshapes/pads to the kernel's HBM layout,
+  * picks ``interpret=True`` automatically off-TPU (this container is
+    CPU-only; the TPU lowering is exercised structurally by the dry-run),
+  * exposes the tuning knobs (block sizes) with roofline-reasoned defaults.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attn as _flash
+from repro.kernels import nekbone_ax as _ax
+from repro.kernels import wkv6 as _wkv6
+
+__all__ = ["nekbone_ax", "flash_attention", "wkv6", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_block_e(E: int, n: int, vmem_budget_bytes: int = 8 * 2 ** 20) -> int:
+    """Largest power-of-two element block whose working set fits the budget.
+
+    The kernel keeps ~14 block-sized fp32 arrays live (u, w, 6 metric fields,
+    3 gradients + 3 temporaries); lanes pad n^3 up to a multiple of 128.
+    """
+    n3_padded = -(-(n ** 3) // 128) * 128
+    per_elem = 14 * n3_padded * 4
+    be = max(1, vmem_budget_bytes // per_elem)
+    be = 1 << (be.bit_length() - 1)            # floor to power of two
+    while be > 1 and E % be:
+        be //= 2
+    return be
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_e", "interpret"))
+def _nekbone_ax_impl(u, D, Dt, g, block_e, interpret):
+    E = u.shape[0]
+    n = u.shape[-1]
+    u2 = u.reshape(E, n ** 3)
+    g2 = g.reshape(E, 6, n ** 3)
+    w2 = _ax.nekbone_ax_pallas(u2, D, Dt, g2, n=n, block_e=block_e,
+                               interpret=interpret)
+    return w2.reshape(u.shape)
+
+
+def nekbone_ax(u: jnp.ndarray, D: jnp.ndarray, g: jnp.ndarray, *,
+               block_e: int | None = None,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Fused local Poisson operator  w = D^T (G (D u)).
+
+    Args:
+      u: (E, n, n, n) nodal values, layout [e, k, j, i].
+      D: (n, n) derivative matrix (dxm1).
+      g: (E, 6, n, n, n) metric fields (rr, rs, rt, ss, st, tt).
+      block_e: elements per VMEM block (default: autotuned to ~8 MiB).
+      interpret: force Pallas interpret mode (defaults to off-TPU detection).
+
+    Elements are zero-padded to a multiple of ``block_e`` if needed.
+    """
+    E = u.shape[0]
+    n = u.shape[-1]
+    interpret = default_interpret() if interpret is None else interpret
+    block_e = block_e or _pick_block_e(E, n)
+    pad = (-E) % block_e
+    if pad:
+        u = jnp.concatenate([u, jnp.zeros((pad,) + u.shape[1:], u.dtype)])
+        g = jnp.concatenate([g, jnp.zeros((pad,) + g.shape[1:], g.dtype)])
+    w = _nekbone_ax_impl(u, D, jnp.asarray(D).T, g, block_e, interpret)
+    return w[:E] if pad else w
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    window: int | None = None, softcap: float | None = None,
+                    q_offset: int = 0, block_q: int = 512, block_k: int = 512,
+                    interpret: bool | None = None):
+    """Block online-softmax attention (prefill hot-spot). See flash_attn.py."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _flash.flash_attention(
+        q, k, v, causal=causal, scale=scale, window=window, softcap=softcap,
+        q_offset=q_offset, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+
+
+def wkv6(r, k, v, w, u, *, initial_state=None, return_state: bool = False,
+         block_t: int = 16, variant: str = "chunked",
+         interpret: bool | None = None):
+    """RWKV6 linear-attention recurrence (state streamed through VMEM)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _wkv6.wkv6(r, k, v, w, u, initial_state=initial_state,
+                      return_state=return_state, block_t=block_t,
+                      variant=variant, interpret=interpret)

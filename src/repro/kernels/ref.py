@@ -1,0 +1,137 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the kernel allclose tests; they are written
+for clarity, not speed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["nekbone_ax_ref", "attention_ref", "wkv6_ref", "wkv6_chunked"]
+
+
+def nekbone_ax_ref(u: jnp.ndarray, D: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels/nekbone_ax: the fused local Poisson operator.
+
+    u: (E, n, n, n) [e, k, j, i];  D: (n, n);  g: (E, 6, n, n, n).
+    """
+    from repro.core.ax import ax_local_fused
+
+    return ax_local_fused(u, D, g)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, scale: float | None = None,
+                  window: int | None = None, softcap: float | None = None,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """Naive attention oracle with GQA / sliding window / logit softcap.
+
+    q: (B, Hq, Sq, d); k, v: (B, Hkv, Skv, d); Hq % Hkv == 0.
+    ``q_offset`` is the absolute position of q[0] (for decode: Skv - Sq).
+    Masking: position i attends to j iff j <= i (causal) and i - j < window.
+    """
+    B, Hq, Sq, d = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = d ** -0.5 if scale is None else scale
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)
+
+
+def wkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+             u: jnp.ndarray, *, initial_state: jnp.ndarray | None = None,
+             return_state: bool = False):
+    """Oracle for kernels/wkv6: the RWKV6 (Finch) linear-attention recurrence.
+
+    Shapes: r, k, v, w: (B, H, T, d); u: (H, d).  Per head, with state
+    S in R^{d_k x d_v}:
+
+        o_t = S_{t-1}^T r_t + (r_t . (u * k_t)) v_t
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+    where w_t in (0, 1) is the data-dependent per-channel decay.
+    """
+    B, H, T, d = r.shape
+    S0 = (jnp.zeros((B, H, d, d), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # each (B, H, d)
+        out = jnp.einsum("bhkv,bhk->bhv", S, rt.astype(jnp.float32))
+        bonus = jnp.einsum("bhk,bhk->bh", rt, u[None] * kt)
+        out = out + bonus[..., None] * vt
+        S = wt[..., :, None] * S + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return S, out
+
+    xs = tuple(x.transpose(2, 0, 1, 3) for x in (r, k, v, w))  # (T, B, H, d)
+    S, outs = jax.lax.scan(step, S0, xs)
+    o = outs.transpose(1, 2, 0, 3).astype(r.dtype)  # (B, H, T, d)
+    if return_state:
+        return o, S
+    return o
+
+
+def wkv6_chunked(r, k, v, w, u, *, initial_state=None, chunk: int = 16,
+                 return_state: bool = False):
+    """Differentiable chunked-parallel WKV6 (training path).
+
+    Same algebra as the Pallas kernel's ``chunked`` variant (kernels/wkv6.py)
+    expressed in batched jnp: a scan over T/chunk steps whose body is three
+    matmuls.  Unlike the naive scan VJP (which materializes the (B, H, d, d)
+    state per *time step* — ~34 GB/device at train_4k), the backward pass
+    here stores per-chunk residuals only: T/chunk x (c, d) tensors.
+    """
+    B, H, T, d = r.shape
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    nt = T // c
+    f32 = jnp.float32
+    S0 = (jnp.zeros((B, H, d, d), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def to_chunks(x):
+        return x.reshape(B, H, nt, c, d).transpose(2, 0, 1, 3, 4)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))    # (nt, B, H, c, d)
+    uu = u.astype(f32)[None]                          # (1, H, d)
+
+    @jax.checkpoint
+    def body(S, xs):
+        rb, kb, vb, wb = (x.astype(f32) for x in xs)  # (B, H, c, d)
+        logw = jnp.log(wb)
+        cum = jnp.cumsum(logw, axis=2)
+        p_incl = jnp.exp(cum)
+        p_excl = jnp.exp(cum - logw)
+        r_t = rb * p_excl
+        k_t = kb * jnp.exp(-cum)
+        A = jnp.einsum("bhtd,bhsd->bhts", r_t, k_t)
+        ti = jnp.arange(c)
+        A = jnp.where(ti[None, None, :, None] > ti[None, None, None, :], A, 0.0)
+        bonus = jnp.einsum("bhtd,bhtd->bht", rb, uu[..., None, :] * kb)
+        A = A + jnp.einsum("bht,ts->bhts", bonus, jnp.eye(c, dtype=f32))
+        O = jnp.einsum("bhtd,bhdv->bhtv", r_t, S)
+        O = O + jnp.einsum("bhts,bhsv->bhtv", A, vb)
+        S = p_incl[:, :, -1][..., :, None] * (
+            S + jnp.einsum("bhsd,bhsv->bhdv", k_t, vb))
+        return S, O
+
+    S, outs = jax.lax.scan(body, S0, (rc, kc, vc, wc))
+    o = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, T, d).astype(r.dtype)
+    if return_state:
+        return o, S
+    return o

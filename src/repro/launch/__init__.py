@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, dry-run, roofline, train, serve.
+
+NOTE: do NOT import ``dryrun`` from here — it sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` at import time and
+must only be loaded as the ``python -m repro.launch.dryrun`` entry point.
+"""
+from repro.launch import mesh, steps  # noqa: F401
+
+__all__ = ["mesh", "steps"]

@@ -1,0 +1,100 @@
+"""Analytic per-cell cost model: MODEL_FLOPS and minimal HBM traffic.
+
+Used as the roofline's "useful work" reference (MODEL_FLOPS = 6·N·D dense /
+6·N_active·D MoE, §Roofline) and as the memory-term floor.  The HLO-derived
+numbers (loop-corrected dot flops, cost_analysis bytes) are reported next to
+these; their ratio exposes remat/redundancy overhead.
+
+Conventions (per the assignment):
+  * train  : 6 * N_active * tokens  + attention term 12 * L * S^2 * d_attn
+             (causal halves the S^2 term; remat adds a fwd repeat -> x(8/6)
+             reported separately as ``hlo/model`` ratio, not baked in here)
+  * prefill: 2 * N_active * tokens  + 2 * L * S^2 * d_attn (causal halved)
+  * decode : 2 * N_active * B       + 4 * B * L * S_cache * kv_width
+Memory floor:
+  * train  : params read (fwd+bwd) + grads + moments r/w + activation stream
+  * prefill: params once + KV cache write + activation stream
+  * decode : params once + KV cache read (the long-context wall)
+Everything is *per device* given the mesh size.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCell
+
+__all__ = ["cell_cost", "CellCost"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CellCost:
+    model_flops_total: float      # whole step, all devices
+    model_flops_per_dev: float
+    hbm_bytes_per_dev: float      # analytic floor
+    attn_flops_total: float
+    notes: str = ""
+
+
+def _dtype_bytes(name: str) -> int:
+    return {"float32": 4, "bfloat16": 2, "float16": 2}[name]
+
+
+def cell_cost(cfg: ArchConfig, cell: ShapeCell, n_devices: int,
+              param_shards: int | None = None) -> CellCost:
+    """``param_shards``: how many ways the params are sharded (serve mode
+    replicates over the batch axes -> 16, not n_devices)."""
+    N_act = cfg.active_param_count()
+    N_tot = cfg.param_count()
+    pshards = param_shards or n_devices
+    L = cfg.n_layers
+    pb = _dtype_bytes(cfg.param_dtype)
+    cb = _dtype_bytes(cfg.compute_dtype)
+    mb = _dtype_bytes(cfg.opt_moment_dtype)
+    d = cfg.d_model
+    B, S = cell.global_batch, cell.seq_len
+    kv_width = 2 * cfg.n_kv_heads * cfg.hd          # K and V per token
+
+    # Attention flops: qk^T and pv, causal => x1/2. Windowed layers bound S.
+    windows = np.minimum(cfg.layer_windows(), S)
+    attn_ctx = float(windows.sum()) / max(L, 1)     # avg effective context
+
+    if cell.kind == "train":
+        tokens = B * S
+        flops = 6.0 * N_act * tokens
+        attn = 12.0 * L * cfg.n_heads * cfg.hd * tokens * attn_ctx * 0.5
+        flops_total = flops + attn
+        # params: read fwd + read bwd (+ remat fwd) ~ 3x; grads write + read;
+        # moments read+write; master params read+write.
+        param_traffic = N_tot * (3 * pb + 2 * 4 + 4 * mb + 2 * pb)
+        act_traffic = tokens * d * L * 12 * cb      # residual stream passes
+        hbm = (param_traffic + act_traffic) / n_devices
+        return CellCost(flops_total, flops_total / n_devices, hbm, attn)
+
+    if cell.kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * N_act * tokens
+        attn = 4.0 * L * cfg.n_heads * cfg.hd * tokens * attn_ctx * 0.5
+        flops_total = flops + attn
+        cache_write = B * S * L * kv_width * cb
+        hbm = (N_tot * pb / pshards
+               + (cache_write + tokens * d * L * 6 * cb) / n_devices)
+        return CellCost(flops_total, flops_total / n_devices, hbm, attn)
+
+    # decode: one token per sequence against an S-long cache
+    tokens = B
+    flops = 2.0 * N_act * tokens
+    if cfg.block == "rwkv":
+        attn = 4.0 * B * L * cfg.n_heads * cfg.hd * cfg.hd  # state update
+        cache_read = B * L * cfg.n_heads * cfg.hd * cfg.hd * 4
+    else:
+        attn = 4.0 * B * L * cfg.n_heads * cfg.hd * attn_ctx
+        # sum over layers of min(window, S) cache entries, K+V each
+        cache_read = B * float(windows.sum()) * kv_width * cb
+    flops_total = flops + attn
+    hbm = N_tot * pb / pshards + cache_read / n_devices
+    return CellCost(flops_total, flops_total / n_devices, hbm, attn,
+                    notes="cache-read dominated"
+                    if cache_read / n_devices > N_tot * pb / pshards
+                    else "param-read dominated")

@@ -1,0 +1,110 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod mesh:
+
+    compute    = FLOPs / (chips * peak)        peak = 197e12 bf16 flop/s/chip
+    memory     = HBM bytes / (chips * bw)      bw   = 819e9  B/s/chip
+    collective = coll bytes / (chips * link)   link = 50e9   B/s/link (ICI)
+
+FLOPs: loop-corrected HLO dot flops (per-device, see hlo_analysis.py) —
+reported next to MODEL_FLOPS = 6·N(_active)·D so the useful-work ratio is
+visible.  HBM bytes: the analytic per-device floor (params + activations +
+cache streams; cost_analysis bytes are loop-undercounted).  Collective
+bytes: loop-corrected per-device sum over all collective ops.
+
+Output: a markdown table + dominant-term identification + a one-line
+"what would move it" note per cell.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e-class, per assignment)
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_MOVE_NOTES = {
+    "compute": "raise per-chip utilization: larger per-device batch, fuse "
+               "small ops, MXU-align head/ff dims",
+    "memory": "cut HBM traffic: bf16/fp8 streams, fuse passes, "
+              "ring-buffer windowed KV, larger block residency",
+    "collective": "cut/overlap comm: reduce-scatter instead of all-reduce, "
+                  "collective-matmul overlap, pod-local FSDP",
+}
+
+
+def load_records(art_dir=ART_DIR, mesh: str = "single"):
+    recs = []
+    for p in sorted(pathlib.Path(art_dir).glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def terms(rec: dict) -> dict | None:
+    if "error" in rec or rec.get("skipped"):
+        return None
+    flops_dev = rec.get("dot_flops", 0.0)          # already per device
+    hbm_dev = rec.get("analytic_hbm_bytes_per_dev",
+                      rec.get("bytes_accessed_raw", 0.0))
+    coll_dev = sum(v["bytes"] for v in rec.get("collectives", {}).values())
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = hbm_dev / HBM_BW
+    t_x = coll_dev / LINK_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    total = max(t_c, t_m, t_x)
+    model_dev = rec.get("model_flops_per_dev", 0.0)
+    # fraction of the physics-mandated time (useful compute OR the memory
+    # floor, whichever binds) that the compiled program achieves
+    useful = max(model_dev / PEAK_FLOPS, t_m)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "roofline_frac": min(useful / total, 1.0) if total else 0.0,
+        "model_ratio": model_dev / flops_dev if flops_dev else 0.0,
+        "move": _MOVE_NOTES[dom],
+    }
+
+
+def fmt_row(rec: dict) -> str:
+    cellname = f"{rec['arch']} × {rec['shape']}"
+    if rec.get("skipped"):
+        return f"| {cellname} | — | — | — | skipped: {rec['skipped']} | — | — |"
+    if "error" in rec:
+        return f"| {cellname} | — | — | — | ERROR: {rec['error'][:60]} | — | — |"
+    t = terms(rec)
+    return ("| {c} | {t[compute_s]:.2e} | {t[memory_s]:.2e} | "
+            "{t[collective_s]:.2e} | **{t[dominant]}** | {t[model_ratio]:.2f} "
+            "| {t[roofline_frac]:.1%} |").format(c=cellname, t=t)
+
+
+def table(recs) -> str:
+    hdr = ("| cell | compute (s) | memory (s) | collective (s) | dominant | "
+           "MODEL/HLO flops | roofline frac |\n"
+           "|---|---|---|---|---|---|---|")
+    return "\n".join([hdr] + [fmt_row(r) for r in recs])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art-dir", default=str(ART_DIR))
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load_records(args.art_dir, args.mesh)
+    print(table(recs))
+    print()
+    for r in recs:
+        t = terms(r)
+        if t:
+            print(f"- {r['arch']} × {r['shape']}: dominant={t['dominant']}; "
+                  f"move it down: {t['move']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""The three step functions every (arch x shape) cell lowers.
+
+  * ``train_step``    — fwd + bwd + AdamW update (+ optional cross-pod
+                        gradient compression); donates the train state.
+  * ``serve_prefill`` — full-prompt forward producing the KV cache.
+  * ``serve_step``    — one-token decode against a seq_len cache.
+
+These are *pure functions of (cfg, flags)* returning closures, so the
+dry-run, the trainer, and the tests all lower exactly the same code.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression as C
+from repro.models import model as M
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+__all__ = ["TrainState", "make_train_state", "make_train_step",
+           "make_serve_prefill", "make_serve_step"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    mu: Any
+    nu: Any
+    step: jnp.ndarray
+
+
+def make_train_state(key, cfg) -> TrainState:
+    params = M.init_params(key, cfg)
+    opt = adamw_init(params,
+                     moment_dtype=jnp.dtype(getattr(cfg, "opt_moment_dtype",
+                                                    "float32")))
+    return TrainState(params=params, mu=opt.mu, nu=opt.nu, step=opt.step)
+
+
+def make_train_step(cfg, *, peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, grad_compression: str = "none",
+                    grad_accum: int = 1):
+    """Returns train_step(state, batch, extra) -> (state, metrics)."""
+
+    def loss(params, batch, extra):
+        return M.loss_fn(params, cfg, batch, extra)
+
+    def train_step(state: TrainState, batch, extra=None):
+        tokens = batch["tokens"]
+        if grad_accum > 1:
+            B = tokens.shape[0]
+            mb = B // grad_accum
+            def acc_body(carry, i):
+                gsum, lsum = carry
+                sl = jax.lax.dynamic_slice_in_dim(tokens, i * mb, mb, axis=0)
+                ex = (None if extra is None else jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(a, i * mb, mb, 0),
+                    extra))
+                l, g = jax.value_and_grad(loss)(state.params, {"tokens": sl}, ex)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+            gz = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (grads, lsum), _ = jax.lax.scan(acc_body, (gz, 0.0),
+                                            jnp.arange(grad_accum))
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            l = lsum / grad_accum
+        else:
+            l, grads = jax.value_and_grad(loss)(state.params, batch, extra)
+
+        if grad_compression != "none":
+            # Cross-pod DP all-reduce with a narrow wire format.  With pure
+            # GSPMD the pod reduction is implicit in the sharded loss mean;
+            # compression requires the explicit form, so it is applied in
+            # shard_map over 'pod' by the caller (see launch/train.py).
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.bfloat16).astype(g.dtype)
+                if grad_compression == "bf16" else g, grads)
+
+        # Pin gradient sharding to the parameter sharding before the
+        # optimizer update.  (§Perf note: hypothesised to convert the
+        # batch-axis grad reduction into reduce-scatter; measurement showed
+        # XLA already emits the reduction on TP-sharded shapes inside the
+        # layer loop, so this is belt-and-braces for partitioner drift, not
+        # a byte win — see EXPERIMENTS.md §Perf iteration log.)
+        from repro.distributed.sharding import constrain, current_mesh
+        from repro.models.model import param_specs as _pspecs
+
+        mesh = current_mesh()
+        if mesh is not None:
+            specs = _pspecs(cfg, grads, mesh)
+            grads = jax.tree.map(lambda g, s: constrain(g, s), grads, specs)
+
+        lr = cosine_schedule(state.step, peak=peak_lr, warmup_steps=warmup,
+                             total_steps=total_steps)
+        new_params, opt, om = adamw_update(state.params, grads,
+                                           _opt_state(state), lr=lr)
+        new_state = TrainState(params=new_params, mu=opt.mu, nu=opt.nu,
+                               step=opt.step)
+        metrics = {"loss": l, "lr": lr, "grad_norm": om["grad_norm"],
+                   "step": opt.step}
+        return new_state, metrics
+
+    return train_step
+
+
+def _opt_state(state: TrainState):
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(step=state.step, mu=state.mu, nu=state.nu)
+
+
+def make_serve_prefill(cfg, *, max_len: int, context_parallel: bool = False):
+    def serve_prefill(params, tokens, extra=None):
+        return M.prefill(params, cfg, tokens, extra, max_len=max_len,
+                         context_parallel=context_parallel)
+
+    return serve_prefill
+
+
+def make_serve_step(cfg, *, context_parallel: bool = False):
+    def serve_step(params, tokens, cache, index):
+        return M.decode_step(params, cfg, tokens, cache, index,
+                             context_parallel=context_parallel)
+
+    return serve_step

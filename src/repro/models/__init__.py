@@ -1,0 +1,4 @@
+"""LM substrate: unified model over all assigned architectures."""
+from repro.models import attention, layers, model, moe, rwkv6, ssm  # noqa: F401
+
+__all__ = ["attention", "layers", "model", "moe", "rwkv6", "ssm"]

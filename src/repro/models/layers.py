@@ -1,0 +1,122 @@
+"""Shared NN building blocks: norms, activations, MLPs, embeddings, RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import RULES, constrain
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["rms_norm", "layer_norm", "mlp", "init_mlp", "rope", "softcap",
+           "init_linear", "linear", "init_norm", "activation"]
+
+
+def init_norm(d: int, *, bias: bool = False, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def rms_norm(x: jnp.ndarray, p: dict, *, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm; ``plus_one`` uses the gemma-style (1 + scale) param."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    scale = 1.0 + scale if plus_one else scale
+    return (x * scale).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, p: dict, *, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    """gemma2-style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu2":            # nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Linear / MLP
+# ---------------------------------------------------------------------------
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: float | None = None) -> dict:
+    scale = (d_in ** -0.5) if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(x: jnp.ndarray, p: dict, compute_dtype=None) -> jnp.ndarray:
+    w = p["w"]
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        w = w.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def init_mlp(key, d: int, d_ff: int, *, gated: bool, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": init_linear(ks[0], d, d_ff, dtype=dtype),
+        "w_out": init_linear(ks[1], d_ff, d, dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = init_linear(ks[2], d, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(x: jnp.ndarray, p: dict, *, act: str, compute_dtype=None) -> jnp.ndarray:
+    """(Gated) MLP with TP sharding constraints on the hidden activation."""
+    h = linear(x, p["w_in"], compute_dtype)
+    h_spec = P(RULES.dp, None, RULES.div(h.shape[-1], RULES.tp))
+    if "w_gate" in p:
+        g = activation(linear(x, p["w_gate"], compute_dtype), act)
+        h = constrain(h * g, h_spec)
+    else:
+        h = constrain(activation(h, act), h_spec)
+    return linear(h, p["w_out"], compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, *, theta: float) -> jnp.ndarray:
+    """Apply RoPE.  x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

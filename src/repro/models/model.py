@@ -1,0 +1,590 @@
+"""Unified LM: every assigned architecture as one scan-over-layers model.
+
+Block kinds (static per arch): ``dense`` (attn+MLP), ``moe`` (attn+MoE
+[+ parallel dense FFN for arctic]), ``rwkv`` (RWKV6 time/channel mix),
+``hymba`` (attention ∥ Mamba heads + MLP).  Whisper wraps a non-causal
+encoder stack plus a decoder stack with cross-attention.  LLaVA prepends
+stub patch embeddings to the token embeddings.
+
+Entry points:
+  * ``init_params(key, cfg)``               — stacked per-layer params
+  * ``forward(params, cfg, tokens, extra)`` — full-sequence logits (train)
+  * ``init_cache(cfg, batch, max_len)``     — decode cache pytree
+  * ``prefill(params, cfg, tokens, ...)``   — fill cache, last-pos logits
+  * ``decode_step(params, cfg, tok, cache, index)`` — one-token decode
+  * ``loss_fn(params, cfg, batch)``         — next-token cross entropy
+
+Layer scan: parameters are stacked on a leading L axis and the per-layer
+body is ``jax.checkpoint``-ed (remat) — constant compile size in depth and
+the standard activation-memory/compute trade at scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import RULES, constrain
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rwkv6 as R
+from repro.models import ssm as S
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
+           "decode_step", "param_specs"]
+
+
+def _norm(x, p, cfg):
+    if cfg.norm == "layernorm":
+        return L.layer_norm(x, p, eps=cfg.norm_eps)
+    return L.rms_norm(x, p, eps=cfg.norm_eps, plus_one=cfg.scale_embed)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg, *, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    bias = cfg.norm == "layernorm"
+    p: dict[str, Any] = {"norm1": L.init_norm(cfg.d_model, bias=bias, dtype=dt),
+                         "norm2": L.init_norm(cfg.d_model, bias=bias, dtype=dt)}
+    if cfg.block == "rwkv":
+        p["rwkv"] = R.init_rwkv6(ks[0], cfg)
+        return p
+    p["attn"] = A.init_attention(ks[0], cfg)
+    if cfg.sandwich_norm:
+        p["norm1b"] = L.init_norm(cfg.d_model, bias=bias, dtype=dt)
+        p["norm2b"] = L.init_norm(cfg.d_model, bias=bias, dtype=dt)
+    if cross:
+        p["norm_x"] = L.init_norm(cfg.d_model, bias=bias, dtype=dt)
+        p["xattn"] = A.init_attention(ks[1], cfg)
+    if cfg.block == "moe":
+        p["moe"] = M.init_moe(ks[2], cfg)
+        if cfg.dense_residual:
+            p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                                  gated=cfg.gated, dtype=dt)
+    else:
+        p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, gated=cfg.gated,
+                              dtype=dt)
+    if cfg.block == "hymba":
+        p["mamba"] = S.init_mamba(ks[4], cfg)
+        p["norm_attn_out"] = L.init_norm(cfg.d_model, dtype=dt)
+        p["norm_ssm_out"] = L.init_norm(cfg.d_model, dtype=dt)
+    return p
+
+
+def init_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    d, V = cfg.d_model, cfg.vocab
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (V, d), dt) * 0.02,
+        "final_norm": L.init_norm(d, bias=cfg.norm == "layernorm", dtype=dt),
+    }
+    layer_keys = jax.random.split(ks[1], cfg.n_layers)
+    cross = cfg.enc_layers > 0
+    params["layers"] = jax.vmap(
+        lambda k: _init_layer(k, cfg, cross=cross))(layer_keys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(ks[2], (V, d), dt) * 0.02
+    if cfg.pos_emb == "learned":
+        params["pos_embed"] = jax.random.normal(ks[3], (32768, d), dt) * 0.02
+    if cfg.enc_layers:
+        enc_keys = jax.random.split(ks[4], cfg.enc_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, cross=False))(enc_keys)
+        params["enc_pos"] = jax.random.normal(
+            ks[5], (max(cfg.audio_ctx, 1), d), dt) * 0.02
+        params["enc_final_norm"] = L.init_norm(
+            d, bias=cfg.norm == "layernorm", dtype=dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+def _mix_block(x, lp, cfg, *, positions, window, causal):
+    """One full-sequence layer. Returns the new residual stream."""
+    if cfg.block == "rwkv":
+        return R.rwkv6_block(x, lp["rwkv"], cfg, lp["norm1"], lp["norm2"])
+
+    h = _norm(x, lp["norm1"], cfg)
+    attn_out, _ = A.attention(h, lp["attn"], cfg, positions=positions,
+                              window=window, causal=causal,
+                              impl=cfg.attn_impl)
+    # pin the (possibly sequence-sharded) attention output to a single
+    # bf16 materialization before the norm — otherwise XLA all-gathers the
+    # f32 norm intermediates, twice the bytes (EXPERIMENTS.md §Perf)
+    attn_out = constrain(attn_out, RULES.act_btd())
+    if cfg.block == "hymba":
+        ssm_out = S.mamba(h, lp["mamba"], cfg)
+        attn_out = 0.5 * (L.rms_norm(attn_out, lp["norm_attn_out"],
+                                     eps=cfg.norm_eps)
+                          + L.rms_norm(ssm_out, lp["norm_ssm_out"],
+                                       eps=cfg.norm_eps))
+    if cfg.sandwich_norm:
+        attn_out = _norm(attn_out, lp["norm1b"], cfg)
+    x = x + attn_out
+
+    h = _norm(x, lp["norm2"], cfg)
+    if cfg.block == "moe":
+        ff = M.moe_ffn(h, lp["moe"], cfg)
+        if cfg.dense_residual:
+            ff = ff + L.mlp(h, lp["mlp"], act=cfg.act,
+                            compute_dtype=jnp.dtype(cfg.compute_dtype))
+    else:
+        ff = L.mlp(h, lp["mlp"], act=cfg.act,
+                   compute_dtype=jnp.dtype(cfg.compute_dtype))
+    if cfg.sandwich_norm:
+        ff = _norm(ff, lp["norm2b"], cfg)
+    return x + ff
+
+
+def _group(tree, p: int):
+    """(L, ...) stacked tree -> (L/p, p, ...): window-pattern groups."""
+    return jax.tree.map(
+        lambda a: a.reshape((a.shape[0] // p, p) + a.shape[1:]), tree)
+
+
+def _ungroup(tree):
+    return jax.tree.map(
+        lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]), tree)
+
+
+def _sub(tree, j: int):
+    return jax.tree.map(lambda a: a[j], tree)
+
+
+def _stack_subs(trees: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _run_stack(params_stack, x, cfg, *, positions, causal):
+    """lax.scan over window-pattern groups of stacked layers (remat-ed).
+
+    Grouping keeps every attention window *static* so the banded
+    block-skipping schedule applies (see ArchConfig.window_pattern)."""
+    pattern = cfg.window_pattern()
+    p = len(pattern)
+
+    def body(x, lp_group):
+        for j, w in enumerate(pattern):
+            x = _mix_block(x, _sub(lp_group, j), cfg, positions=positions,
+                           window=w, causal=causal)
+        x = constrain(x, RULES.act_btd())
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, _group(params_stack, p))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def _embed(params, cfg, tokens, extra):
+    emb = params["embed"]
+    x = jnp.take(emb, tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if cfg.img_tokens and extra is not None and "img_embeds" in extra:
+        img = extra["img_embeds"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    if cfg.pos_emb == "learned":
+        S_ = x.shape[1]
+        x = x + params["pos_embed"][:S_].astype(x.dtype)
+    return constrain(x, RULES.act_btd())
+
+
+def _logits(params, cfg, x):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,vd->btv", x,
+                        head.astype(x.dtype))
+    logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return constrain(logits, P(RULES.dp, None,
+                               RULES.div(cfg.vocab, RULES.tp)))
+
+
+def _encode(params, cfg, extra):
+    """Whisper encoder on stub frame embeddings (B, audio_ctx, d)."""
+    x = extra["audio_embeds"].astype(jnp.dtype(cfg.compute_dtype))
+    x = x + params["enc_pos"][:x.shape[1]].astype(x.dtype)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x = _run_stack(params["enc_layers"], x, cfg, positions=pos, causal=False)
+    return _norm(x, params["enc_final_norm"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# Public: training / full-sequence forward
+# ---------------------------------------------------------------------------
+def forward(params, cfg, tokens, extra=None):
+    """Full-sequence logits.  tokens: (B, S_text); returns (B, S_total, V)."""
+    x = _embed(params, cfg, tokens, extra)
+    B, S_, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S_), (B, S_))
+    if cfg.enc_layers:
+        e = _encode(params, cfg, extra)
+        ek, ev = _cross_kv_all_layers(params, cfg, e)
+        return _forward_with_cross(params, cfg, x, positions, ek, ev)
+    x = _run_stack(params["layers"], x, cfg, positions=positions,
+                   causal=True)
+    x = _norm(x, params["final_norm"], cfg)
+    return _logits(params, cfg, x)
+
+
+def _cross_kv_all_layers(params, cfg, enc_out):
+    """Precompute per-layer cross-attention K/V from the encoder output."""
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    B, Se, _ = enc_out.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def one(lp):
+        k = L.linear(enc_out, lp["xattn"]["wk"], cdt).reshape(B, Se, Hkv, hd)
+        v = L.linear(enc_out, lp["xattn"]["wv"], cdt).reshape(B, Se, Hkv, hd)
+        return k.swapaxes(1, 2), v.swapaxes(1, 2)
+
+    return jax.lax.map(one, params["layers"])       # (L, B, Hkv, Se, hd) x2
+
+
+def _forward_with_cross(params, cfg, x, positions, ek, ev):
+    # enc-dec stacks (whisper) are un-windowed: pattern is (None,)
+    def body(x, xs):
+        lp, k_l, v_l = xs
+        h = _norm(x, lp["norm1"], cfg)
+        ao, _ = A.attention(h, lp["attn"], cfg, positions=positions,
+                            window=None, causal=True, impl=cfg.attn_impl)
+        x = x + constrain(ao, RULES.act_btd())
+        h = _norm(x, lp["norm_x"], cfg)
+        xo, _ = A.attention(h, lp["xattn"], cfg, positions=positions,
+                            causal=False, impl=cfg.attn_impl,
+                            kv_override=(k_l, v_l))
+        x = x + constrain(xo, RULES.act_btd())
+        h = _norm(x, lp["norm2"], cfg)
+        x = x + L.mlp(h, lp["mlp"], act=cfg.act,
+                      compute_dtype=jnp.dtype(cfg.compute_dtype))
+        return constrain(x, RULES.act_btd()), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, (params["layers"], ek, ev))
+    x = _norm(x, params["final_norm"], cfg)
+    return _logits(params, cfg, x)
+
+
+def loss_fn(params, cfg, batch, extra=None):
+    """Next-token cross entropy (+ z-loss) over (B, S) int32 ``tokens``.
+
+    Vocab-parallel formulation: the picked-logit term is a masked local sum
+    over the TP-sharded vocab dim (+ scalar all-reduce) rather than a
+    ``take_along_axis`` gather, which GSPMD would implement by all-gathering
+    the full (B, S, V) logits to every device (~17 GB/device at train_4k).
+    """
+    tokens = batch["tokens"]
+    logits = forward(params, cfg, tokens[:, :-1], extra)
+    # With prepended modality embeddings the text logits sit at the tail.
+    logits = logits[:, -(tokens.shape[1] - 1):]
+    targets = tokens[:, 1:]
+    vpos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    vpos = constrain(vpos, P(RULES.dp, None, RULES.div(cfg.vocab, RULES.tp)))
+    picked = jnp.sum(jnp.where(vpos == targets[..., None], logits, 0.0),
+                     axis=-1)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    nll = logz - picked
+    loss = nll.mean() + 1e-4 * (logz ** 2).mean()
+    return loss.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Public: serving (prefill + decode)
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, *, context_parallel=False):
+    """Stacked-over-layers cache pytree (zeros)."""
+    def one_layer(_):
+        c = {}
+        if cfg.block == "rwkv":
+            return R.init_rwkv6_cache(cfg, batch)
+        c.update(A.init_kv_cache(cfg, batch, max_len,
+                                 context_parallel=context_parallel))
+        if cfg.block == "hymba":
+            c.update(S.init_mamba_cache(cfg, batch))
+        if cfg.enc_layers:
+            Hkv, hd = cfg.n_kv_heads, cfg.hd
+            cdt = jnp.dtype(cfg.compute_dtype)
+            c["xk"] = jnp.zeros((batch, Hkv, max(cfg.audio_ctx, 1), hd), cdt)
+            c["xv"] = jnp.zeros((batch, Hkv, max(cfg.audio_ctx, 1), hd), cdt)
+        return c
+
+    sample = one_layer(0)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(),
+        sample)
+
+
+def _decode_layer(x, lp, cfg, cache_l, index, window, context_parallel):
+    new_cache = dict(cache_l)
+    if cfg.block == "rwkv":
+        x, nc = R.rwkv6_decode(x, lp["rwkv"], cfg, cache_l, lp["norm1"],
+                               lp["norm2"])
+        return x, nc
+
+    h = _norm(x, lp["norm1"], cfg)
+    ao, kv = A.decode_attention(h, lp["attn"], cfg,
+                                {"k": cache_l["k"], "v": cache_l["v"]},
+                                index, window=window,
+                                context_parallel=context_parallel)
+    new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
+    if cfg.block == "hymba":
+        so, sc = S.mamba_decode(h, lp["mamba"], cfg,
+                                {"conv": cache_l["conv"], "h": cache_l["h"]})
+        ao = 0.5 * (L.rms_norm(ao, lp["norm_attn_out"], eps=cfg.norm_eps)
+                    + L.rms_norm(so, lp["norm_ssm_out"], eps=cfg.norm_eps))
+        new_cache["conv"], new_cache["h"] = sc["conv"], sc["h"]
+    if cfg.sandwich_norm:
+        ao = _norm(ao, lp["norm1b"], cfg)
+    x = x + ao
+
+    if cfg.enc_layers:
+        h = _norm(x, lp["norm_x"], cfg)
+        B = x.shape[0]
+        H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q = L.linear(h, lp["xattn"]["wq"],
+                     jnp.dtype(cfg.compute_dtype)).reshape(B, 1, H, hd)
+        qg = q.reshape(B, 1, Hkv, H // Hkv, hd).astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bhkd->bhgqk", qg,
+                       cache_l["xk"].astype(jnp.float32)) * (hd ** -0.5)
+        pe = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", pe,
+                       cache_l["xv"].astype(jnp.float32))
+        o = o.reshape(B, H, 1, hd).swapaxes(1, 2).reshape(B, 1, H * hd)
+        x = x + L.linear(o.astype(x.dtype), lp["xattn"]["wo"],
+                         jnp.dtype(cfg.compute_dtype))
+
+    h = _norm(x, lp["norm2"], cfg)
+    if cfg.block == "moe":
+        ff = M.moe_ffn(h, lp["moe"], cfg)
+        if cfg.dense_residual:
+            ff = ff + L.mlp(h, lp["mlp"], act=cfg.act,
+                            compute_dtype=jnp.dtype(cfg.compute_dtype))
+    else:
+        ff = L.mlp(h, lp["mlp"], act=cfg.act,
+                   compute_dtype=jnp.dtype(cfg.compute_dtype))
+    if cfg.sandwich_norm:
+        ff = _norm(ff, lp["norm2b"], cfg)
+    return x + ff, new_cache
+
+
+def decode_step(params, cfg, tokens, cache, index, *,
+                context_parallel: bool = False):
+    """One decode step.  tokens: (B, 1) int32; ``index``: current position.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if cfg.pos_emb == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], index, 1, axis=0).astype(x.dtype)[None]
+
+    pattern = cfg.window_pattern()
+    p = len(pattern)
+
+    def body(x, xs):
+        lp_g, cache_g = xs
+        ncs = []
+        for j, w in enumerate(pattern):
+            x, nc = _decode_layer(x, _sub(lp_g, j), cfg, _sub(cache_g, j),
+                                  index, w, context_parallel)
+            ncs.append(nc)
+        return x, _stack_subs(ncs)
+
+    x, new_cache = jax.lax.scan(
+        body, x, (_group(params["layers"], p), _group(cache, p)))
+    x = _norm(x, params["final_norm"], cfg)
+    return _logits(params, cfg, x), _ungroup(new_cache)
+
+
+def prefill(params, cfg, tokens, extra=None, *, max_len: int,
+            context_parallel: bool = False):
+    """Run the full prompt, build the cache, return last-position logits.
+
+    Implemented as full-sequence forward capturing per-layer K/V (attention
+    archs).  For rwkv/hymba the recurrent states are produced by scanning.
+    """
+    B = tokens.shape[0]
+    cache = init_cache(cfg, B, max_len, context_parallel=context_parallel)
+    x = _embed(params, cfg, tokens, extra)
+    S_ = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S_), (B, S_))
+    pattern = cfg.window_pattern()
+    p = len(pattern)
+
+    if cfg.block == "rwkv":
+        def body(x, xs):
+            lp = xs
+            h = L.rms_norm(x, lp["norm1"], eps=cfg.norm_eps)
+            hp = R._shift(h)
+            out, s_new = R._time_mix(h, hp, lp["rwkv"], cfg, s0=None,
+                                     return_state=True)
+            x = x + out
+            h2 = L.rms_norm(x, lp["norm2"], eps=cfg.norm_eps)
+            x = x + R._channel_mix(h2, R._shift(h2), lp["rwkv"])
+            nc = {"tm_x": h[:, -1:], "cm_x": h2[:, -1:], "state": s_new}
+            return x, nc
+
+        x, cache = jax.lax.scan(body, x, params["layers"])
+        x = _norm(x, params["final_norm"], cfg)
+        return _logits(params, cfg, x[:, -1:]), cache
+
+    if cfg.enc_layers:
+        e = _encode(params, cfg, extra)
+        ek, ev = _cross_kv_all_layers(params, cfg, e)
+
+    def layer(x, lp, cache_l, window, cross):
+        k_l, v_l = cross if cross is not None else (None, None)
+        h = _norm(x, lp["norm1"], cfg)
+        ao, (k, v) = A.attention(h, lp["attn"], cfg, positions=positions,
+                                 window=window, causal=True,
+                                 impl=cfg.attn_impl)
+        ao = constrain(ao, RULES.act_btd())
+        nc = dict(cache_l)
+        spec = (RULES.kv_cache_cp(cfg.n_kv_heads) if context_parallel
+                else RULES.kv_cache(cfg.n_kv_heads))
+        nc["k"] = constrain(jax.lax.dynamic_update_slice_in_dim(
+            cache_l["k"], k.astype(cache_l["k"].dtype), 0, axis=2), spec)
+        nc["v"] = constrain(jax.lax.dynamic_update_slice_in_dim(
+            cache_l["v"], v.astype(cache_l["v"].dtype), 0, axis=2), spec)
+        if cfg.block == "hymba":
+            so, tail, hT = S._mamba_core(h, lp["mamba"], cfg)
+            so = so.astype(h.dtype)
+            ao = 0.5 * (L.rms_norm(ao, lp["norm_attn_out"], eps=cfg.norm_eps)
+                        + L.rms_norm(so, lp["norm_ssm_out"], eps=cfg.norm_eps))
+            nc["conv"], nc["h"] = tail.astype(nc["conv"].dtype), hT
+        if cfg.sandwich_norm:
+            ao = _norm(ao, lp["norm1b"], cfg)
+        x = x + ao
+        if cfg.enc_layers:
+            h = _norm(x, lp["norm_x"], cfg)
+            xo, _ = A.attention(h, lp["xattn"], cfg, positions=positions,
+                                causal=False, impl=cfg.attn_impl,
+                                kv_override=(k_l, v_l))
+            x = x + constrain(xo, RULES.act_btd())
+            nc["xk"], nc["xv"] = (k_l.astype(nc["xk"].dtype),
+                                  v_l.astype(nc["xv"].dtype))
+        h = _norm(x, lp["norm2"], cfg)
+        if cfg.block == "moe":
+            ff = M.moe_ffn(h, lp["moe"], cfg)
+            if cfg.dense_residual:
+                ff = ff + L.mlp(h, lp["mlp"], act=cfg.act,
+                                compute_dtype=jnp.dtype(cfg.compute_dtype))
+        else:
+            ff = L.mlp(h, lp["mlp"], act=cfg.act,
+                       compute_dtype=jnp.dtype(cfg.compute_dtype))
+        if cfg.sandwich_norm:
+            ff = _norm(ff, lp["norm2b"], cfg)
+        x = constrain(x + ff, RULES.act_btd())
+        return x, nc
+
+    def body(x, xs):
+        if cfg.enc_layers:
+            lp_g, cache_g, ek_g, ev_g = xs
+        else:
+            lp_g, cache_g = xs
+        ncs = []
+        for j, w in enumerate(pattern):
+            cross = ((_sub(ek_g, j), _sub(ev_g, j)) if cfg.enc_layers
+                     else None)
+            x, nc = layer(x, _sub(lp_g, j), _sub(cache_g, j), w, cross)
+            ncs.append(nc)
+        return x, _stack_subs(ncs)
+
+    if cfg.enc_layers:
+        xs = (_group(params["layers"], p), _group(cache, p),
+              _group(ek, p), _group(ev, p))
+    else:
+        xs = (_group(params["layers"], p), _group(cache, p))
+    x, cache = jax.lax.scan(body, x, xs)
+    x = _norm(x, params["final_norm"], cfg)
+    return _logits(params, cfg, x[:, -1:]), _ungroup(cache)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding specs (jit in_shardings for the dry-run / launchers)
+# ---------------------------------------------------------------------------
+def param_specs(cfg, params_tree, mesh, *, serve: bool = False) -> Any:
+    """PartitionSpec tree for ``params_tree`` on ``mesh``.
+
+    Train mode: FSDP over 'data' (+ 'pod' when ``RULES.fsdp_pod``), TP over
+    'model'; dims shard only when divisible.  Stacked layer params get a
+    leading ``None`` for the layer axis.
+
+    ``serve=True`` drops FSDP (params replicated over the batch axes, TP
+    only): inference reads every weight once per step, so FSDP's per-layer
+    all-gathers are pure collective overhead there (EXPERIMENTS.md §Perf,
+    qwen2.5 decode_32k).  Callers gate this on the per-device footprint —
+    the >100B archs keep FSDP even when serving.
+    """
+    def div(dim, axes):
+        if axes is None:
+            return None
+        ax = (axes,) if isinstance(axes, str) else tuple(axes)
+        sz = 1
+        for a in ax:
+            sz *= mesh.shape[a] if a in mesh.axis_names else 1
+        return (axes if dim % sz == 0 else None) if sz > 1 else None
+
+    fsdp = None if serve else RULES.fsdp_axes
+    tp = RULES.tp
+
+    def spec_for(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        shape = leaf.shape
+        stacked = "layers" in keys or "enc_layers" in keys
+        core = shape[1:] if stacked else shape
+        name = keys[-1]
+        parent = keys[-2] if len(keys) > 1 else ""
+
+        def out(*entries):
+            entries = tuple(entries[:len(core)])
+            entries = entries + (None,) * (len(core) - len(entries))
+            return P(*(((None,) if stacked else ()) + entries))
+
+        if name in ("embed", "lm_head"):
+            return P(div(shape[0], tp), div(shape[1], fsdp))
+        if name in ("pos_embed", "enc_pos"):
+            return P(None, div(shape[1], fsdp))
+        if len(core) == 0:
+            return P(*((None,) if stacked else ()))
+        # MoE expert tensors: (E, d_in, d_out)
+        if parent == "moe" and len(core) == 3:
+            if name == "w_out":
+                return out(div(core[0], tp), None, div(core[2], fsdp))
+            return out(div(core[0], tp), div(core[1], fsdp), None)
+        if parent == "moe" and name == "router":
+            return out(div(core[0], fsdp), None)
+        # Linear weights by role
+        if name == "w" or (len(core) == 2 and name in (
+                "in_proj", "x_proj", "dt_proj", "out_proj", "mix_A", "w_A",
+                "w_B", "mix_B", "A_log", "conv_w", "router")):
+            d_in, d_out = core[-2], core[-1]
+            out_side = parent in ("wo", "w_out", "cm_wv") or name == "out_proj"
+            if out_side:
+                return out(div(d_in, tp), div(d_out, fsdp))
+            return out(div(d_in, fsdp), div(d_out, tp))
+        if len(core) == 1:
+            return out(None)
+        return out(*([None] * len(core)))
+
+    import jax.tree_util as jtu
+
+    return jtu.tree_map_with_path(spec_for, params_tree)

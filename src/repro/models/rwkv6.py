@@ -1,0 +1,162 @@
+"""RWKV6 "Finch" block: data-dependent-decay linear attention (attn-free).
+
+Faithful structure (arXiv:2404.05892): token-shift ddlerp with low-rank
+adapters, data-dependent per-channel decay ``w = exp(-exp(w~))``, bonus
+``u``, per-head WKV state recurrence, grouped RMS norm, gated output, and
+the squared-ReLU channel-mix.  The WKV recurrence runs through:
+
+  * ``kernels/wkv6.py`` (Pallas; inference/prefill on TPU) — the paper's
+    state-streaming optimization (DESIGN.md §4), or
+  * ``kernels/ref.wkv6_ref`` (lax.scan; differentiable training path).
+
+Decode carries a tiny recurrent cache: the last token embedding for the two
+token-shifts plus the (B, H, hd, hd) WKV state — O(1) in sequence length,
+which is what makes the ``long_500k`` cell trivial for this arch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+__all__ = ["init_rwkv6", "rwkv6_block", "rwkv6_decode", "init_rwkv6_cache"]
+
+_LORA_MIX = 32
+_LORA_DECAY = 64
+_WMIN, _WMAX = -8.0, 1.0   # clamp on w~ (kernel stability; exp(-exp(1))~0.066)
+
+
+def init_rwkv6(key, cfg) -> dict:
+    d, H, hd, dff = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    return {
+        # time-mix
+        "mu_x": jnp.zeros((d,), dt),
+        "mu": jnp.zeros((5, d), dt),                       # r, k, v, w, g
+        "mix_A": jax.random.normal(ks[0], (d, 5 * _LORA_MIX), dt) * s,
+        "mix_B": jax.random.normal(ks[1], (5, _LORA_MIX, d), dt) * 0.01,
+        "w0": jnp.full((d,), -2.0, dt),
+        "w_A": jax.random.normal(ks[2], (d, _LORA_DECAY), dt) * s,
+        "w_B": jax.random.normal(ks[3], (_LORA_DECAY, d), dt) * 0.01,
+        "u": jax.random.normal(ks[4], (H, hd), dt) * 0.1,
+        "wr": L.init_linear(ks[5], d, d, dtype=dt),
+        "wk": L.init_linear(ks[6], d, d, dtype=dt),
+        "wv": L.init_linear(ks[7], d, d, dtype=dt),
+        "wg": L.init_linear(ks[8], d, d, dtype=dt),
+        "wo": L.init_linear(ks[9], d, d, dtype=dt),
+        "ln_x": L.init_norm(hd, dtype=dt),                 # per-head group norm
+        # channel-mix
+        "cm_mu_k": jnp.zeros((d,), dt),
+        "cm_mu_r": jnp.zeros((d,), dt),
+        "cm_wk": L.init_linear(ks[10], d, dff, dtype=dt),
+        "cm_wv": L.init_linear(ks[11], dff, d, dtype=dt),
+        "cm_wr": L.init_linear(jax.random.fold_in(key, 99), d, d, dtype=dt),
+    }
+
+
+def _ddlerp(x, x_prev, p):
+    """Data-dependent lerp producing the 5 mixed streams (r, k, v, w, g).
+
+    Dtype-disciplined: everything stays in the residual dtype (bf16 at
+    scale) — the (B, T, 5, d) intermediates dominate RWKV activation memory
+    (2.5 GiB each per device at train_4k in f32; see EXPERIMENTS.md §Perf).
+    """
+    dt = x.dtype
+    diff = x_prev - x                                       # (B, T, d)
+    xx = x + diff * p["mu_x"].astype(dt)
+    mws = jnp.tanh(xx @ p["mix_A"].astype(dt))              # (B, T, 5*rank)
+    out = []
+    for i in range(5):                                      # r, k, v, w, g
+        sel = mws[..., i * _LORA_MIX:(i + 1) * _LORA_MIX]
+        adj = sel @ p["mix_B"][i].astype(dt)                # (B, T, d)
+        out.append(x + diff * (p["mu"][i].astype(dt) + adj))
+    return tuple(out)
+
+
+def _wkv_apply(r, k, v, w, u, s0, cfg, *, return_state):
+    """(B, H, T, hd) WKV — Pallas kernel for inference, chunked-parallel jnp
+    for training (differentiable, O(T/chunk) backward residuals), sequential
+    scan only for T == 1 (decode)."""
+    if getattr(cfg, "use_kernels", False):
+        from repro.kernels import ops
+
+        return ops.wkv6(r, k, v, w, u, initial_state=s0,
+                        return_state=return_state)
+    from repro.kernels.ref import wkv6_chunked, wkv6_ref
+
+    if r.shape[2] == 1:
+        return wkv6_ref(r, k, v, w, u, initial_state=s0,
+                        return_state=return_state)
+    return wkv6_chunked(r, k, v, w, u, initial_state=s0,
+                        return_state=return_state)
+
+
+def _time_mix(x, x_prev, p, cfg, s0=None, *, return_state=False):
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    xr, xk, xv, xw, xg = _ddlerp(x, x_prev, p)
+    cdt = x.dtype
+    r = L.linear(xr.astype(cdt), p["wr"], cdt).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    k = L.linear(xk.astype(cdt), p["wk"], cdt).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    v = L.linear(xv.astype(cdt), p["wv"], cdt).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(L.linear(xg.astype(cdt), p["wg"], cdt))
+    # decay stays f32: log/exp chains need the mantissa
+    wt = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["w_A"]) @ p["w_B"]
+    wt = jnp.clip(wt, _WMIN, _WMAX)
+    w = jnp.exp(-jnp.exp(wt)).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+
+    res = _wkv_apply(r, k, v, w, p["u"], s0, cfg, return_state=return_state)
+    o, s_new = res if return_state else (res, None)
+    o = o.transpose(0, 2, 1, 3)                             # (B, T, H, hd)
+    o = L.rms_norm(o, p["ln_x"], eps=cfg.norm_eps).reshape(B, T, d)
+    out = L.linear((o * g).astype(x.dtype), p["wo"]).astype(x.dtype)
+    return (out, s_new) if return_state else out
+
+
+def _channel_mix(x, x_prev, p):
+    diff = x_prev - x
+    xk = (x + diff * p["cm_mu_k"]).astype(x.dtype)
+    xr = (x + diff * p["cm_mu_r"]).astype(x.dtype)
+    kk = jax.nn.relu(L.linear(xk, p["cm_wk"], x.dtype))
+    kk = kk * kk
+    out = jax.nn.sigmoid(L.linear(xr, p["cm_wr"], x.dtype)) \
+        * L.linear(kk, p["cm_wv"], x.dtype)
+    return out.astype(x.dtype)
+
+
+def _shift(x):
+    """Previous-token stream: x_prev[t] = x[t-1], zeros at t=0."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def rwkv6_block(x, p, cfg, norm1, norm2):
+    """Training / prefill (parallel over T).  x: (B, T, d)."""
+    h = L.rms_norm(x, norm1, eps=cfg.norm_eps)
+    x = x + _time_mix(h, _shift(h), p, cfg)
+    h = L.rms_norm(x, norm2, eps=cfg.norm_eps)
+    x = x + _channel_mix(h, _shift(h), p)
+    return x
+
+
+def init_rwkv6_cache(cfg, batch: int):
+    H, hd, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    return {
+        "tm_x": jnp.zeros((batch, 1, d), jnp.dtype(cfg.compute_dtype)),
+        "cm_x": jnp.zeros((batch, 1, d), jnp.dtype(cfg.compute_dtype)),
+        "state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }
+
+
+def rwkv6_decode(x, p, cfg, cache, norm1, norm2):
+    """Single-token step with recurrent cache.  x: (B, 1, d)."""
+    h = L.rms_norm(x, norm1, eps=cfg.norm_eps)
+    out, s_new = _time_mix(h, cache["tm_x"], p, cfg, s0=cache["state"],
+                           return_state=True)
+    x = x + out
+    h2 = L.rms_norm(x, norm2, eps=cfg.norm_eps)
+    x = x + _channel_mix(h2, cache["cm_x"], p)
+    new_cache = {"tm_x": h, "cm_x": h2, "state": s_new}
+    return x, new_cache

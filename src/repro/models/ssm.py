@@ -1,0 +1,127 @@
+"""Selective SSM (Mamba-style) head for the Hymba hybrid architecture.
+
+Hymba (arXiv:2411.13676) runs attention heads and Mamba heads *in parallel*
+within each block on the same input, then averages the two normalized paths.
+This module implements the Mamba path: input projection + gate, short causal
+depthwise conv, selective SSM with data-dependent (dt, B, C) and
+``ssm_state`` channels per inner dim, sequential ``lax.scan`` over time
+(chunk-parallel is a known optimization; the state-resident streaming is the
+paper-relevant part — DESIGN.md §4).
+
+Decode carries (conv tail, SSM state): O(1) in sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+__all__ = ["init_mamba", "mamba", "mamba_decode", "init_mamba_cache"]
+
+_CONV_K = 4
+
+
+def init_mamba(key, cfg) -> dict:
+    d = cfg.d_model
+    di = 2 * d                              # inner dim
+    n = cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (_CONV_K, di), dtype) * 0.2,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, dt_rank + 2 * n), dtype) * s,
+        "dt_proj": jax.random.normal(ks[3], (dt_rank, di), dtype) * dt_rank ** -0.5,
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, dtype))),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)).astype(dtype)),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[4], (di, d), dtype) * (di ** -0.5),
+    }
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv over time.  x: (B, T, di); w: (K, di).
+
+    ``tail``: (B, K-1, di) previous samples for decode; zeros for prefill.
+    Returns (y, new_tail).
+    """
+    B, T, di = x.shape
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, di), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # (B, T+K-1, di)
+    y = sum(xp[:, i:i + T] * w[i] for i in range(K)) + b
+    return y, xp[:, -(K - 1):]
+
+
+def _ssm_scan(x, dt, Bc, Cc, A, D, h0):
+    """Selective scan.  x, dt: (B, T, di); Bc, Cc: (B, T, n); A: (di, n).
+
+    h_t = exp(dt_t A) * h_{t-1} + dt_t * B_t * x_t;   y_t = h_t . C_t + D x_t
+    Returns (y (B, T, di), h_T (B, di, n)).
+    """
+    def step(h, inp):
+        xt, dtt, bt, ct = (t.astype(jnp.float32) for t in inp)  # (B,di)/(B,n)
+        da = jnp.exp(dtt[..., None] * A[None])            # (B, di, n)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bc.swapaxes(0, 1), Cc.swapaxes(0, 1))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + D * x
+    return y, hT
+
+
+def _mamba_core(x, p, cfg, conv_tail=None, h0=None):
+    B, T, d = x.shape
+    di = 2 * d
+    n = cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    dt_ = x.dtype                     # keep full-seq tensors in compute dtype
+    xz = x @ p["in_proj"].astype(dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)                     # (B, T, di) each
+    xi, new_tail = _causal_conv(xi, p["conv_w"].astype(dt_),
+                                p["conv_b"].astype(dt_), conv_tail)
+    xi = jax.nn.silu(xi)
+    dbc = xi @ p["x_proj"].astype(dt_)
+    dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["dt_proj"].astype(dt_)
+                         + p["dt_bias"].astype(dt_))
+    Bc = dbc[..., dt_rank:dt_rank + n]
+    Cc = dbc[..., dt_rank + n:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    if h0 is None:
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+    # scan state stays f32 (decay-chain stability); xs stream in compute
+    # dtype and are upcast per step inside the scan body
+    y, hT = _ssm_scan(xi, dt, Bc, Cc, A, p["D"].astype(jnp.float32), h0)
+    y = y.astype(dt_) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_), new_tail, hT
+
+
+def mamba(x, p, cfg):
+    """Prefill / training path.  x: (B, T, d) -> (B, T, d)."""
+    out, _, _ = _mamba_core(x, p, cfg)
+    return out.astype(x.dtype)
+
+
+def init_mamba_cache(cfg, batch: int):
+    di = 2 * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, _CONV_K - 1, di), jnp.dtype(cfg.compute_dtype)),
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode(x, p, cfg, cache):
+    """Single-token step.  x: (B, 1, d)."""
+    out, tail, hT = _mamba_core(x, p, cfg, conv_tail=cache["conv"],
+                                h0=cache["h"])
+    return out.astype(x.dtype), {"conv": tail.astype(cache["conv"].dtype),
+                                 "h": hT}

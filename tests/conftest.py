@@ -1,0 +1,25 @@
+# NOTE: deliberately no XLA_FLAGS device-count override here — smoke tests
+# and benches must see the real single CPU device.  Multi-device behaviour
+# is tested via subprocesses (tests/test_distributed.py) and the dry-run.
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def x64():
+    """Enable float64 within a single test (SEM oracle accuracy)."""
+    import jax
+
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)

@@ -1,0 +1,67 @@
+"""The paper's cost model (Eq. 1-2) and our operator's adherence to it."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost import (CostModel, ax_local_flops, cg_iter_bytes,
+                             cg_iter_flops, flops_per_dof, intensity,
+                             roofline_gflops)
+
+
+def test_eq1_values():
+    # Paper §III-A with n = 10 (degree 9): 12*10 + 34 = 154 flops per DOF.
+    assert flops_per_dof(10) == 154
+    D = 1024 * 1000                       # 1024 elements at n=10
+    assert cg_iter_flops(D, 10) == D * 154
+
+
+def test_eq2_intensity():
+    # I(10) = 154/240 ~= 0.6417 flop/byte in fp64 (paper Eq. 2).
+    assert abs(intensity(10) - 154 / 240) < 1e-12
+    # fp32 doubles it (DESIGN.md §5).
+    assert abs(intensity(10, itemsize=4) - 154 / 120) < 1e-12
+
+
+def test_paper_roofline_numbers():
+    """§VI-B: theoretical peak BW gives 462 GF/s (P100) / 577 GF/s (V100)."""
+    assert abs(roofline_gflops(720, 10) - 462) < 1.0
+    assert abs(roofline_gflops(900, 10) - 577.5) < 1.0
+
+
+def test_bytes_model():
+    r, w = cg_iter_bytes(1000, itemsize=8)
+    assert r == 24 * 1000 * 8 and w == 6 * 1000 * 8
+
+
+def test_cost_model_dataclass():
+    cm = CostModel(nelt=1024, n=10)
+    assert cm.ndof == 1_024_000
+    assert cm.cg_flops == 1_024_000 * 154
+    assert abs(cm.intensity - 154 / 240) < 1e-12
+
+
+def test_hlo_flops_match_cost_model():
+    """Compiled local operator's dot flops ~= the 12n-term of Eq. 1.
+
+    The contractions are 12n flops/DOF; the metric apply (elementwise, not
+    dots) is the remaining 17.  Checks the implementation does not do
+    redundant contraction work.
+    """
+    from repro.core.ax import ax_local_fused
+    from repro.core.sem import derivative_matrix
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    n, E = 10, 64
+    u = jax.ShapeDtypeStruct((E, n, n, n), jnp.float32)
+    g = jax.ShapeDtypeStruct((E, 6, n, n, n), jnp.float32)
+    D = jnp.asarray(derivative_matrix(n), jnp.float32)
+    compiled = jax.jit(lambda u, g: ax_local_fused(u, D, g)).lower(u, g).compile()
+    got = analyze_hlo(compiled.as_text())["dot_flops"]
+    want = E * n ** 3 * 12 * n            # 6 contractions x 2n flops
+    assert 0.95 * want <= got <= 1.10 * want, (got, want)
+
+
+def test_ax_local_flops_formula():
+    assert ax_local_flops(1, 10) == 1000 * (120 + 17)

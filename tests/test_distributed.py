@@ -1,0 +1,28 @@
+"""Multi-device behaviour (shard_map, collectives) via a subprocess.
+
+The 8-device host-platform flag must be set before jax initializes, so
+these checks run in ``distributed_checks.py`` as a child process — keeping
+the main pytest process at 1 device per the dry-run contract.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+_SCRIPT = pathlib.Path(__file__).parent / "distributed_checks.py"
+_SRC = pathlib.Path(__file__).parents[1] / "src"
+
+
+def test_distributed_suite():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_SRC)
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(_SCRIPT)],
+        capture_output=True, text=True, timeout=580, env=env,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-2000:])
+    assert proc.returncode == 0, f"distributed checks failed:\n{proc.stdout}"
+    assert "ALL-DISTRIBUTED-OK" in proc.stdout

@@ -1,0 +1,75 @@
+"""Loop-aware HLO analyzer: hand-counted toy modules."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze_hlo, parse_computations
+
+
+def _compile(fn, *avals):
+    return jax.jit(fn).lower(*avals).compile().as_text()
+
+
+def test_plain_matmul():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    hlo = _compile(lambda a, b: a @ b, a, b)
+    got = analyze_hlo(hlo)["dot_flops"]
+    assert got == 2 * 64 * 128 * 32
+
+
+def test_scan_multiplies_by_trip_count():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, None, length=7)[0]
+
+    got = analyze_hlo(_compile(f, x, w))["dot_flops"]
+    assert got == 7 * 2 * 64 ** 3
+
+
+def test_nested_scans_compose():
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci = jax.lax.scan(inner, c, None, length=3)[0]
+            return jnp.tanh(ci), None
+        return jax.lax.scan(outer, x, None, length=5)[0]
+
+    got = analyze_hlo(_compile(f, x, w))["dot_flops"]
+    assert got == 15 * 2 * 32 ** 3
+
+
+def test_xla_cost_analysis_undercounts_loops():
+    """Documents WHY the loop-aware analyzer exists: XLA's own
+    cost_analysis returns the same flops for 1 and 8 iterations."""
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def make(L):
+        def f(x, w):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            return jax.lax.scan(body, x, None, length=L)[0]
+        return f
+
+    f1 = jax.jit(make(1)).lower(x, w).compile().cost_analysis()["flops"]
+    f8 = jax.jit(make(8)).lower(x, w).compile().cost_analysis()["flops"]
+    # identical up to loop-counter arithmetic — NOT x8
+    assert f8 < 1.01 * f1, \
+        "if this fails, XLA fixed trip-count costing — drop the analyzer " \
+        "and use cost_analysis directly"
+
+
+def test_parse_computations_shape():
+    x = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    hlo = _compile(lambda a: jnp.tanh(a).sum(), x)
+    comps, entry = parse_computations(hlo)
+    assert entry is not None
+    assert entry in comps

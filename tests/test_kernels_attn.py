@@ -1,0 +1,71 @@
+"""Pallas flash-attention kernel vs naive oracle."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _qkv(rng, B, Hq, Hkv, Sq, Skv, d, dtype=jnp.float32):
+    q = jnp.asarray(rng.normal(size=(B, Hq, Sq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, Skv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, Skv, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("kw", [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=16),
+    dict(causal=True, softcap=30.0),
+    dict(causal=True, window=8, softcap=50.0),
+])
+def test_flash_matches_naive(rng, kw):
+    q, k, v = _qkv(rng, 2, 4, 2, 48, 48, 32)
+    o_k = ops.flash_attention(q, k, v, block_q=16, block_k=16,
+                              interpret=True, **kw)
+    o_r = ref.attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-5)
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(8, 8), (8, 4), (8, 2), (8, 1)])
+def test_flash_gqa_groups(rng, Hq, Hkv):
+    q, k, v = _qkv(rng, 1, Hq, Hkv, 32, 32, 16)
+    o_k = ops.flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+    o_r = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-5)
+
+
+@pytest.mark.parametrize("Sq,Skv,bq,bk", [
+    (40, 40, 16, 16),       # non-divisible (padding path)
+    (33, 65, 16, 32),
+    (8, 128, 8, 32),        # short q, long kv
+    (128, 128, 128, 128),   # single block
+])
+def test_flash_shape_sweep(rng, Sq, Skv, bq, bk):
+    q, k, v = _qkv(rng, 1, 2, 2, Sq, Skv, 16)
+    o_k = ops.flash_attention(q, k, v, block_q=bq, block_k=bk, causal=False,
+                              interpret=True)
+    o_r = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-5)
+
+
+def test_flash_q_offset_decode_chunk(rng):
+    """Chunked prefill: second q chunk with q_offset matches the full run."""
+    q, k, v = _qkv(rng, 1, 2, 2, 32, 32, 16)
+    full = ref.attention_ref(q, k, v, causal=True)
+    part = ops.flash_attention(q[:, :, 16:], k, v, q_offset=16,
+                               block_q=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(part), np.asarray(full[:, :, 16:]),
+                               atol=2e-5)
+
+
+def test_flash_bf16(rng):
+    q, k, v = _qkv(rng, 1, 2, 1, 32, 32, 32, dtype=jnp.bfloat16)
+    o_k = ops.flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+    o_r = ref.attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32))
+    assert o_k.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(o_k, np.float32), np.asarray(o_r),
+                               atol=3e-2)

@@ -1,0 +1,120 @@
+"""Per-arch smoke tests + decode-path consistency (all 10 assigned archs)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.models import model as M
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _extra(cfg, B, key):
+    if cfg.img_tokens:
+        return {"img_embeds": 0.1 * jax.random.normal(
+            key, (B, cfg.img_tokens, cfg.d_model))}
+    if cfg.enc_layers:
+        return {"audio_embeds": 0.1 * jax.random.normal(
+            key, (B, cfg.audio_ctx, cfg.d_model))}
+    return None
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_smoke_forward_and_grad(name):
+    """Reduced config: one train step's forward+grad, shapes + finiteness."""
+    cfg = ARCHS[name].reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab)
+    extra = _extra(cfg, B, key)
+
+    logits = M.forward(params, cfg, tokens[:, :-1], extra)
+    S_total = S + (cfg.img_tokens or 0)
+    assert logits.shape == (B, S_total, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), "NaN/inf in logits"
+
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, cfg, {"tokens": tokens}, extra))(params)
+    assert bool(jnp.isfinite(loss))
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, "dead gradients"
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_prefill_decode_matches_forward(name):
+    """prefill(prompt) + decode steps == full forward logits."""
+    cfg = ARCHS[name].reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    B, S = 2, 20
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    extra = _extra(cfg, B, key)
+    off = cfg.img_tokens or 0
+
+    full = M.forward(params, cfg, tokens, extra)
+    k0 = S - 3
+    logits_p, cache = M.prefill(params, cfg, tokens[:, :k0], extra,
+                                max_len=S + off)
+    errs = [float(jnp.abs(logits_p[:, -1] - full[:, k0 - 1 + off]).max())]
+    for i in range(k0, S):
+        logits_d, cache = M.decode_step(
+            params, cfg, tokens[:, i:i + 1], cache,
+            jnp.asarray(i + off, jnp.int32))
+        errs.append(float(jnp.abs(logits_d[:, 0] - full[:, i + off]).max()))
+    scale = float(jnp.abs(full).max()) + 1e-6
+    assert max(errs) < 2e-4 * max(scale, 10.0), f"decode drift: {errs}"
+
+
+def test_gemma2_softcaps_applied():
+    cfg = ARCHS["gemma2-27b"].reduced()
+    assert cfg.logit_softcap == 30.0
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    # blow up the lm head weights: logits must stay within the softcap
+    params["embed"] = params["embed"] * 100.0
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    logits = M.forward(params, cfg, tokens)
+    assert float(jnp.abs(logits).max()) <= 30.0 + 1e-3
+
+
+def test_window_pattern_gemma2():
+    lw = ARCHS["gemma2-27b"].layer_windows()
+    assert lw[0] == 4096 and lw[1] == 1 << 30
+    assert len(lw) == 46
+
+
+def test_hymba_window_pattern():
+    lw = ARCHS["hymba-1.5b"].layer_windows()
+    assert lw[0] == 1 << 30 and lw[16] == 1 << 30 and lw[31] == 1 << 30
+    assert lw[1] == 1024
+
+
+def test_long500k_rule():
+    from repro.configs import cells
+
+    skipped = {(a, s) for a, s, sk in cells() if sk}
+    run = {(a, s) for a, s, sk in cells() if not sk and s == "long_500k"}
+    assert ("rwkv6-1.6b", "long_500k") in run
+    assert ("hymba-1.5b", "long_500k") in run
+    assert ("gemma2-27b", "long_500k") in run       # alternating local/global
+    for a in ("codeqwen1.5-7b", "nemotron-4-340b", "qwen2.5-14b",
+              "llava-next-mistral-7b", "whisper-large-v3",
+              "qwen3-moe-30b-a3b", "arctic-480b"):
+        assert (a, "long_500k") in skipped
+
+
+def test_param_counts_sane():
+    """Analytic N within ~25% of the published sizes."""
+    expect = {"rwkv6-1.6b": 1.6e9, "gemma2-27b": 27e9, "codeqwen1.5-7b": 7e9,
+              "nemotron-4-340b": 340e9, "qwen2.5-14b": 14e9,
+              "llava-next-mistral-7b": 7e9, "qwen3-moe-30b-a3b": 30e9,
+              "arctic-480b": 480e9, "hymba-1.5b": 1.5e9}
+    for name, want in expect.items():
+        got = ARCHS[name].param_count()
+        assert 0.7 * want < got < 1.35 * want, (name, got, want)
+    # MoE active params
+    a3b = ARCHS["qwen3-moe-30b-a3b"].active_param_count()
+    assert 2e9 < a3b < 5e9, a3b

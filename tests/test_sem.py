@@ -1,0 +1,56 @@
+"""SEM 1-D operator properties: quadrature exactness, spectral derivative."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sem import SEMOperators, derivative_matrix, gll_points_weights
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 7, 10, 12, 16])
+def test_gll_basics(n):
+    z, w = gll_points_weights(n)
+    assert z[0] == -1.0 and z[-1] == 1.0
+    assert np.all(np.diff(z) > 0), "nodes strictly increasing"
+    assert abs(w.sum() - 2.0) < 1e-13, "weights integrate 1 exactly"
+    assert np.allclose(z, -z[::-1]) and np.allclose(w, w[::-1]), "symmetry"
+
+
+@settings(deadline=None, max_examples=30)
+@given(n=st.integers(2, 14), deg=st.integers(0, 25))
+def test_quadrature_exactness(n, deg):
+    """GLL with n points integrates monomials exactly up to degree 2n-3."""
+    if deg > 2 * n - 3:
+        return
+    z, w = gll_points_weights(n)
+    got = np.sum(w * z ** deg)
+    exact = 0.0 if deg % 2 else 2.0 / (deg + 1)
+    assert abs(got - exact) < 1e-11
+
+
+@settings(deadline=None, max_examples=30)
+@given(n=st.integers(2, 14), deg=st.integers(0, 13))
+def test_derivative_exactness(n, deg):
+    """D differentiates polynomials of degree <= n-1 exactly at the nodes."""
+    if deg > n - 1:
+        return
+    z, _ = gll_points_weights(n)
+    D = derivative_matrix(n)
+    got = D @ (z ** deg)
+    exact = deg * z ** (deg - 1) if deg > 0 else np.zeros_like(z)
+    assert np.max(np.abs(got - exact)) < 1e-10 * max(1, n ** 2)
+
+
+def test_derivative_row_sums_zero():
+    """D @ const = 0 (derivative of a constant)."""
+    for n in (2, 5, 10):
+        D = derivative_matrix(n)
+        assert np.max(np.abs(D.sum(axis=1))) < 1e-12
+
+
+def test_sem_operators_bundle():
+    ops = SEMOperators(10)
+    assert ops.D.shape == (10, 10)
+    assert ops.Dt.shape == (10, 10)
+    assert np.allclose(ops.Dt, ops.D.T)
+    assert ops.w3.shape == (10, 10, 10)
+    assert abs(ops.w3.sum() - 8.0) < 1e-12        # integrates the unit cube
