@@ -11,11 +11,20 @@ optimized CUDA) on P100/V100.  The CPU-container analog compares:
                    column reports the HBM-traffic ratio from the HLO
                    instead — the quantity the kernel actually optimizes).
 
+The ladder's new top rung is the *fused CG iteration* (core/cg_fused.py):
+one multi-output Pallas call per iteration carrying the mask and both
+weighted dots with it.  Its derived column reports the Eq.-2 stream
+accounting (30 streams -> 19, DESIGN.md §3.3); interpret-mode wall time is
+reported for completeness but is emulator time, not hardware time.
+
 CSV: name,us_per_call,derived  where derived = achieved GFLOP/s (model
 flops C_ax = D*(12n+17)) for timed variants.
+
+Set ``REPRO_BENCH_QUICK=1`` to shrink the sweep (CI smoke).
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -24,12 +33,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ax import ax_local_fused, ax_local_listing1
-from repro.core.cost import ax_local_flops
+from repro.core.cost import (CG_READ_STREAMS, CG_WRITE_STREAMS,
+                             FUSED_CG_READ_STREAMS, FUSED_CG_WRITE_STREAMS,
+                             ax_local_flops, cg_iter_flops)
 from repro.core.sem import derivative_matrix
 from repro.kernels import ops
 
-N_GLL = 10
-ELEMENT_SWEEP = (64, 256, 1024)
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
+N_GLL = 6 if QUICK else 10
+ELEMENT_SWEEP = (8,) if QUICK else (64, 256, 1024)
 
 
 def _time(fn, *args, reps=5):
@@ -73,4 +85,38 @@ def run():
               if ma_l1 and ma_fu else float("nan"))
         rows.append((f"ax_pallas_e{E}", t_pl * 1e6,
                      f"temp_l1/fused={tr:.2f}x;streams_14v8=1.75x"))
+
+        # fused CG iteration (the ladder's next rung, DESIGN.md §3): one
+        # multi-output Pallas call per iteration replaces operator + mask +
+        # two standalone reductions.  Timed for one interpret-mode iteration
+        # (emulator time — the derived stream ratio is the claim).
+        rows.append((f"cg_fused_iter_e{E}", _time_cg_fused(E) * 1e6,
+                     _fused_streams_derived()))
     return rows
+
+
+def _fused_streams_derived() -> str:
+    base = CG_READ_STREAMS + CG_WRITE_STREAMS
+    fused = FUSED_CG_READ_STREAMS + FUSED_CG_WRITE_STREAMS
+    return (f"streams_{base}v{fused}={base / fused:.2f}x"
+            f";flops={cg_iter_flops(1, N_GLL)}perDOF")
+
+
+def _time_cg_fused(E: int) -> float:
+    from repro.configs.nekbone import PAPER_CASES
+    from repro.core.cg_fused import cg_fused_fixed_iters
+    from repro.core.nekbone import NekboneCase
+
+    grid = (PAPER_CASES[E].grid if E in PAPER_CASES else (2, 2, E // 4))
+    case = NekboneCase(n=N_GLL, grid=grid, dtype=jnp.float32)
+    _, f = case.manufactured()
+
+    def one_iter():
+        return cg_fused_fixed_iters(f, D=case.D, g=case.g, mask=case.mask,
+                                    c=case.c, grid=case.grid, niter=1)
+
+    jax.block_until_ready(one_iter().x)       # compile / warm, like _time()
+    t0 = time.perf_counter()
+    res = one_iter()
+    jax.block_until_ready(res.x)
+    return time.perf_counter() - t0

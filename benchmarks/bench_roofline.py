@@ -14,6 +14,7 @@ CSV rows:
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -24,8 +25,9 @@ import jax.numpy as jnp
 from repro.core.cost import cg_iter_flops, intensity
 from repro.core.nekbone import NekboneCase
 
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
 N_GLL = 10
-ELEMENT_SWEEP = (64, 256, 1024)
+ELEMENT_SWEEP = (64,) if QUICK else (64, 256, 1024)
 
 
 def _time(fn, *args, reps=5):

@@ -55,6 +55,26 @@ def main():
     for E in sweep:
         case, f, u_ex = run_case(E, args.iters)
 
+    print("\n== fused CG iteration (Pallas pipeline, DESIGN.md §3) ==")
+    # One multi-output Pallas call per iteration: masked Ax + both weighted
+    # dots leave the kernel as per-block partials (15R+4W streams vs Eq. 2's
+    # 24R+6W).  Interpret mode off-TPU: correctness, not speed — compare the
+    # residual history against the XLA path on a small case.
+    from repro.core.cost import (CG_READ_STREAMS, CG_WRITE_STREAMS,
+                                 FUSED_CG_READ_STREAMS, FUSED_CG_WRITE_STREAMS)
+
+    small = NekboneCase(n=6, grid=(2, 2, 2), dtype=jnp.float32,
+                        ax_impl="pallas_fused_cg")
+    res_f, _ = small.solve_manufactured(niter=10)
+    small.ax_impl = "fused"
+    res_x, _ = small.solve_manufactured(niter=10)
+    drift = float(jnp.nanmax(jnp.abs(res_f.rnorm_history -
+                                     res_x.rnorm_history) /
+                             jnp.abs(res_x.rnorm_history)))
+    print(f"streams/iter: {CG_READ_STREAMS}R+{CG_WRITE_STREAMS}W (Eq. 2) -> "
+          f"{FUSED_CG_READ_STREAMS}R+{FUSED_CG_WRITE_STREAMS}W (fused)")
+    print(f"residual-history drift vs XLA CG over 10 iters: {drift:.2e}")
+
     print("\n== beyond-paper: Jacobi preconditioning ==")
     r_plain, _ = case.solve_manufactured(tol=1e-6, max_iter=500)
     r_pc, _ = case.solve_manufactured(tol=1e-6, max_iter=500, precond=True)

@@ -1,0 +1,62 @@
+"""Shims for the span of jax releases this repo runs on.
+
+The reference container pins an older jax than the names some modules were
+written against; everything version-sensitive funnels through here so call
+sites stay clean.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "set_mesh", "axis_size",
+           "CompilerParams"]
+
+# Pallas-TPU compiler params: renamed TPUCompilerParams -> CompilerParams.
+import jax.experimental.pallas.tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams",
+                         getattr(_pltpu, "TPUCompilerParams", None))
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size``, or the classic ``psum(1, axis)`` before it."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:                       # pre-0.6 spelling
+    import functools
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(*args, **kwargs):
+        if "check_vma" in kwargs:            # renamed from check_rep
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(*args, **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` on new jax, ``jax.sharding.use_mesh`` on mid releases,
+    and the ``Mesh`` object's own context manager (thread resources) before
+    that.
+    """
+    sm = getattr(jax, "set_mesh", None)
+    if sm is not None:
+        return sm(mesh)
+    um = getattr(jax.sharding, "use_mesh", None)
+    if um is not None:
+        return um(mesh)
+    return mesh
+
+
+def make_mesh(shape, names, *, auto: bool = True, devices=None):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    kw = {} if devices is None else {"devices": devices}
+    if auto and hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(names)
+    return jax.make_mesh(shape, names, **kw)

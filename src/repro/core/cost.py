@@ -18,7 +18,21 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["flops_per_dof", "cg_iter_flops", "cg_iter_bytes", "intensity",
-           "ax_local_flops", "ax_local_bytes", "roofline_gflops", "CostModel"]
+           "ax_local_flops", "ax_local_bytes", "roofline_gflops", "CostModel",
+           "CG_READ_STREAMS", "CG_WRITE_STREAMS", "FUSED_CG_READ_STREAMS",
+           "FUSED_CG_WRITE_STREAMS", "fused_cg_iter_bytes", "fused_intensity"]
+
+# Eq. 2's stream counts: fp64 words moved per DOF per CG iteration when the
+# operator, mask, and every inner product run as separate passes.
+CG_READ_STREAMS = 24
+CG_WRITE_STREAMS = 6
+
+# The fused-iteration pipeline (core/cg_fused.py, DESIGN.md §3.3) moves:
+#   kernel:      reads p, 6 metric fields, mask, r, c  (10)   writes w (1)
+#   vector pass: reads x, p, r, w, c                   (5)    writes x, r, p (3)
+# The per-block dot partials are E/block_e scalars — charged as zero streams.
+FUSED_CG_READ_STREAMS = 15
+FUSED_CG_WRITE_STREAMS = 4
 
 
 def flops_per_dof(n: int) -> int:
@@ -39,6 +53,19 @@ def cg_iter_bytes(ndof: int, itemsize: int = 8) -> tuple[int, int]:
 def intensity(n: int, itemsize: int = 8) -> float:
     """Eq. 2 generalized to dtype: I = (12n+34) / (30 * itemsize)."""
     return flops_per_dof(n) / (30.0 * itemsize)
+
+
+def fused_cg_iter_bytes(ndof: int, itemsize: int = 8) -> tuple[int, int]:
+    """(read_bytes, write_bytes) of the step-fused CG iteration: 15 D reads,
+    4 D writes (vs Eq. 2's 24 + 6 — a 30/19 ≈ 1.58x traffic cut)."""
+    return (FUSED_CG_READ_STREAMS * ndof * itemsize,
+            FUSED_CG_WRITE_STREAMS * ndof * itemsize)
+
+
+def fused_intensity(n: int, itemsize: int = 8) -> float:
+    """Eq. 2 re-evaluated for the fused pipeline: same flops over 19 streams."""
+    return flops_per_dof(n) / (
+        (FUSED_CG_READ_STREAMS + FUSED_CG_WRITE_STREAMS) * float(itemsize))
 
 
 def ax_local_flops(nelt: int, n: int) -> int:

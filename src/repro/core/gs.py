@@ -18,6 +18,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 __all__ = ["ds_sum_local", "ds_sum_sharded", "halo_exchange_z"]
 
 
@@ -61,7 +63,7 @@ def _flat_shift(v: jnp.ndarray, axis_names: tuple, up: bool) -> jnp.ndarray:
     """
     axis_names = tuple(axis_names)
     inner = axis_names[-1]
-    n = jax.lax.axis_size(inner)
+    n = compat.axis_size(inner)
     idx = jax.lax.axis_index(inner)
     if up:
         perm = [(i, (i + 1) % n) for i in range(n)]

@@ -27,6 +27,7 @@ import numpy as np
 
 import repro.core.ax as ax_mod
 import repro.core.cg as cg_mod
+import repro.core.cg_fused as cg_fused_mod
 import repro.core.gs as gs_mod
 from repro.core.cost import CostModel
 from repro.core.geom import BoxMesh
@@ -43,7 +44,11 @@ class NekboneCase:
       grid:    element grid (EX, EY, EZ).
       lengths: physical box size.
       dtype:   compute dtype (fp64 validated on CPU; fp32/bf16 TPU target).
-      ax_impl: 'listing1' | 'fused' | 'pallas'.
+      ax_impl: 'listing1' | 'fused' | 'pallas' | 'pallas_fused_cg'.
+               The last selects the step-fused CG pipeline (core/cg_fused.py,
+               DESIGN.md §3): fixed-iteration solves run one multi-output
+               Pallas call per iteration instead of operator + separate
+               reductions.
     """
 
     n: int = 10
@@ -107,6 +112,10 @@ class NekboneCase:
         M = None
         if precond:
             M = cg_mod.jacobi_preconditioner(self.operator_diagonal())
+        if self.ax_impl == "pallas_fused_cg" and niter is not None and M is None:
+            return cg_fused_mod.cg_fused_fixed_iters(
+                f, D=self.D, g=self.g, mask=self.mask, c=self.c,
+                grid=self.grid, niter=niter)
         if niter is not None:
             return cg_mod.cg_fixed_iters(self.ax_full, f, niter=niter,
                                          dot=self.dot(), precond=M)

@@ -18,6 +18,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 __all__ = ["collective_matmul_allgather"]
 
 
@@ -32,7 +34,7 @@ def collective_matmul_allgather(x: jnp.ndarray, w: jnp.ndarray,
     Ring schedule: at step s we hold the block that originated at shard
     (i - s) mod P; matmul it into its output slot while forwarding it.
     """
-    P = jax.lax.axis_size(axis_name)
+    P = compat.axis_size(axis_name)
     i = jax.lax.axis_index(axis_name)
     m_loc, _ = x.shape
     n = w.shape[1]

@@ -25,8 +25,18 @@ __all__ = ["AxisRules", "constrain", "current_mesh", "RULES", "set_rules"]
 
 
 def current_mesh():
-    """The ambient mesh set by ``jax.sharding.use_mesh`` / ``with mesh:``."""
-    m = jax.sharding.get_abstract_mesh()
+    """The ambient mesh set by ``jax.sharding.use_mesh`` / ``with mesh:``.
+
+    ``get_abstract_mesh`` only exists on newer jax; fall back to the thread
+    resources the ``with mesh:`` context manager populates on 0.4.x.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        m = get()
+    else:
+        from jax._src import mesh as _mesh_lib
+
+        m = _mesh_lib.thread_resources.env.physical_mesh
     if m is None or m.empty:
         return None
     return m

@@ -1,0 +1,136 @@
+"""block_e selection for the nekbone Ax kernels, with an in-process cache.
+
+The element block size is the kernel family's one tuning knob: it trades
+VMEM residency (larger blocks amortize the grid and give the MXU taller
+``e*n^2 x n`` operands) against the double-buffering headroom the pipeline
+needs.  Selection strategy:
+
+* **Heuristic floor** (:func:`vmem_block_e`): largest power-of-two block
+  whose ~14-array working set fits a VMEM budget (default 8 MiB of the
+  ~16 MiB/core), further halved until it divides ``E``.  This is exact
+  enough off-TPU, where kernels only run in interpret mode and wall time is
+  meaningless.
+* **Measurement** (:func:`pick_block_e` on a TPU backend): times the real
+  kernel over the power-of-two candidates below the heuristic ceiling and
+  keeps the fastest — the empirical analog of the paper's per-architecture
+  tuning sweep (its Table 1 re-tunes the CUDA kernel per GPU generation).
+
+Results are memoized in a process-wide cache keyed on
+``(n, E, dtype, backend)`` so steady-state callers (one ``pallas_call`` per
+CG iteration) never re-tune.  ``clear_cache`` exists for tests.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["vmem_block_e", "pick_block_e", "candidate_blocks", "clear_cache",
+           "cache_info"]
+
+_CACHE: dict[tuple, int] = {}
+_LOCK = threading.Lock()
+
+VMEM_BUDGET_BYTES = 8 * 2 ** 20
+
+
+def vmem_block_e(E: int, n: int,
+                 vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
+                 itemsize: int = 4) -> int:
+    """Largest power-of-two element block whose working set fits the budget.
+
+    The kernel keeps ~14 block-sized arrays live (u, w, 6 metric fields,
+    3 gradients + 3 temporaries) in the accumulation dtype (f32, or f64 on
+    the fp64 oracle path); lanes pad n^3 up to a multiple of 128.
+    """
+    n3_padded = -(-(n ** 3) // 128) * 128
+    per_elem = 14 * n3_padded * max(itemsize, 4)
+    be = max(1, vmem_budget_bytes // per_elem)
+    be = 1 << (be.bit_length() - 1)            # floor to power of two
+    while be > 1 and E % be:
+        be //= 2
+    return be
+
+
+def candidate_blocks(E: int, n: int, itemsize: int = 4) -> list[int]:
+    """Power-of-two candidates (descending) from the VMEM ceiling down to 1,
+    keeping only divisors of ``E`` so no padding is introduced."""
+    ceil = vmem_block_e(E, n, itemsize=itemsize)
+    cands = []
+    be = ceil
+    while be >= 1:
+        if E % be == 0:
+            cands.append(be)
+        be //= 2
+    return cands or [1]
+
+
+def _default_measure(E: int, n: int, dtype) -> Callable[[int], float]:
+    """Times the real Ax kernel on synthetic data for one block size."""
+    import time
+
+    import numpy as np
+
+    from repro.core.sem import derivative_matrix
+    from repro.kernels import nekbone_ax as _ax
+
+    rng = np.random.default_rng(0)
+    u2 = jnp.asarray(rng.normal(size=(E, n ** 3)), dtype)
+    g2 = jnp.asarray(rng.normal(size=(E, 6, n ** 3)), dtype)
+    D = jnp.asarray(derivative_matrix(n), dtype)
+    Dt = D.T
+
+    def measure(block_e: int) -> float:
+        f = lambda: _ax.nekbone_ax_pallas(u2, D, Dt, g2, n=n,
+                                          block_e=block_e, interpret=False)
+        jax.block_until_ready(f())             # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = f()
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / 3
+
+    return measure
+
+
+def pick_block_e(E: int, n: int, dtype=jnp.float32, *,
+                 backend: str | None = None,
+                 measure: Callable[[int], float] | None = None) -> int:
+    """Best ``block_e`` for ``(E, n, dtype)`` on ``backend``, memoized.
+
+    On a TPU backend (or when an explicit ``measure`` callable is supplied)
+    the candidates are timed and the fastest wins; elsewhere the VMEM
+    heuristic decides directly — interpret-mode wall time reflects the
+    emulator, not the hardware, so measuring it would tune for noise.
+    """
+    dtype = jnp.dtype(dtype)
+    backend = backend or jax.default_backend()
+    key = (n, E, dtype.name, backend)
+    with _LOCK:
+        if key in _CACHE:
+            return _CACHE[key]
+
+    cands = candidate_blocks(E, n, itemsize=dtype.itemsize)
+    if measure is None and backend == "tpu":
+        measure = _default_measure(E, n, dtype)
+    if measure is None:
+        best = cands[0]
+    else:
+        best = min(cands, key=measure)
+
+    with _LOCK:
+        _CACHE.setdefault(key, best)
+        return _CACHE[key]
+
+
+def clear_cache() -> None:
+    with _LOCK:
+        _CACHE.clear()
+
+
+def cache_info() -> dict[tuple, int]:
+    """Snapshot of the memoized selections (for tests / diagnostics)."""
+    with _LOCK:
+        return dict(_CACHE)

@@ -1,4 +1,4 @@
-"""Pallas-TPU kernel for the Nekbone local Poisson operator (paper §IV-C).
+"""Pallas-TPU kernels for the Nekbone local Poisson operator (paper §IV-C).
 
 This is the paper's optimized ``Ax`` kernel re-derived for the TPU memory
 hierarchy (DESIGN.md §2).  The CUDA version marches an ``n x n`` thread layer
@@ -13,12 +13,25 @@ is written — the 7-read/1-write traffic floor of the operator (the paper's
 Eq. 2 counts 24+6 streams for the *whole CG iteration*; the operator itself
 is 7+1).
 
+Two kernels share the block math (:func:`ax_block`):
+
+* :func:`nekbone_ax_kernel` — the plain fused operator (the Fig. 2/3 ladder's
+  top rung), 7 reads / 1 write.
+* :func:`nekbone_ax_dots_kernel` — the fused *CG-iteration* kernel
+  (DESIGN.md §3): in the same VMEM residency it also applies the Dirichlet
+  mask and emits per-block partial sums for the two weighted inner products
+  a CG iteration needs (``p·c·Ap`` and ``r·c·z``), so the separate reduction
+  passes Eq. 2 charges for disappear from the HBM budget.  The ``p·c·Ap``
+  partial uses the continuity identity (DESIGN.md §3.2): for a continuous
+  ``p``, ``p·c·(mask · gs(w)) == Σ_j p_j (mask·w)_j`` element-locally, so no
+  assembled ``w`` is needed inside the kernel.
+
 HBM layout: callers pass natural ``(E, n, n, n)`` arrays; the wrapper
 (`ops.nekbone_ax`) reshapes them (free, row-major) to ``(E, n^3)`` /
 ``(E, 6, n^3)`` so the minor dimension is ~n^3 (lane padding 1000 -> 1024,
 2.4 % waste) instead of ``n`` (10 -> 128, 12.8x waste).
 
-The kernel is generic in ``n`` (tested 2..16) and in the element block size
+The kernels are generic in ``n`` (tested 2..16) and in the element block size
 ``block_e`` — the TPU analog of the paper's claim that the 2-D-thread kernel
 is "not bound by shared memory" and ports across polynomial degrees "by only
 changing a few constants".
@@ -32,7 +45,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-__all__ = ["nekbone_ax_kernel", "nekbone_ax_pallas"]
+__all__ = ["nekbone_ax_kernel", "nekbone_ax_pallas", "ax_block",
+           "nekbone_ax_dots_kernel", "nekbone_ax_dots_pallas"]
+
+from repro.compat import CompilerParams as _CompilerParams
 
 
 def _dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -40,6 +56,46 @@ def _dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     precision, exercised through interpret mode on CPU)."""
     acc = jnp.float64 if a.dtype == jnp.float64 else jnp.float32
     return jax.lax.dot(a, b, preferred_element_type=acc)
+
+
+def ax_block(u: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
+             g: jnp.ndarray, *, n: int, e: int) -> jnp.ndarray:
+    """Block math of  w = D^T ( G (D u) )  on VMEM-resident arrays.
+
+    Args:
+      u: (e, n^3) nodal values for one block of ``e`` elements.
+      D/Dt: (n, n) derivative matrix and its transpose.
+      g: (e, 6, n^3) metric (rr, rs, rt, ss, st, tt).
+    Returns (e, n^3), in the accumulation dtype of ``u``.
+    """
+    # ---- forward gradient: fold (e,k,j) / (e,k,i) / (e,j,i) into M --------
+    # wr[e,k,j,i] = sum_l u[e,k,j,l] D[i,l]      (M = e*n^2, K = n, N = n)
+    wr = _dot(u.reshape(e * n * n, n), Dt).reshape(e, n, n, n)
+    # ws[e,k,j,i] = sum_l u[e,k,l,i] D[j,l]: transpose j<->i, contract, undo.
+    u_kij = u.reshape(e, n, n, n).transpose(0, 1, 3, 2)  # (e,k,i,l=j)
+    ws = _dot(u_kij.reshape(e * n * n, n), Dt)
+    ws = ws.reshape(e, n, n, n).transpose(0, 1, 3, 2)
+    # wt[e,k,j,i] = sum_l u[e,l,j,i] D[k,l]: contract the layer axis.
+    u_jil = u.reshape(e, n, n * n).transpose(0, 2, 1)    # (e, ji, l=k)
+    wt = _dot(u_jil.reshape(e * n * n, n), Dt)
+    wt = wt.reshape(e, n * n, n).transpose(0, 2, 1).reshape(e, n, n, n)
+
+    # ---- metric application (element-wise, VPU) ---------------------------
+    grr, grs, grt, gss, gst, gtt = (
+        g[:, m, :].reshape(e, n, n, n) for m in range(6))
+    ur = grr * wr + grs * ws + grt * wt
+    us = grs * wr + gss * ws + gst * wt
+    ut = grt * wr + gst * ws + gtt * wt
+
+    # ---- transposed gradient (same shapes, D^T) ---------------------------
+    # w += sum_l D[l,i] ur[e,k,j,l]  ==  ur @ D
+    w = _dot(ur.reshape(e * n * n, n), D).reshape(e, n, n, n)
+    us_kij = us.transpose(0, 1, 3, 2)
+    w += _dot(us_kij.reshape(e * n * n, n), D).reshape(e, n, n, n).transpose(0, 1, 3, 2)
+    ut_jil = ut.reshape(e, n, n * n).transpose(0, 2, 1)
+    wt2 = _dot(ut_jil.reshape(e * n * n, n), D)
+    w += wt2.reshape(e, n * n, n).transpose(0, 2, 1).reshape(e, n, n, n)
+    return w.reshape(e, n ** 3)
 
 
 def nekbone_ax_kernel(u_ref, d_ref, dt_ref, g_ref, w_ref, *, n: int,
@@ -54,43 +110,13 @@ def nekbone_ax_kernel(u_ref, d_ref, dt_ref, g_ref, w_ref, *, n: int,
       g_ref:  (block_e, 6, n^3) metric (rr, rs, rt, ss, st, tt)
       w_ref:  (block_e, n^3)    output
     """
-    e, n3 = block_e, n ** 3
     f32 = jnp.float64 if u_ref.dtype == jnp.float64 else jnp.float32
     u = u_ref[...].astype(f32)
     D = d_ref[...].astype(f32)
     Dt = dt_ref[...].astype(f32)
-
-    # ---- forward gradient: fold (e,k,j) / (e,k,i) / (e,j,i) into M --------
-    # wr[e,k,j,i] = sum_l u[e,k,j,l] D[i,l]      (M = e*n^2, K = n, N = n)
-    wr = _dot(u.reshape(e * n * n, n), Dt).reshape(e, n, n, n)
-    # ws[e,k,j,i] = sum_l u[e,k,l,i] D[j,l]: transpose j<->i, contract, undo.
-    u_kij = u.reshape(e, n, n, n).transpose(0, 1, 3, 2)  # (e,k,i,l=j)
-    ws = _dot(u_kij.reshape(e * n * n, n), Dt)
-    ws = ws.reshape(e, n, n, n).transpose(0, 1, 3, 2)
-    # wt[e,k,j,i] = sum_l u[e,l,j,i] D[k,l]: contract the layer axis.
-    u_jil = u.reshape(e, n, n * n).transpose(0, 2, 1)    # (e, ji, l=k)
-    wt = _dot(u_jil.reshape(e * n * n, n), Dt)
-    wt = wt.reshape(e, n * n, n).transpose(0, 2, 1).reshape(e, n, n, n)
-
-    # ---- metric application (element-wise, VPU) ---------------------------
-    def gm(m):
-        return g_ref[:, m, :].astype(f32).reshape(e, n, n, n)  # noqa: B023
-
-    grr, grs, grt, gss, gst, gtt = (gm(m) for m in range(6))
-    ur = grr * wr + grs * ws + grt * wt
-    us = grs * wr + gss * ws + gst * wt
-    ut = grt * wr + gst * ws + gtt * wt
-
-    # ---- transposed gradient (same shapes, D^T) ---------------------------
-    # w += sum_l D[l,i] ur[e,k,j,l]  ==  ur @ D
-    w = _dot(ur.reshape(e * n * n, n), D).reshape(e, n, n, n)
-    us_kij = us.transpose(0, 1, 3, 2)
-    w += _dot(us_kij.reshape(e * n * n, n), D).reshape(e, n, n, n).transpose(0, 1, 3, 2)
-    ut_jil = ut.reshape(e, n, n * n).transpose(0, 2, 1)
-    wt2 = _dot(ut_jil.reshape(e * n * n, n), D)
-    w += wt2.reshape(e, n * n, n).transpose(0, 2, 1).reshape(e, n, n, n)
-
-    w_ref[...] = w.reshape(e, n3).astype(w_ref.dtype)
+    g = g_ref[...].astype(f32)
+    w = ax_block(u, D, Dt, g, n=n, e=block_e)
+    w_ref[...] = w.astype(w_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "block_e", "interpret"))
@@ -117,9 +143,104 @@ def nekbone_ax_pallas(u2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((block_e, n3), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((E, n3), u2.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
         name=f"nekbone_ax_n{n}_be{block_e}",
     )(u2, D, Dt, g2)
+
+
+# ---------------------------------------------------------------------------
+# Fused CG-iteration kernel: masked Ax + per-block partial inner products
+# ---------------------------------------------------------------------------
+
+def nekbone_ax_dots_kernel(p_ref, d_ref, dt_ref, g_ref, mask_ref, r_ref,
+                           c_ref, w_ref, pap_ref, rcz_ref, *, n: int,
+                           block_e: int):
+    """Masked Ax plus the two CG inner-product partials, one element block.
+
+    In the same VMEM residency as the operator this computes
+
+        w   = mask * (D^T G D p)                    (block output)
+        pap = sum(p * w)                            (per-block partial)
+        rcz = sum(r * c * r)                        (per-block partial)
+
+    ``pap`` relies on ``p`` being continuous (all copies of a shared node
+    equal — the CG invariant): then ``Σ_blocks pap == p·c·A p`` with
+    ``A = mask ∘ gs ∘ ax_local``, because the gather-scatter transfers onto
+    the other factor of the product (DESIGN.md §3.2).  ``rcz`` is the
+    weighted residual norm ``r·c·z`` with ``z = r`` (unpreconditioned CG).
+
+    Refs (VMEM blocks):
+      p_ref:    (block_e, n^3)     search direction
+      d_ref:    (n, n)             D;  dt_ref: (n, n)  D^T
+      g_ref:    (block_e, 6, n^3)  metric
+      mask_ref: (block_e, n^3)     Dirichlet mask (0/1)
+      r_ref:    (block_e, n^3)     residual
+      c_ref:    (block_e, n^3)     inner-product weight  mask/multiplicity
+      w_ref:    (block_e, n^3)     masked local Ax output
+      pap_ref:  (1, 1)             partial  Σ p * w
+      rcz_ref:  (1, 1)             partial  Σ r * c * r
+    """
+    f32 = jnp.float64 if p_ref.dtype == jnp.float64 else jnp.float32
+    p = p_ref[...].astype(f32)
+    D = d_ref[...].astype(f32)
+    Dt = dt_ref[...].astype(f32)
+    g = g_ref[...].astype(f32)
+    w = ax_block(p, D, Dt, g, n=n, e=block_e)
+    w = w * mask_ref[...].astype(f32)
+
+    r = r_ref[...].astype(f32)
+    c = c_ref[...].astype(f32)
+    pap_ref[0, 0] = jnp.sum(p * w).astype(pap_ref.dtype)
+    rcz_ref[0, 0] = jnp.sum(r * c * r).astype(rcz_ref.dtype)
+    w_ref[...] = w.astype(w_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_e", "interpret"))
+def nekbone_ax_dots_pallas(p2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
+                           g2: jnp.ndarray, mask2: jnp.ndarray,
+                           r2: jnp.ndarray, c2: jnp.ndarray, *, n: int,
+                           block_e: int, interpret: bool = False):
+    """Multi-output pallas_call for the fused CG iteration.
+
+    Args: all field operands pre-flattened to (E, n^3) (g2: (E, 6, n^3));
+    E divisible by block_e.  Returns ``(w2, pap_parts, rcz_parts)`` with the
+    partials of shape ``(E // block_e, 1)`` — tree-reduce them with
+    ``jnp.sum`` on the host side of the call.
+
+    Partials accumulate in f32 for <=f32 inputs and f64 for f64 (the paper's
+    precision, exercised through interpret mode).
+    """
+    E = p2.shape[0]
+    assert E % block_e == 0, (E, block_e)
+    n3 = n ** 3
+    nblk = E // block_e
+    acc = jnp.float64 if p2.dtype == jnp.float64 else jnp.float32
+    field = pl.BlockSpec((block_e, n3), lambda i: (i, 0))
+    part = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(nekbone_ax_dots_kernel, n=n, block_e=block_e),
+        grid=(nblk,),
+        in_specs=[
+            field,                                      # p
+            pl.BlockSpec((n, n), lambda i: (0, 0)),     # D
+            pl.BlockSpec((n, n), lambda i: (0, 0)),     # Dt
+            pl.BlockSpec((block_e, 6, n3), lambda i: (i, 0, 0)),  # g
+            field,                                      # mask
+            field,                                      # r
+            field,                                      # c
+        ],
+        out_specs=(field, part, part),
+        out_shape=(
+            jax.ShapeDtypeStruct((E, n3), p2.dtype),
+            jax.ShapeDtypeStruct((nblk, 1), acc),
+            jax.ShapeDtypeStruct((nblk, 1), acc),
+        ),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+        name=f"nekbone_ax_dots_n{n}_be{block_e}",
+    )(p2, D, Dt, g2, mask2, r2, c2)

@@ -13,11 +13,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _autotune
 from repro.kernels import flash_attn as _flash
 from repro.kernels import nekbone_ax as _ax
 from repro.kernels import wkv6 as _wkv6
 
-__all__ = ["nekbone_ax", "flash_attention", "wkv6", "default_interpret"]
+__all__ = ["nekbone_ax", "nekbone_ax_dots", "flash_attention", "wkv6",
+           "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -25,18 +27,13 @@ def default_interpret() -> bool:
 
 
 def _pick_block_e(E: int, n: int, vmem_budget_bytes: int = 8 * 2 ** 20) -> int:
-    """Largest power-of-two element block whose working set fits the budget.
+    """Back-compat alias for the VMEM heuristic (see kernels/autotune.py).
 
-    The kernel keeps ~14 block-sized fp32 arrays live (u, w, 6 metric fields,
-    3 gradients + 3 temporaries); lanes pad n^3 up to a multiple of 128.
+    Default ``block_e`` selection now goes through the cached
+    :func:`repro.kernels.autotune.pick_block_e`, which measures candidates
+    on real TPUs; this name is kept for callers of the static heuristic.
     """
-    n3_padded = -(-(n ** 3) // 128) * 128
-    per_elem = 14 * n3_padded * 4
-    be = max(1, vmem_budget_bytes // per_elem)
-    be = 1 << (be.bit_length() - 1)            # floor to power of two
-    while be > 1 and E % be:
-        be //= 2
-    return be
+    return _autotune.vmem_block_e(E, n, vmem_budget_bytes)
 
 
 @functools.partial(jax.jit,
@@ -68,13 +65,49 @@ def nekbone_ax(u: jnp.ndarray, D: jnp.ndarray, g: jnp.ndarray, *,
     E = u.shape[0]
     n = u.shape[-1]
     interpret = default_interpret() if interpret is None else interpret
-    block_e = block_e or _pick_block_e(E, n)
+    block_e = block_e or _autotune.pick_block_e(E, n, u.dtype)
     pad = (-E) % block_e
     if pad:
         u = jnp.concatenate([u, jnp.zeros((pad,) + u.shape[1:], u.dtype)])
         g = jnp.concatenate([g, jnp.zeros((pad,) + g.shape[1:], g.dtype)])
     w = _nekbone_ax_impl(u, D, jnp.asarray(D).T, g, block_e, interpret)
     return w[:E] if pad else w
+
+
+def nekbone_ax_dots(p: jnp.ndarray, D: jnp.ndarray, g: jnp.ndarray,
+                    mask: jnp.ndarray, r: jnp.ndarray, c: jnp.ndarray, *,
+                    block_e: int | None = None,
+                    interpret: bool | None = None):
+    """Fused CG-iteration kernel: masked local Ax + the two inner products.
+
+    Args:
+      p, r: (E, n, n, n) search direction / residual (p continuous).
+      D: (n, n); g: (E, 6, n, n, n); mask, c: (E, n, n, n).
+
+    Returns ``(w, pap, rcz)``: the *masked local* operator output (still to
+    be assembled with gs — mask and gs commute) and the tree-reduced scalars
+    ``pap == p·c·(mask gs w)`` and ``rcz == r·c·r``.  Zero-padded blocks
+    contribute zero to both partials, so arbitrary E is safe.
+    """
+    E = p.shape[0]
+    n = p.shape[-1]
+    interpret = default_interpret() if interpret is None else interpret
+    block_e = block_e or _autotune.pick_block_e(E, n, p.dtype)
+    pad = (-E) % block_e
+    if pad:
+        def zpad(x):
+            return jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+
+        p, g, mask, r, c = map(zpad, (p, g, mask, r, c))
+    Ep = p.shape[0]
+    n3 = n ** 3
+    w2, pap_b, rcz_b = _ax.nekbone_ax_dots_pallas(
+        p.reshape(Ep, n3), jnp.asarray(D), jnp.asarray(D).T,
+        g.reshape(Ep, 6, n3), mask.reshape(Ep, n3), r.reshape(Ep, n3),
+        c.reshape(Ep, n3), n=n, block_e=block_e, interpret=interpret)
+    w = w2.reshape(Ep, n, n, n)
+    return (w[:E] if pad else w), jnp.sum(pap_b), jnp.sum(rcz_b)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,

@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.compat import CompilerParams as _CompilerParams
+
 __all__ = ["wkv6"]
 
 
@@ -158,7 +160,7 @@ def wkv6(r, k, v, w, u, *, initial_state=None, return_state: bool = False,
             jax.ShapeDtypeStruct((B * H, d, d), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name=f"wkv6_{variant}_bt{bt}",

@@ -32,6 +32,8 @@ import traceback
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import set_mesh, shard_map
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -159,7 +161,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *,
         rec["skipped"] = "pure full attention (sub-quadratic rule)"
         return rec
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         avals, pspecs = input_specs(cfg, cell, mesh)
         params_aval = jax.eval_shape(
             lambda: Mdl.init_params(jax.random.PRNGKey(0), cfg))
@@ -311,12 +313,12 @@ def run_nekbone(mesh_kind: str, nelt_per_device: int = 1024,
     m_aval = jax.ShapeDtypeStruct((E, 10, 10, 10), dt)
 
     espec = P(axes)     # elements sharded over ALL mesh axes (z-major)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         op = case.sharded_ax_full(axes)
 
         def cg_iter(u, g, mask, c):
             # one matrix-free CG-style application + the vector ops
-            w = jax.shard_map(
+            w = shard_map(
                 lambda ul, gl, ml: op(ul, gl, ml, (16, 16, 4)),
                 mesh=mesh,
                 in_specs=(espec, P(axes, None), espec),

@@ -38,7 +38,9 @@ _TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
 _CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
 _DOT_RE = re.compile(
-    r"=\s*([a-z]+\d*)\[([0-9,]*)\][^=]*?\bdot\(\s*%?([\w.\-]+)")
+    r"=\s*([a-z]+\d*)\[([0-9,]*)\][^=]*?\bdot\(\s*"
+    # newer dumps carry the operand shape inline: dot(f32[64,128]{1,0} %lhs
+    r"(?:[a-z]+\d*\[([0-9,]*)\](?:\{[0-9,]*\})?\s+)?%?([\w.\-]+)")
 _LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _COLL_RE = re.compile(
     r"=\s*([^=]*?)\s*"
@@ -137,13 +139,16 @@ def _dot_flops(lines) -> float:
         m = _DOT_RE.search(line)
         if not m:
             continue
-        _, odims, lhs_name = m.groups()
+        _, odims, lhs_dims_inline, lhs_name = m.groups()
         out_elems = _elems(odims)
         k = 1
-        lhs = shapes.get(lhs_name)
+        lhs_dims = lhs_dims_inline
+        if lhs_dims is None:
+            lhs = shapes.get(lhs_name)
+            lhs_dims = lhs[1] if lhs else None
         cm = _LHS_C_RE.search(line)
-        if lhs and cm:
-            ldims = [int(x) for x in lhs[1].split(",") if x]
+        if lhs_dims is not None and cm:
+            ldims = [int(x) for x in lhs_dims.split(",") if x]
             for idx in cm.group(1).split(","):
                 if idx:
                     k *= ldims[int(idx)]

@@ -24,6 +24,8 @@ import math
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import RULES, constrain
@@ -243,7 +245,7 @@ def _seq_sharded_chunked(q, k, v, *, causal, window, cap, scale):
                         block_q=bq, block_k=bk)
 
     kv_spec = (P(dp, None, tp, None) if halo else P(dp, None, None, None))
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(dp, None, tp, None), kv_spec, kv_spec),
         out_specs=P(dp, None, tp, None), check_vma=False)(q, k, v)
@@ -361,7 +363,7 @@ def _decode_attn_seq_sharded(q, cache_k, cache_v, k_new, v_new, cache_index,
 
     kv_spec = P(dp, head_axis, axis, None)
     rep = P(dp, head_axis, None, None)
-    out, kc, vc = jax.shard_map(
+    out, kc, vc = shard_map(
         body, mesh=mesh,
         in_specs=(rep, kv_spec, kv_spec, rep, rep),
         out_specs=(rep, kv_spec, kv_spec), check_vma=False,

@@ -25,6 +25,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import RULES, constrain, current_mesh
@@ -153,6 +155,6 @@ def moe_ffn(x: jnp.ndarray, p: dict, cfg) -> jnp.ndarray:
                 P(tp, None, None))
     args = (x, p["router"], p["w_in"],
             gate_w if has_gate else jnp.zeros((), cdt), p["w_out"])
-    out = jax.shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+    out = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
                         out_specs=P(dp, None, None), check_vma=False)(*args)
     return out.astype(x.dtype)

@@ -1,0 +1,106 @@
+"""Deterministic stand-in for ``hypothesis`` (used when it isn't installed).
+
+This container has no ``hypothesis`` package and nothing may be installed,
+so ``conftest.py`` registers this module as ``hypothesis`` in ``sys.modules``
+before test collection.  It implements exactly the surface the test suite
+uses — ``given``, ``settings`` and the ``strategies`` namespace — by drawing
+a fixed number of examples from a PRNG seeded with the test's qualified
+name, so every run explores the same inputs (reproducible by construction;
+no shrinking, no example database).
+
+If real hypothesis is present, conftest leaves it alone and this module is
+never imported.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+MAX_EXAMPLES = 5  # global cap: property tests stay fast without hypothesis
+
+
+class _Strategy:
+    """A value generator: ``draw(rnd) -> value``."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def _booleans():
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def _none():
+    return _Strategy(lambda r: None)
+
+
+def _sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda r: r.choice(seq))
+
+
+def _one_of(*strategies_):
+    return _Strategy(lambda r: r.choice(strategies_).example(r))
+
+
+def _tuples(*strategies_):
+    return _Strategy(lambda r: tuple(s.example(r) for s in strategies_))
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    booleans=_booleans,
+    none=_none,
+    sampled_from=_sampled_from,
+    one_of=_one_of,
+    tuples=_tuples,
+)
+
+
+def settings(*_args, max_examples: int | None = None, **_kwargs):
+    """Records ``max_examples`` on the decorated function; other knobs
+    (deadline, database, ...) have no meaning here and are ignored."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**kwargs):
+    """Runs the test for ``min(max_examples, MAX_EXAMPLES)`` deterministic
+    draws.  The PRNG is seeded with the test's qualname so each test sees a
+    stable, test-specific input sequence across runs and processes."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **fixture_kwargs):
+            cap = getattr(wrapper, "_stub_max_examples", None) or MAX_EXAMPLES
+            rnd = random.Random(fn.__qualname__)
+            for _ in range(min(cap, MAX_EXAMPLES)):
+                drawn = {name: s.example(rnd) for name, s in kwargs.items()}
+                fn(*args, **fixture_kwargs, **drawn)
+
+        # Hide the strategy-bound parameters from pytest's fixture
+        # resolution (real hypothesis does the same).
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in kwargs])
+        return wrapper
+
+    return deco

@@ -1,12 +1,31 @@
 # NOTE: deliberately no XLA_FLAGS device-count override here — smoke tests
 # and benches must see the real single CPU device.  Multi-device behaviour
 # is tested via subprocesses (tests/test_distributed.py) and the dry-run.
+import importlib.util
 import os
+import pathlib
+import sys
 
 import numpy as np
 import pytest
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# ---------------------------------------------------------------------------
+# hypothesis fallback: this container has no `hypothesis` and nothing may be
+# installed, so register tests/_hypothesis_stub.py (deterministic fixed-seed
+# example drawing) as the `hypothesis` module before collection imports the
+# property-test modules.  Real hypothesis, when present, wins.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", pathlib.Path(__file__).with_name("_hypothesis_stub.py"))
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _stub.strategies
 
 
 @pytest.fixture

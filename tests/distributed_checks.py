@@ -10,8 +10,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
+import jax.numpy as jnp
+
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.compat import axis_size, make_mesh, set_mesh, shard_map  # noqa: E402
 
 
 def check(name, cond):
@@ -21,13 +24,11 @@ def check(name, cond):
 
 
 def mesh2d():
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((2, 4), ("data", "model"))
 
 
 def mesh1d(name="data"):
-    return jax.make_mesh((8,), (name,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((8,), (name,))
 
 
 # ---------------------------------------------------------------------------
@@ -40,7 +41,7 @@ def check_compressed_psum():
     def f(x):
         return compressed_psum(x, "pod")
 
-    y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
+    y = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod"),
                               out_specs=P("pod")))(x)
     exact = jnp.broadcast_to(x.reshape(8, 1, 64).sum(0), (8, 64))
     # bf16 wire: ~3 decimal digits
@@ -50,7 +51,7 @@ def check_compressed_psum():
     def fq(x):
         return quantized_psum(x, "pod")
 
-    yq = jax.jit(jax.shard_map(fq, mesh=mesh, in_specs=P("pod"),
+    yq = jax.jit(shard_map(fq, mesh=mesh, in_specs=P("pod"),
                                out_specs=P("pod")))(x)
     relq = float(jnp.abs(yq - x.sum(0)).max() / (jnp.abs(x.sum(0)).max()))
     check("quantized_psum_int8", relq < 5e-2)
@@ -69,7 +70,7 @@ def check_collective_matmul():
 
     # after the full ring pass every shard holds the identical full result;
     # the VMA checker can't infer that, hence check_vma=False.
-    y_full = jax.jit(jax.shard_map(
+    y_full = jax.jit(shard_map(
         f, mesh=mesh, in_specs=(P("model"), P()), out_specs=P(),
         check_vma=False))(x, w)
     want = x @ w
@@ -93,7 +94,7 @@ def check_cp_decode_attention():
         return cp_decode_attention(q, k, v, axis_name="data",
                                    kv_valid_len=valid)
 
-    got = jax.jit(jax.shard_map(
+    got = jax.jit(shard_map(
         f, mesh=mesh,
         in_specs=(P(), P(None, None, "data", None),
                   P(None, None, "data", None)),
@@ -115,7 +116,7 @@ def check_sharded_gather_scatter():
     def f(u_loc):
         return ds_sum_sharded(u_loc, gridl, ("data",))
 
-    got = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"),
+    got = jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"),
                                 out_specs=P("data")))(u)
     want = ds_sum_local(u, (2, 3, 16))  # global grid: z stacked over shards
     err = float(jnp.abs(got - want).max())
@@ -125,8 +126,7 @@ def check_sharded_gather_scatter():
 def check_sharded_gs_hierarchical():
     from repro.core.gs import ds_sum_local, ds_sum_sharded
 
-    mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("pod", "data"))
     n, gridl = 3, (2, 2, 2)
     E_loc = 8
     rng = np.random.default_rng(4)
@@ -135,7 +135,7 @@ def check_sharded_gs_hierarchical():
     def f(u_loc):
         return ds_sum_sharded(u_loc, gridl, ("pod", "data"))
 
-    got = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
+    got = jax.jit(shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
                                 out_specs=P(("pod", "data"))))(u)
     want = ds_sum_local(u, (2, 2, 16))
     err = float(jnp.abs(got - want).max())
@@ -164,7 +164,7 @@ def check_sharded_nekbone_cg():
 
     E = case.mesh.nelt
     espec = P("data")
-    x = jax.jit(jax.shard_map(
+    x = jax.jit(shard_map(
         solve_sharded, mesh=mesh,
         in_specs=(espec, P("data"), espec, espec),
         out_specs=espec))(f, case.g, case.mask, case.c)
@@ -186,7 +186,7 @@ def check_seq_sharded_attention():
     for window in (None, 32):
         want = _chunked(q, k, v, causal=True, window=window, cap=None,
                         scale=d ** -0.5, q_offset=0, block_q=64, block_k=64)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             got = jax.jit(lambda q, k, v, w=window: _seq_sharded_chunked(
                 q, k, v, causal=True, window=w, cap=None,
                 scale=d ** -0.5))(q, k, v)
@@ -227,7 +227,7 @@ def check_seq_sharded_decode():
     idx = jnp.asarray(17, jnp.int32)
     out_plain, nc_plain = A.decode_attention(x, p, cfg, cache, idx, window=9)
     mesh = mesh2d()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         out_s, nc_s = jax.jit(
             lambda x, c: A.decode_attention(x, p, cfg, c, idx, window=9))(
                 x, cache)
@@ -259,7 +259,7 @@ def check_moe_shardmap_equals_local():
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
     y_local = moe_ffn(x, p, cfg)
     mesh = mesh2d()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y_sharded = jax.jit(lambda x: moe_ffn(x, p, cfg))(x)
     err = float(jnp.abs(y_sharded - y_local).max())
     check("moe_shardmap_equals_local", err < 1e-5)
@@ -269,8 +269,7 @@ def check_pipeline_parallel():
     """2-stage GPipe pipeline == sequential application of both stages."""
     from repro.distributed.pipeline import pipeline_apply
 
-    mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("pod", "data"))
     rng = np.random.default_rng(7)
     L, M, mb, d = 4, 6, 3, 16             # 4 layers -> 2 stages x 2 layers
     Ws = jnp.asarray(rng.normal(size=(L, d, d)) * 0.3, jnp.float32)
@@ -291,10 +290,10 @@ def check_pipeline_parallel():
             out = pipeline_apply(ws_local[0], x_full, stage_fn,
                                  axis_name="pod")
             sid = jax.lax.axis_index("pod")
-            S = jax.lax.axis_size("pod")
+            S = axis_size("pod")
             return jnp.where(sid == S - 1, out, 0.0)[None]
 
-        out = jax.shard_map(
+        out = shard_map(
             body, mesh=mesh,
             in_specs=(P("pod"), P()), out_specs=P("pod"),
             check_vma=False)(ws, x)

@@ -1,0 +1,75 @@
+"""block_e autotuner: heuristic bounds, measurement path, cache behavior."""
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import autotune
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+def test_vmem_heuristic_fits_budget():
+    for n in (4, 8, 10, 12, 16):
+        be = autotune.vmem_block_e(1024, n)
+        n3p = -(-(n ** 3) // 128) * 128
+        assert be >= 1
+        assert 14 * n3p * 4 * be <= autotune.VMEM_BUDGET_BYTES
+
+
+def test_candidates_divide_E():
+    for E in (6, 8, 24, 1024):
+        cands = autotune.candidate_blocks(E, 10)
+        assert cands, (E,)
+        assert all(E % be == 0 for be in cands)
+        assert cands == sorted(cands, reverse=True)
+
+
+def test_pick_is_cached_per_key():
+    calls = []
+
+    def measure(be):
+        calls.append(be)
+        return float(be)            # smaller block "faster": picks 1
+
+    be1 = autotune.pick_block_e(8, 4, jnp.float32, backend="tpu",
+                                measure=measure)
+    assert be1 == 1
+    n_calls = len(calls)
+    assert n_calls == len(autotune.candidate_blocks(8, 4))
+
+    # same key: served from cache, measure never re-runs
+    be2 = autotune.pick_block_e(8, 4, jnp.float32, backend="tpu",
+                                measure=measure)
+    assert be2 == be1
+    assert len(calls) == n_calls
+
+    # different dtype / backend / shape are distinct cache keys
+    autotune.pick_block_e(8, 4, jnp.float64, backend="tpu", measure=measure)
+    assert len(calls) > n_calls
+    assert len(autotune.cache_info()) == 2
+
+
+def test_cpu_backend_uses_heuristic_without_measuring():
+    def boom(be):
+        raise AssertionError("must not measure on cpu")
+
+    be = autotune.pick_block_e(64, 10, jnp.float32, backend="cpu")
+    assert be == autotune.candidate_blocks(64, 10)[0]
+    assert (10, 64, "float32", "cpu") in autotune.cache_info()
+
+
+def test_measured_winner_beats_heuristic_order():
+    # fastest candidate in the middle of the ladder must win
+    target = {8: 3.0, 4: 1.0, 2: 2.0, 1: 5.0}
+
+    def measure(be):
+        return target[be]
+
+    be = autotune.pick_block_e(8, 4, jnp.float32, backend="tpu",
+                               measure=measure)
+    assert be == 4
