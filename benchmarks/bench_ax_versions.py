@@ -11,11 +11,14 @@ optimized CUDA) on P100/V100.  The CPU-container analog compares:
                    column reports the HBM-traffic ratio from the HLO
                    instead — the quantity the kernel actually optimizes).
 
-The ladder's new top rung is the *fused CG iteration* (core/cg_fused.py):
-one multi-output Pallas call per iteration carrying the mask and both
-weighted dots with it.  Its derived column reports the Eq.-2 stream
-accounting (30 streams -> 19, DESIGN.md §3.3); interpret-mode wall time is
-reported for completeness but is emulator time, not hardware time.
+The ladder's top rungs are the *fused CG iterations* (core/cg_fused.py):
+v1 runs one multi-output Pallas call per iteration carrying the mask and
+the p·c·Ap partial with it (30 Eq.-2 streams -> 17 with the carried r·c·r,
+DESIGN.md §3.3); v2 runs the whole iteration in two slab-resident Pallas
+kernels — in-kernel gather-scatter, merged vector updates, structural
+mask/weight, diagonal metric — for 13 streams (DESIGN.md §3.4).
+Interpret-mode wall time is reported for completeness but is emulator
+time, not hardware time; the derived stream ratios are the claims.
 
 CSV: name,us_per_call,derived  where derived = achieved GFLOP/s (model
 flops C_ax = D*(12n+17)) for timed variants.
@@ -35,6 +38,7 @@ import jax.numpy as jnp
 from repro.core.ax import ax_local_fused, ax_local_listing1
 from repro.core.cost import (CG_READ_STREAMS, CG_WRITE_STREAMS,
                              FUSED_CG_READ_STREAMS, FUSED_CG_WRITE_STREAMS,
+                             FUSED_V2_READ_STREAMS, FUSED_V2_WRITE_STREAMS,
                              ax_local_flops, cg_iter_flops)
 from repro.core.sem import derivative_matrix
 from repro.kernels import ops
@@ -86,12 +90,16 @@ def run():
         rows.append((f"ax_pallas_e{E}", t_pl * 1e6,
                      f"temp_l1/fused={tr:.2f}x;streams_14v8=1.75x"))
 
-        # fused CG iteration (the ladder's next rung, DESIGN.md §3): one
-        # multi-output Pallas call per iteration replaces operator + mask +
-        # two standalone reductions.  Timed for one interpret-mode iteration
-        # (emulator time — the derived stream ratio is the claim).
-        rows.append((f"cg_fused_iter_e{E}", _time_cg_fused(E) * 1e6,
+        # fused CG iteration rungs (DESIGN.md §3): v1 — one multi-output
+        # Pallas call per iteration replaces operator + mask + the p·c·Ap
+        # reduction; v2 — the whole iteration in two slab-resident kernels
+        # (in-kernel gather-scatter + merged vector updates).  Timed for one
+        # interpret-mode iteration (emulator time — the derived stream
+        # ratios are the claims).
+        rows.append((f"cg_fused_iter_e{E}", _time_cg_fused(E, "v1") * 1e6,
                      _fused_streams_derived()))
+        rows.append((f"cg_fused_v2_iter_e{E}", _time_cg_fused(E, "v2") * 1e6,
+                     _fused_v2_streams_derived()))
     return rows
 
 
@@ -102,18 +110,33 @@ def _fused_streams_derived() -> str:
             f";flops={cg_iter_flops(1, N_GLL)}perDOF")
 
 
-def _time_cg_fused(E: int) -> float:
+def _fused_v2_streams_derived() -> str:
+    base = CG_READ_STREAMS + CG_WRITE_STREAMS
+    v2 = FUSED_V2_READ_STREAMS + FUSED_V2_WRITE_STREAMS
+    return (f"streams_{base}v{v2}={base / v2:.2f}x"
+            f";streams_iter={v2}")
+
+
+def _time_cg_fused(E: int, version: str) -> float:
     from repro.configs.nekbone import PAPER_CASES
-    from repro.core.cg_fused import cg_fused_fixed_iters
+    from repro.core.cg_fused import (cg_fused_fixed_iters,
+                                     cg_fused_v2_fixed_iters)
     from repro.core.nekbone import NekboneCase
 
     grid = (PAPER_CASES[E].grid if E in PAPER_CASES else (2, 2, E // 4))
     case = NekboneCase(n=N_GLL, grid=grid, dtype=jnp.float32)
     _, f = case.manufactured()
 
-    def one_iter():
-        return cg_fused_fixed_iters(f, D=case.D, g=case.g, mask=case.mask,
-                                    c=case.c, grid=case.grid, niter=1)
+    if version == "v2":
+        def one_iter():
+            return cg_fused_v2_fixed_iters(f, D=case.D, g=case.g,
+                                           grid=case.grid, niter=1,
+                                           mask=case.mask, c=case.c)
+    else:
+        def one_iter():
+            return cg_fused_fixed_iters(f, D=case.D, g=case.g,
+                                        mask=case.mask, c=case.c,
+                                        grid=case.grid, niter=1)
 
     jax.block_until_ready(one_iter().x)       # compile / warm, like _time()
     t0 = time.perf_counter()

@@ -4,9 +4,12 @@ Counts the *compiled* work of one CG iteration (loop-corrected dot flops
 from the HLO + cost_analysis bytes) against the paper's model
 ``C(D, n) = D (12n + 34)`` and the 24D-read/6D-write traffic, across
 polynomial degrees — then repeats the byte accounting for the *step-fused*
-iteration (core/cg_fused.py), whose analytic budget is 15D reads / 4D
-writes (DESIGN.md §3.3).  CSV derived column: measured/model ratios, and
-for the fused rows the achieved-vs-Eq.-2 stream counts.
+iterations (core/cg_fused.py): v1's analytic budget is 13D reads / 4D
+writes (DESIGN.md §3.3, with the carried r·c·r) and v2's is 9D reads / 4D
+writes (DESIGN.md §3.4 — two slab-resident kernels, zero standalone
+full-field passes).  CSV derived column: measured/model ratios, and for
+the fused rows the achieved-vs-Eq.-2 stream counts (the v2 row carries the
+headline ``streams/iter`` number).
 
 Set ``REPRO_BENCH_QUICK=1`` to shrink the sweep (CI smoke).
 """
@@ -19,8 +22,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost import (cg_iter_bytes, cg_iter_flops, fused_cg_iter_bytes,
-                             fused_intensity, intensity)
+from repro.core.cost import (FUSED_CG_READ_STREAMS, FUSED_CG_WRITE_STREAMS,
+                             FUSED_V2_READ_STREAMS, FUSED_V2_WRITE_STREAMS,
+                             cg_iter_bytes, cg_iter_flops, fused_cg_iter_bytes,
+                             fused_intensity, fused_v2_cg_iter_bytes,
+                             fused_v2_intensity, fused_v2_plane_streams,
+                             intensity)
 from repro.core.nekbone import NekboneCase
 from repro.launch.hlo_analysis import analyze_hlo
 
@@ -66,15 +73,34 @@ def run():
         # are exactly the 10-read/1-write set); the remaining vector pass is
         # counted from the fused-iteration model.  Report both the analytic
         # budget ratio and XLA's byte estimate of the whole fused iteration.
+        v1_streams = FUSED_CG_READ_STREAMS + FUSED_CG_WRITE_STREAMS
         fused_model_bytes = sum(fused_cg_iter_bytes(D, itemsize=4))
         rows.append((f"eq2_fused_streams_n{n}", 0.0,
-                     f"fused/eq2={fused_model_bytes / model_bytes:.3f}"
+                     f"streams/iter={v1_streams}"
+                     f";fused/eq2={fused_model_bytes / model_bytes:.3f}"
                      f";I_fused={fused_intensity(n, 4):.3f}flop/B"))
 
-        fused_bytes = _fused_iteration_bytes(n)
+        fused_bytes = _fused_iteration_bytes(n, "v1")
         if fused_bytes is not None:
             rows.append((f"eq2_fused_xla_n{n}", 0.0,
                          f"xla/fusedmodel={fused_bytes / fused_model_bytes:.3f}"))
+
+        # --- v2: whole iteration in two slab kernels (DESIGN.md §3.4) -----
+        # The analytic budget is the claim: 9R + 4W full-field streams; the
+        # O(E n^2) boundary-plane side channel is reported as the fraction
+        # of one stream it costs at sz=1 (the worst slab split).
+        v2_streams = FUSED_V2_READ_STREAMS + FUSED_V2_WRITE_STREAMS
+        v2_model_bytes = sum(fused_v2_cg_iter_bytes(D, itemsize=4))
+        rows.append((f"eq2_fused_v2_streams_n{n}", 0.0,
+                     f"streams/iter={v2_streams}"
+                     f";v2/eq2={v2_model_bytes / model_bytes:.3f}"
+                     f";I_v2={fused_v2_intensity(n, 4):.3f}flop/B"
+                     f";planes={fused_v2_plane_streams(n, 1):.3f}str"))
+
+        v2_bytes = _fused_iteration_bytes(n, "v2")
+        if v2_bytes is not None:
+            rows.append((f"eq2_fused_v2_xla_n{n}", 0.0,
+                         f"xla/v2model={v2_bytes / v2_model_bytes:.3f}"))
     return rows
 
 
@@ -87,21 +113,27 @@ def _bytes_accessed(compiled) -> float:
     return float(ca.get("bytes accessed", 0))
 
 
-def _fused_iteration_bytes(n: int) -> float | None:
+def _fused_iteration_bytes(n: int, version: str) -> float | None:
     """XLA's byte estimate for one step-fused CG iteration (niter=1 solve).
 
     Interpret-mode Pallas lowers to ordinary HLO on CPU, so cost_analysis
     over-counts relative to a real TPU pallas_call; the analytic rows above
     are the load-bearing ones and this is a cross-check only.
     """
-    from repro.core.cg_fused import cg_fused_fixed_iters
+    from repro.core.cg_fused import (cg_fused_fixed_iters,
+                                     cg_fused_v2_fixed_iters)
 
-    case = NekboneCase(n=n, grid=GRID, dtype=jnp.float32,
-                       ax_impl="pallas_fused_cg")
+    case = NekboneCase(n=n, grid=GRID, dtype=jnp.float32)
 
-    def one_iter(f):
-        return cg_fused_fixed_iters(f, D=case.D, g=case.g, mask=case.mask,
-                                    c=case.c, grid=case.grid, niter=1).x
+    if version == "v2":
+        def one_iter(f):
+            return cg_fused_v2_fixed_iters(f, D=case.D, g=case.g,
+                                           grid=case.grid, niter=1).x
+    else:
+        def one_iter(f):
+            return cg_fused_fixed_iters(f, D=case.D, g=case.g,
+                                        mask=case.mask, c=case.c,
+                                        grid=case.grid, niter=1).x
 
     try:
         aval = jax.ShapeDtypeStruct(case.mask.shape, jnp.float32)

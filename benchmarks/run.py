@@ -3,22 +3,68 @@
 roofline), §III-A Eq. 1-2 (cost-model adherence).
 
   PYTHONPATH=src python -m benchmarks.run
+
+Besides the CSV on stdout, the full result set is written as
+``BENCH_<tag>.json`` (machine readable: rows + the stream-per-iteration
+ladder + us/call) under ``$REPRO_BENCH_DIR`` (default ``benchmarks/out``),
+with ``tag`` from ``$REPRO_BENCH_TAG`` (default ``local``) — CI uploads it
+as an artifact so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
+import pathlib
 import sys
+
+
+def _bench_json_path() -> pathlib.Path:
+    out_dir = pathlib.Path(os.environ.get("REPRO_BENCH_DIR",
+                                          "benchmarks/out"))
+    tag = os.environ.get("REPRO_BENCH_TAG", "local")
+    return out_dir / f"BENCH_{tag}.json"
 
 
 def main() -> None:
     from benchmarks import bench_ax_versions, bench_cost_model, bench_roofline
+    from repro.core import cost
 
+    sections = []
     print("name,us_per_call,derived")
     for mod, title in ((bench_ax_versions, "Fig2/3: Ax version ladder"),
                        (bench_roofline, "Fig4: measured roofline"),
                        (bench_cost_model, "Eq1-2: cost model")):
         print(f"# --- {title} ---", file=sys.stderr)
+        rows = []
         for name, us, derived in mod.run():
             print(f"{name},{us:.1f},{derived}")
+            rows.append({"name": name, "us_per_call": round(us, 1),
+                         "derived": derived})
+        sections.append({"title": title, "module": mod.__name__,
+                         "rows": rows})
+
+    payload = {
+        "schema": "repro-bench/1",
+        "tag": os.environ.get("REPRO_BENCH_TAG", "local"),
+        "quick": bool(os.environ.get("REPRO_BENCH_QUICK")),
+        # the Eq.-2 fusion ladder this repo climbs (reads+writes per DOF
+        # per CG iteration) — the cross-PR perf-trajectory headline.
+        "streams_per_iter": {
+            "eq2": cost.CG_READ_STREAMS + cost.CG_WRITE_STREAMS,
+            "fused_v1": (cost.FUSED_CG_READ_STREAMS
+                         + cost.FUSED_CG_WRITE_STREAMS),
+            "fused_v2": (cost.FUSED_V2_READ_STREAMS
+                         + cost.FUSED_V2_WRITE_STREAMS),
+        },
+        "sections": sections,
+    }
+    path = _bench_json_path()
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(payload, indent=1))
+        print(f"# wrote {path}", file=sys.stderr)
+    except OSError as e:                      # read-only checkout: CSV stands
+        print(f"# could not write {path}: {e}", file=sys.stderr)
 
 
 if __name__ == '__main__':

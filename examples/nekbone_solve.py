@@ -55,25 +55,33 @@ def main():
     for E in sweep:
         case, f, u_ex = run_case(E, args.iters)
 
-    print("\n== fused CG iteration (Pallas pipeline, DESIGN.md §3) ==")
-    # One multi-output Pallas call per iteration: masked Ax + both weighted
-    # dots leave the kernel as per-block partials (15R+4W streams vs Eq. 2's
-    # 24R+6W).  Interpret mode off-TPU: correctness, not speed — compare the
-    # residual history against the XLA path on a small case.
+    print("\n== fused CG iteration (Pallas pipelines, DESIGN.md §3) ==")
+    # v1: one multi-output Pallas call per iteration (masked Ax + the p·c·Ap
+    # partial; r·c·r carried through the loop state).  v2: the whole
+    # iteration in two slab-resident kernels — in-kernel gather-scatter with
+    # O(n^2) boundary-plane side channels, merged vector updates, structural
+    # mask/weight, diagonal metric.  Interpret mode off-TPU: correctness,
+    # not speed — compare residual histories against the XLA path.
     from repro.core.cost import (CG_READ_STREAMS, CG_WRITE_STREAMS,
-                                 FUSED_CG_READ_STREAMS, FUSED_CG_WRITE_STREAMS)
+                                 FUSED_CG_READ_STREAMS,
+                                 FUSED_CG_WRITE_STREAMS,
+                                 FUSED_V2_READ_STREAMS,
+                                 FUSED_V2_WRITE_STREAMS)
 
     small = NekboneCase(n=6, grid=(2, 2, 2), dtype=jnp.float32,
-                        ax_impl="pallas_fused_cg")
-    res_f, _ = small.solve_manufactured(niter=10)
-    small.ax_impl = "fused"
+                        ax_impl="fused")
     res_x, _ = small.solve_manufactured(niter=10)
-    drift = float(jnp.nanmax(jnp.abs(res_f.rnorm_history -
-                                     res_x.rnorm_history) /
-                             jnp.abs(res_x.rnorm_history)))
     print(f"streams/iter: {CG_READ_STREAMS}R+{CG_WRITE_STREAMS}W (Eq. 2) -> "
-          f"{FUSED_CG_READ_STREAMS}R+{FUSED_CG_WRITE_STREAMS}W (fused)")
-    print(f"residual-history drift vs XLA CG over 10 iters: {drift:.2e}")
+          f"{FUSED_CG_READ_STREAMS}R+{FUSED_CG_WRITE_STREAMS}W (fused v1) -> "
+          f"{FUSED_V2_READ_STREAMS}R+{FUSED_V2_WRITE_STREAMS}W (fused v2)")
+    for impl in ("pallas_fused_cg", "pallas_fused_cg_v2"):
+        small.ax_impl = impl
+        res_f, _ = small.solve_manufactured(niter=10)
+        drift = float(jnp.nanmax(jnp.abs(res_f.rnorm_history -
+                                         res_x.rnorm_history) /
+                                 jnp.abs(res_x.rnorm_history)))
+        print(f"residual-history drift vs XLA CG over 10 iters "
+              f"({impl}): {drift:.2e}")
 
     print("\n== beyond-paper: Jacobi preconditioning ==")
     r_plain, _ = case.solve_manufactured(tol=1e-6, max_iter=500)

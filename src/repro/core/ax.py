@@ -89,17 +89,18 @@ def ax_local_fused(u: jnp.ndarray, D: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarra
 def ax_local(u: jnp.ndarray, D: jnp.ndarray, g: jnp.ndarray, *,
              impl: str = "fused", **kw) -> jnp.ndarray:
     """Dispatch between implementations (``listing1`` | ``fused`` |
-    ``pallas`` | ``pallas_fused_cg``).
+    ``pallas`` | ``pallas_fused_cg`` | ``pallas_fused_cg_v2``).
 
-    ``pallas_fused_cg`` names the step-fused CG pipeline (core/cg_fused.py);
-    its *local operator* is the same Pallas kernel, so standalone ``ax``
-    applications route to it here and only the solve loop differs.
+    The ``pallas_fused_cg*`` names select the step-fused CG pipelines
+    (core/cg_fused.py); their *local operator* is the same Pallas kernel
+    math, so standalone ``ax`` applications route to it here and only the
+    solve loop differs.
     """
     if impl == "listing1":
         return ax_local_listing1(u, D, g)
     if impl == "fused":
         return ax_local_fused(u, D, g)
-    if impl in ("pallas", "pallas_fused_cg"):
+    if impl in ("pallas", "pallas_fused_cg", "pallas_fused_cg_v2"):
         from repro.kernels import ops as kernel_ops
 
         return kernel_ops.nekbone_ax(u, D, g, **kw)

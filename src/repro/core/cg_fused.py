@@ -1,31 +1,46 @@
-"""Step-fused conjugate gradients: one Pallas call per iteration.
+"""Step-fused conjugate gradients: the whole iteration in Pallas kernels.
 
 ``cg_fixed_iters`` (core/cg.py) composes the operator and the three inner
 products from separate XLA ops; per iteration the vectors ``p``, ``w``,
 ``r``, ``c`` are re-read from HBM for every reduction the paper's Eq. 2
 charges for.  This module runs the iteration the way the cost model wants it
-counted (DESIGN.md §3):
+counted (DESIGN.md §3), at two fusion levels:
 
-* one multi-output Pallas kernel (``kernels/nekbone_ax.nekbone_ax_dots``)
-  computes the masked local operator **and** emits per-element-block partial
-  sums for ``p·c·Ap`` and ``r·c·z`` in the same VMEM residency — the mask
-  pass and the two standalone reduction passes disappear;
-* the partials are tree-reduced (``jnp.sum`` over the ``E/block_e`` blocks)
-  on the host side of the ``pallas_call``;
-* the direct-stiffness summation stays outside the kernel (it crosses
-  element-block boundaries) but commutes with the mask, so the kernel's
-  masked output feeds it directly;
-* the remaining vector updates (x/r/p axpys + the post-update residual
-  reduction) are one fused XLA pass.
+**v1** (:func:`cg_fused_fixed_iters`, DESIGN.md §3.3): one multi-output
+Pallas kernel computes the masked local operator and the ``p·c·Ap`` partial
+in the same VMEM residency; the direct-stiffness summation and the vector
+updates remain XLA passes.  The ``r·c·r`` reduction is *carried* through the
+loop state (it equals the previous iteration's post-update reduction), so
+the kernel never re-reads ``r``/``c`` — 17 streams/iteration against
+Eq. 2's 30.
 
-The iteration is *algebraically identical* to :func:`repro.core.cg.cg_fixed_iters`
-with ``M = I``; the inner products are summed in a different association
-(per-block then tree), so histories agree to dtype round-off, which the
-fp64-interpret parity test pins down (tests/test_cg_fused.py).
+**v2** (:func:`cg_fused_v2_fixed_iters`, DESIGN.md §3.4): zero standalone
+full-field XLA passes.  The grid marches whole z-slabs, so the x/y
+direct-stiffness summation and the intra-block z interfaces are summed on
+the VMEM-resident kernel output; the two cross-block boundary planes travel
+as O(E n^2) side outputs and are stitched in VMEM by a second, merged
+vector-update kernel that also performs both axpys and the post-update
+``r·c·r`` partial.  The ``p = r + beta p`` update folds into the next
+iteration's operator kernel (beta enters as a scalar operand), and the
+structured box's mask / inner-product weight are rebuilt in-kernel from
+per-axis factors while the axis-aligned metric collapses to its diagonal —
+13 streams/iteration.
+
+**sharded** (:func:`cg_fused_sharded_fixed_iters`): the v1 pipeline per
+shard inside ``shard_map``, with ``ds_sum_sharded`` exchanging the
+cross-shard z-planes and the inner-product partials ``psum``-reduced.
+
+All variants are *algebraically identical* to
+:func:`repro.core.cg.cg_fixed_iters` with ``M = I``; the inner products are
+summed in a different association (per-block then tree), so histories agree
+to dtype round-off, which the fp64-interpret parity tests pin down
+(tests/test_cg_fused.py, tests/test_cg_fused_v2.py).
 
 Preconditions: ``b`` must be assembled ("continuous": coincident copies
 equal — manufactured right-hand sides are) and masked; unpreconditioned CG
-only (Nekbone's benchmark configuration and the paper's §V protocol).
+only (Nekbone's benchmark configuration and the paper's §V protocol).  The
+v2 path additionally requires the structured axis-aligned box fields
+(diagonal metric, factorizable mask — what ``BoxMesh`` produces).
 """
 from __future__ import annotations
 
@@ -33,14 +48,25 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 import repro.core.gs as gs_mod
 from repro.core.cg import CGResult
+from repro.core.geom import box_axis_factors, box_outer
 from repro.kernels import autotune as _autotune
 from repro.kernels import nekbone_ax as _ax
 
-__all__ = ["cg_fused_fixed_iters"]
+__all__ = ["cg_fused_fixed_iters", "cg_fused_v2_fixed_iters",
+           "cg_fused_sharded_fixed_iters"]
 
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# v1: fused operator+pap kernel, XLA assembly and vector pass
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("n", "grid", "niter", "block_e",
                                              "interpret"))
@@ -49,36 +75,39 @@ def _cg_fused(b, D, Dt, g2, mask2, c, *, n: int,
               interpret: bool) -> CGResult:
     E = b.shape[0]
     n3 = n ** 3
-    c2 = c.reshape(E, n3)
     # inner products accumulate in f32 (f64 on the oracle path) even for
     # bf16 fields — matching the kernel partials' dtype; alpha/beta are cast
     # back so the fori_loop carry stays in the field dtype.
-    acc = jnp.float64 if b.dtype == jnp.float64 else jnp.float32
+    acc = _acc_dtype(b.dtype)
+    c_acc = c.astype(acc)
+    # r·c·r is carried through the loop: each iteration's post-update
+    # reduction (fused by XLA with the axpys that produce r) is next
+    # iteration's rtz, so the kernel needs no r/c operands (DESIGN.md §3.3).
+    rtz0 = jnp.sum(b.astype(acc) * c_acc * b.astype(acc))
 
     def body(k, state):
-        x, r, p, hist, _ = state
-        w2, pap_b, rcz_b = _ax.nekbone_ax_dots_pallas(
-            p.reshape(E, n3), D, Dt, g2, mask2, r.reshape(E, n3), c2,
+        x, r, p, rtz, hist = state
+        hist = hist.at[k].set(jnp.sqrt(jnp.abs(rtz)).astype(b.dtype))
+        w2, pap_b = _ax.nekbone_ax_pap_pallas(
+            p.reshape(E, n3), D, Dt, g2, mask2,
             n=n, block_e=block_e, interpret=interpret)
         pap = jnp.sum(pap_b)            # tree-reduce the per-block partials
-        rtz = jnp.sum(rcz_b)            # == r·c·z for the *current* r
-        hist = hist.at[k].set(jnp.sqrt(jnp.abs(rtz)).astype(b.dtype))
         # mask commutes with gs (coincident copies share their mask value),
         # so the kernel's masked output assembles directly.
         w = gs_mod.ds_sum_local(w2.reshape(b.shape), grid)
         alpha = (rtz / pap).astype(b.dtype)
         x = x + alpha * p
         r = r - alpha * w
-        # fused by XLA with the axpy above
-        rtz_new = jnp.sum(r.astype(acc) * c.astype(acc) * r.astype(acc))
+        # fused by XLA with the axpy above; carried as the next rtz
+        rtz_new = jnp.sum(r.astype(acc) * c_acc * r.astype(acc))
         beta = (rtz_new / rtz).astype(b.dtype)
         p = r + beta * p
-        return x, r, p, hist, rtz_new
+        return x, r, p, rtz_new, hist
 
     x = jnp.zeros_like(b)
     hist0 = jnp.full((niter + 1,), jnp.nan, dtype=b.dtype)
-    state = (x, b, b, hist0, jnp.zeros((), acc))
-    x, r, p, hist, rtz_last = jax.lax.fori_loop(0, niter, body, state)
+    state = (x, b, b, rtz0, hist0)
+    x, r, p, rtz_last, hist = jax.lax.fori_loop(0, niter, body, state)
     hist = hist.at[niter].set(jnp.sqrt(jnp.abs(rtz_last)).astype(b.dtype))
     return CGResult(x=x, iters=jnp.asarray(niter), rnorm=hist[niter],
                     rnorm_history=hist)
@@ -89,7 +118,7 @@ def cg_fused_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
                          grid: tuple[int, int, int], niter: int,
                          block_e: int | None = None,
                          interpret: bool | None = None) -> CGResult:
-    """Fixed-iteration CG through the fused-iteration Pallas pipeline.
+    """Fixed-iteration CG through the fused-iteration Pallas pipeline (v1).
 
     Args:
       b:     (E, n, n, n) assembled, masked right-hand side.
@@ -125,3 +154,202 @@ def cg_fused_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
     c = jnp.asarray(c, b.dtype)
     return _cg_fused(b, D, D.T, g2, mask2, c, n=n, grid=tuple(grid),
                      niter=niter, block_e=block_e, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# v2: slab gather-scatter + merged vector-update kernel
+# ---------------------------------------------------------------------------
+
+def _check_box_fields(grid, n, mask, c) -> None:
+    """Verify caller-supplied mask/c match the structural box fields.
+
+    The v2 kernels *rebuild* both from per-axis factors
+    (``geom.box_axis_factors``), so silently accepting a different mask or
+    weight would compute a different problem.  Skipped under tracing
+    (concrete mesh fields are checked at build time).
+    """
+    (mx, my, mz), (cx, cy, cz) = box_axis_factors(grid, n)
+    for name, field, want in (
+            ("mask", mask, box_outer(mz, my, mx).reshape(-1, n, n, n)),
+            ("c", c, box_outer(cz, cy, cx).reshape(-1, n, n, n))):
+        if field is None:
+            continue
+        try:
+            got = np.asarray(field, np.float64)
+        except jax.errors.TracerArrayConversionError:
+            continue
+        if got.shape != want.shape or not np.array_equal(got, want):
+            raise ValueError(
+                f"pallas_fused_cg_v2 requires the structured box {name} "
+                "(per-axis factorizable); supplied field differs")
+
+
+@functools.partial(jax.jit, static_argnames=("n", "grid", "niter", "sz",
+                                             "interpret"))
+def _cg_fused_v2(b, D, Dt, g3, mx, my, mz, cx, cy, cz, *, n: int,
+                 grid: tuple[int, int, int], niter: int, sz: int,
+                 interpret: bool) -> CGResult:
+    ex, ey, ez = grid
+    E = b.shape[0]
+    n3 = n ** 3
+    pln = ey * ex * n * n
+    acc = _acc_dtype(b.dtype)
+    b2 = b.reshape(E, n3)
+    # one-time initial reduction; c rebuilt from the factors in-jit (an XLA
+    # constant) so no full-field weight operand enters the pipeline.
+    c2 = box_outer(cz, cy, cx).reshape(E, n3).astype(acc)
+    rtz0 = jnp.sum(b2.astype(acc) * c2 * b2.astype(acc))
+    zero_plane = jnp.zeros((1, pln), b.dtype)
+
+    def body(k, state):
+        x2, r2, p2, rtz, beta, hist = state
+        hist = hist.at[k].set(jnp.sqrt(jnp.abs(rtz)).astype(b.dtype))
+        # front half: p = r + beta p, masked Ax, pap partial, in-block
+        # assembly; boundary planes leave as (nblk, pln) side outputs.
+        p2, w2, bot, top, pap_b = _ax.nekbone_ax_slab_pallas(
+            p2, r2, D, Dt, g3, mx, my, mz, beta.reshape(1, 1),
+            n=n, grid=grid, sz=sz, interpret=interpret)
+        pap = jnp.sum(pap_b)
+        alpha = rtz / pap
+        # cross-block stitch operands: each block receives its neighbours'
+        # boundary planes (zeros at the global ends) — O(E n^2) traffic.
+        addb = jnp.concatenate([zero_plane, top[:-1]], axis=0)
+        addt = jnp.concatenate([bot[1:], zero_plane], axis=0)
+        # back half: stitch w in VMEM, both axpys, post-update r·c·r.
+        x2, r2, rcr_b = _ax.nekbone_cg_update_pallas(
+            x2, p2, r2, w2, addb, addt, alpha.reshape(1, 1), cx, cy, cz,
+            n=n, grid=grid, sz=sz, interpret=interpret)
+        rtz_new = jnp.sum(rcr_b)
+        beta = rtz_new / rtz
+        return x2, r2, p2, rtz_new, beta, hist
+
+    hist0 = jnp.full((niter + 1,), jnp.nan, dtype=b.dtype)
+    state = (jnp.zeros_like(b2), b2, jnp.zeros_like(b2), rtz0,
+             jnp.zeros((), acc), hist0)
+    x2, r2, p2, rtz_last, beta, hist = jax.lax.fori_loop(0, niter, body,
+                                                         state)
+    hist = hist.at[niter].set(jnp.sqrt(jnp.abs(rtz_last)).astype(b.dtype))
+    return CGResult(x=x2.reshape(b.shape), iters=jnp.asarray(niter),
+                    rnorm=hist[niter], rnorm_history=hist)
+
+
+def cg_fused_v2_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray,
+                            g: jnp.ndarray, grid: tuple[int, int, int],
+                            niter: int, mask: jnp.ndarray | None = None,
+                            c: jnp.ndarray | None = None,
+                            sz: int | None = None,
+                            interpret: bool | None = None) -> CGResult:
+    """Fixed-iteration CG, whole iteration in two Pallas kernels (v2).
+
+    Args:
+      b:     (E, n, n, n) assembled, masked right-hand side; elements
+             z-major over ``grid``.
+      D:     (n, n) derivative matrix.
+      g:     (E, 6, n, n, n) metric (off-diagonals must be zero — the
+             axis-aligned box), or pre-packed (E, 3, n, n, n) diagonal.
+      grid:  element grid (EX, EY, EZ).
+      niter: iteration count.
+      mask/c: optional — the kernels rebuild both from per-axis factors;
+             when passed (concrete) they are validated against the
+             structural fields and otherwise unused.
+      sz:    slabs per block; default: autotuned divisor of EZ
+             (kernels/autotune.pick_slab_sz).
+      interpret: force Pallas interpret mode (default: off-TPU detection).
+
+    Returns a :class:`repro.core.cg.CGResult` whose ``rnorm_history``
+    matches ``cg_fixed_iters`` to round-off.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    E = b.shape[0]
+    n = b.shape[-1]
+    grid = tuple(grid)
+    if interpret is None:
+        interpret = kernel_ops.default_interpret()
+    if sz is None:
+        sz = _autotune.pick_slab_sz(grid, n, b.dtype)
+
+    _check_box_fields(grid, n, mask, c)
+    (mx, my, mz), (cx, cy, cz) = kernel_ops.slab_axis_factors(grid, n,
+                                                             b.dtype)
+    D = jnp.asarray(D, b.dtype)
+    g3 = kernel_ops.diag_metric(jnp.asarray(g, b.dtype), E, n)
+    return _cg_fused_v2(b, D, D.T, g3, mx, my, mz, cx, cy, cz, n=n,
+                        grid=grid, niter=niter, sz=sz, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# sharded: the fused pipeline per shard inside shard_map
+# ---------------------------------------------------------------------------
+
+def cg_fused_sharded_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray,
+                                 g: jnp.ndarray, mask: jnp.ndarray,
+                                 c: jnp.ndarray,
+                                 grid_local: tuple[int, int, int],
+                                 axis_names, niter: int,
+                                 block_e: int | None = None,
+                                 interpret: bool | None = None) -> CGResult:
+    """Fused-iteration CG with elements sharded along z, for ``shard_map``.
+
+    Per shard and iteration: the fused operator+pap kernel on the local
+    element block, ``ds_sum_sharded`` (core/gs.py) for the assembly — its
+    ``halo_exchange_z`` ppermutes the cross-shard interface planes — and the
+    XLA vector pass.  The two inner products are global: per-block kernel
+    partials are summed locally, then ``psum``-reduced over ``axis_names``,
+    so every shard sees identical ``alpha``/``beta`` and the iteration is
+    SPMD-uniform.
+
+    Args are the shard-local blocks (``b``: (E_local, n, n, n) etc.);
+    ``grid_local`` is the local element grid (EX, EY, EZ_local).  The rtz
+    carry matches :func:`cg_fused_fixed_iters`.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    E = b.shape[0]
+    n = b.shape[-1]
+    axis_names = tuple(axis_names)
+    if interpret is None:
+        interpret = kernel_ops.default_interpret()
+    if block_e is None:
+        block_e = _autotune.pick_block_e(E, n, b.dtype)
+    while E % block_e:
+        block_e //= 2
+    block_e = max(block_e, 1)
+
+    n3 = n ** 3
+    D = jnp.asarray(D, b.dtype)
+    Dt = D.T
+    g2 = jnp.asarray(g, b.dtype).reshape(E, 6, n3)
+    mask2 = jnp.asarray(mask, b.dtype).reshape(E, n3)
+    acc = _acc_dtype(b.dtype)
+    c_acc = jnp.asarray(c, b.dtype).astype(acc)
+
+    def gsum(v):
+        return jax.lax.psum(v, axis_names)
+
+    rtz0 = gsum(jnp.sum(b.astype(acc) * c_acc * b.astype(acc)))
+
+    def body(k, state):
+        x, r, p, rtz, hist = state
+        hist = hist.at[k].set(jnp.sqrt(jnp.abs(rtz)).astype(b.dtype))
+        w2, pap_b = _ax.nekbone_ax_pap_pallas(
+            p.reshape(E, n3), D, Dt, g2, mask2,
+            n=n, block_e=block_e, interpret=interpret)
+        pap = gsum(jnp.sum(pap_b))
+        w = gs_mod.ds_sum_sharded(w2.reshape(b.shape), grid_local,
+                                  axis_names)
+        alpha = (rtz / pap).astype(b.dtype)
+        x = x + alpha * p
+        r = r - alpha * w
+        rtz_new = gsum(jnp.sum(r.astype(acc) * c_acc * r.astype(acc)))
+        beta = (rtz_new / rtz).astype(b.dtype)
+        p = r + beta * p
+        return x, r, p, rtz_new, hist
+
+    x = jnp.zeros_like(b)
+    hist0 = jnp.full((niter + 1,), jnp.nan, dtype=b.dtype)
+    state = (x, b, b, rtz0, hist0)
+    x, r, p, rtz_last, hist = jax.lax.fori_loop(0, niter, body, state)
+    hist = hist.at[niter].set(jnp.sqrt(jnp.abs(rtz_last)).astype(b.dtype))
+    return CGResult(x=x, iters=jnp.asarray(niter), rnorm=hist[niter],
+                    rnorm_history=hist)

@@ -20,19 +20,37 @@ import dataclasses
 __all__ = ["flops_per_dof", "cg_iter_flops", "cg_iter_bytes", "intensity",
            "ax_local_flops", "ax_local_bytes", "roofline_gflops", "CostModel",
            "CG_READ_STREAMS", "CG_WRITE_STREAMS", "FUSED_CG_READ_STREAMS",
-           "FUSED_CG_WRITE_STREAMS", "fused_cg_iter_bytes", "fused_intensity"]
+           "FUSED_CG_WRITE_STREAMS", "fused_cg_iter_bytes", "fused_intensity",
+           "FUSED_V2_READ_STREAMS", "FUSED_V2_WRITE_STREAMS",
+           "fused_v2_cg_iter_bytes", "fused_v2_intensity",
+           "fused_v2_plane_streams"]
 
 # Eq. 2's stream counts: fp64 words moved per DOF per CG iteration when the
 # operator, mask, and every inner product run as separate passes.
 CG_READ_STREAMS = 24
 CG_WRITE_STREAMS = 6
 
-# The fused-iteration pipeline (core/cg_fused.py, DESIGN.md §3.3) moves:
-#   kernel:      reads p, 6 metric fields, mask, r, c  (10)   writes w (1)
+# The fused-iteration pipeline v1 (core/cg_fused.py, DESIGN.md §3.3) moves:
+#   kernel:      reads p, 6 metric fields, mask        (8)    writes w (1)
 #   vector pass: reads x, p, r, w, c                   (5)    writes x, r, p (3)
+# The r·c·r reduction is carried through the loop state (it is XLA-fused
+# into the vector pass that produces r), so the kernel reads no r/c — the
+# original 10-read kernel accounting (15R + 4W = 19) drops to 13R + 4W = 17.
 # The per-block dot partials are E/block_e scalars — charged as zero streams.
-FUSED_CG_READ_STREAMS = 15
+FUSED_CG_READ_STREAMS = 13
 FUSED_CG_WRITE_STREAMS = 4
+
+# The v2 pipeline (core/cg_fused.py, DESIGN.md §3.4) runs the whole
+# iteration in two slab-resident Pallas kernels:
+#   dots kernel:   reads p, r, 3 metric diagonals      (5)    writes p, w (2)
+#   update kernel: reads x, p, r, w                    (4)    writes x, r (2)
+# The direct-stiffness summation happens in-kernel (x/y and intra-block z)
+# plus an O(E n^2) boundary-plane side channel (fused_v2_plane_streams);
+# the Dirichlet mask and the weight c are rebuilt in VMEM from per-axis
+# factors (O(E^{1/3} n) operands), and the axis-aligned box metric is
+# diagonal, so only 3 of Eq. 2's 6 metric streams exist.
+FUSED_V2_READ_STREAMS = 9
+FUSED_V2_WRITE_STREAMS = 4
 
 
 def flops_per_dof(n: int) -> int:
@@ -56,16 +74,43 @@ def intensity(n: int, itemsize: int = 8) -> float:
 
 
 def fused_cg_iter_bytes(ndof: int, itemsize: int = 8) -> tuple[int, int]:
-    """(read_bytes, write_bytes) of the step-fused CG iteration: 15 D reads,
-    4 D writes (vs Eq. 2's 24 + 6 — a 30/19 ≈ 1.58x traffic cut)."""
+    """(read_bytes, write_bytes) of the step-fused CG iteration (v1, with
+    the carried r·c·r): 13 D reads, 4 D writes (vs Eq. 2's 24 + 6 — a
+    30/17 ≈ 1.76x traffic cut)."""
     return (FUSED_CG_READ_STREAMS * ndof * itemsize,
             FUSED_CG_WRITE_STREAMS * ndof * itemsize)
 
 
 def fused_intensity(n: int, itemsize: int = 8) -> float:
-    """Eq. 2 re-evaluated for the fused pipeline: same flops over 19 streams."""
+    """Eq. 2 re-evaluated for the fused pipeline: same flops over 17 streams."""
     return flops_per_dof(n) / (
         (FUSED_CG_READ_STREAMS + FUSED_CG_WRITE_STREAMS) * float(itemsize))
+
+
+def fused_v2_cg_iter_bytes(ndof: int, itemsize: int = 8) -> tuple[int, int]:
+    """(read_bytes, write_bytes) of the v2 two-kernel iteration: 9 D reads,
+    4 D writes (vs Eq. 2's 24 + 6 — a 30/13 ≈ 2.31x traffic cut).  The
+    boundary-plane side channel is excluded here; see
+    :func:`fused_v2_plane_streams` for its (sub-stream) size."""
+    return (FUSED_V2_READ_STREAMS * ndof * itemsize,
+            FUSED_V2_WRITE_STREAMS * ndof * itemsize)
+
+
+def fused_v2_intensity(n: int, itemsize: int = 8) -> float:
+    """Eq. 2 re-evaluated for the v2 pipeline: same flops over 13 streams."""
+    return flops_per_dof(n) / (
+        (FUSED_V2_READ_STREAMS + FUSED_V2_WRITE_STREAMS) * float(itemsize))
+
+
+def fused_v2_plane_streams(n: int, sz: int) -> float:
+    """Stream-equivalents of the v2 boundary-plane side channel.
+
+    Per slab block of ``sz`` slabs the dots kernel writes two
+    ``EX*EY*n^2``-word planes and the update kernel reads them back:
+    4 plane transfers per ``sz*EX*EY*n^3`` DOFs = ``4 / (n * sz)`` of one
+    full stream (0.1 at the paper's n=10 with sz=4) — why the accounting
+    charges them as ~zero."""
+    return 4.0 / (float(n) * float(sz))
 
 
 def ax_local_flops(nelt: int, n: int) -> int:

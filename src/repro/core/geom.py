@@ -19,10 +19,68 @@ import numpy as np
 
 from repro.core.sem import SEMOperators
 
-__all__ = ["BoxMesh", "random_spd_metric", "GEOM_RR", "GEOM_RS", "GEOM_RT",
-           "GEOM_SS", "GEOM_ST", "GEOM_TT"]
+__all__ = ["BoxMesh", "random_spd_metric", "axis_mask_factor",
+           "axis_mult_factor", "box_axis_factors", "box_outer", "GEOM_RR",
+           "GEOM_RS", "GEOM_RT", "GEOM_SS", "GEOM_ST", "GEOM_TT"]
 
 GEOM_RR, GEOM_RS, GEOM_RT, GEOM_SS, GEOM_ST, GEOM_TT = range(6)
+
+
+def axis_mask_factor(ne: int, n: int) -> np.ndarray:
+    """Per-direction Dirichlet factor, shape ``(ne, n)``.
+
+    The box mask is the outer product of these three factors: a node is
+    masked iff it sits on the domain boundary in *some* direction, and 0/1
+    products realize exactly that.  The slab kernels (kernels/nekbone_ax.py)
+    rebuild the full mask from them in VMEM — three ``(extent, n)`` arrays
+    instead of an ``(E, n^3)`` HBM stream.
+    """
+    m = np.ones((ne, n), dtype=np.float64)
+    m[0, 0] = 0.0
+    m[-1, -1] = 0.0
+    return m
+
+
+def axis_mult_factor(ne: int, n: int) -> np.ndarray:
+    """Per-direction node multiplicity, shape ``(ne, n)``.
+
+    A node on an interior element face is shared by 2 elements along that
+    direction; multiplicities multiply across directions, so the full
+    multiplicity field is the outer product of the three factors.
+    """
+    m = np.ones((ne, n), dtype=np.float64)
+    if ne > 1:
+        m[:-1, -1] = 2.0
+        m[1:, 0] = 2.0
+    return m
+
+
+def box_axis_factors(shape: tuple[int, int, int], n: int):
+    """Per-axis mask and ``c = mask/mult`` factors of the structured box.
+
+    Returns ``((mx, my, mz), (cx, cy, cz))``, each ``(extent, n)`` float64;
+    outer products over (z, y, x) reproduce :meth:`BoxMesh.dirichlet_mask`
+    and ``mask/multiplicity`` bitwise (every value is an exact binary
+    fraction).  The single source of the factorization the v2 slab kernels
+    rebuild in VMEM.
+    """
+    masks = tuple(axis_mask_factor(ne, n) for ne in shape)
+    cs = tuple(axis_mask_factor(ne, n) / axis_mult_factor(ne, n)
+               for ne in shape)
+    return masks, cs
+
+
+def box_outer(fz, fy, fx):
+    """Outer product of per-axis ``(extent, n)`` factors over the box.
+
+    Returns ``(EZ, EY, EX, n, n, n)`` indexed ``(ez, ey, ex, k, j, i)`` —
+    the element-grid view of :meth:`BoxMesh.grid_view`.  Pure broadcasting,
+    so it accepts numpy and jax arrays alike; reshape ``(-1, n, n, n)`` for
+    the flat element layout.
+    """
+    return (fz[:, None, None, :, None, None]
+            * fy[None, :, None, None, :, None]
+            * fx[None, None, :, None, None, :])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,41 +180,28 @@ class BoxMesh:
         return xs.reshape(self.nelt, self.n, self.n, self.n, 3)
 
     def dirichlet_mask(self) -> np.ndarray:
-        """1.0 on interior nodes, 0.0 on the domain boundary, ``(E, n, n, n)``."""
+        """1.0 on interior nodes, 0.0 on the domain boundary, ``(E, n, n, n)``.
+
+        Outer product of the three :func:`axis_mask_factor` arrays — the
+        factorization the slab kernels exploit to avoid streaming the mask.
+        """
         ex, ey, ez = self.shape
-        m = np.ones((ez, ey, ex, self.n, self.n, self.n), dtype=np.float64)
-        m[:, :, 0, :, :, 0] = 0.0       # x = 0 face
-        m[:, :, -1, :, :, -1] = 0.0     # x = Lx face
-        m[:, 0, :, :, 0, :] = 0.0       # y = 0
-        m[:, -1, :, :, -1, :] = 0.0     # y = Ly
-        m[0, :, :, 0, :, :] = 0.0       # z = 0
-        m[-1, :, :, -1, :, :] = 0.0     # z = Lz
-        return m.reshape(self.nelt, self.n, self.n, self.n)
+        m = box_outer(axis_mask_factor(ez, self.n),
+                      axis_mask_factor(ey, self.n),
+                      axis_mask_factor(ex, self.n))
+        return np.ascontiguousarray(m.reshape(self.nelt, self.n, self.n, self.n))
 
     def multiplicity(self) -> np.ndarray:
         """Number of elements sharing each node, ``(E, n, n, n)``.
 
-        Computed structurally: along each direction a node on an interior
-        element face is shared by 2 elements; multiplicities multiply across
-        directions (faces -> 2, edges -> 4, corners -> 8).
+        Computed structurally: outer product of the three
+        :func:`axis_mult_factor` arrays (faces -> 2, edges -> 4,
+        corners -> 8).
         """
         ex, ey, ez = self.shape
-
-        def axis_mult(ne: int) -> np.ndarray:
-            m = np.ones((ne, self.n))
-            if ne > 1:
-                m[:-1, -1] = 2.0
-                m[1:, 0] = 2.0
-            return m
-
-        mx = axis_mult(ex)  # (ex, n) over i
-        my = axis_mult(ey)
-        mz = axis_mult(ez)
-        m = (
-            mz[:, None, None, :, None, None]
-            * my[None, :, None, None, :, None]
-            * mx[None, None, :, None, None, :]
-        )
+        m = box_outer(axis_mult_factor(ez, self.n),
+                      axis_mult_factor(ey, self.n),
+                      axis_mult_factor(ex, self.n))
         return np.ascontiguousarray(m.reshape(self.nelt, self.n, self.n, self.n))
 
 

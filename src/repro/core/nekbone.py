@@ -44,11 +44,13 @@ class NekboneCase:
       grid:    element grid (EX, EY, EZ).
       lengths: physical box size.
       dtype:   compute dtype (fp64 validated on CPU; fp32/bf16 TPU target).
-      ax_impl: 'listing1' | 'fused' | 'pallas' | 'pallas_fused_cg'.
-               The last selects the step-fused CG pipeline (core/cg_fused.py,
-               DESIGN.md §3): fixed-iteration solves run one multi-output
-               Pallas call per iteration instead of operator + separate
-               reductions.
+      ax_impl: 'listing1' | 'fused' | 'pallas' | 'pallas_fused_cg' |
+               'pallas_fused_cg_v2'.
+               The fused_cg variants select the step-fused CG pipelines
+               (core/cg_fused.py): v1 runs one multi-output Pallas call per
+               iteration plus XLA assembly/vector passes (DESIGN.md §3.3);
+               v2 runs the whole iteration in two slab-resident Pallas
+               kernels with in-kernel gather-scatter (DESIGN.md §3.4).
     """
 
     n: int = 10
@@ -112,6 +114,10 @@ class NekboneCase:
         M = None
         if precond:
             M = cg_mod.jacobi_preconditioner(self.operator_diagonal())
+        if self.ax_impl == "pallas_fused_cg_v2" and niter is not None and M is None:
+            return cg_fused_mod.cg_fused_v2_fixed_iters(
+                f, D=self.D, g=self.g, grid=self.grid, niter=niter,
+                mask=self.mask, c=self.c)
         if self.ax_impl == "pallas_fused_cg" and niter is not None and M is None:
             return cg_fused_mod.cg_fused_fixed_iters(
                 f, D=self.D, g=self.g, mask=self.mask, c=self.c,

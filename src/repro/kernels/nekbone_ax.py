@@ -46,9 +46,13 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 __all__ = ["nekbone_ax_kernel", "nekbone_ax_pallas", "ax_block",
-           "nekbone_ax_dots_kernel", "nekbone_ax_dots_pallas"]
+           "ax_block_diag", "nekbone_ax_dots_kernel", "nekbone_ax_dots_pallas",
+           "nekbone_ax_pap_kernel", "nekbone_ax_pap_pallas",
+           "nekbone_ax_slab_kernel", "nekbone_ax_slab_pallas",
+           "nekbone_cg_update_kernel", "nekbone_cg_update_pallas"]
 
 from repro.compat import CompilerParams as _CompilerParams
+from repro.core.geom import box_outer as _box_outer
 
 
 def _dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -56,6 +60,38 @@ def _dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     precision, exercised through interpret mode on CPU)."""
     acc = jnp.float64 if a.dtype == jnp.float64 else jnp.float32
     return jax.lax.dot(a, b, preferred_element_type=acc)
+
+
+def _grad3(u: jnp.ndarray, Dt: jnp.ndarray, *, n: int, e: int):
+    """Forward reference-space gradient on a VMEM block: (wr, ws, wt).
+
+    Folds (e,k,j) / (e,k,i) / (e,j,i) into the M dimension of skinny matmuls
+    so the MXU sees (e*n^2, n) x (n, n) operands.
+    """
+    # wr[e,k,j,i] = sum_l u[e,k,j,l] D[i,l]      (M = e*n^2, K = n, N = n)
+    wr = _dot(u.reshape(e * n * n, n), Dt).reshape(e, n, n, n)
+    # ws[e,k,j,i] = sum_l u[e,k,l,i] D[j,l]: transpose j<->i, contract, undo.
+    u_kij = u.reshape(e, n, n, n).transpose(0, 1, 3, 2)  # (e,k,i,l=j)
+    ws = _dot(u_kij.reshape(e * n * n, n), Dt)
+    ws = ws.reshape(e, n, n, n).transpose(0, 1, 3, 2)
+    # wt[e,k,j,i] = sum_l u[e,l,j,i] D[k,l]: contract the layer axis.
+    u_jil = u.reshape(e, n, n * n).transpose(0, 2, 1)    # (e, ji, l=k)
+    wt = _dot(u_jil.reshape(e * n * n, n), Dt)
+    wt = wt.reshape(e, n * n, n).transpose(0, 2, 1).reshape(e, n, n, n)
+    return wr, ws, wt
+
+
+def _grad3_t(ur: jnp.ndarray, us: jnp.ndarray, ut: jnp.ndarray,
+             D: jnp.ndarray, *, n: int, e: int) -> jnp.ndarray:
+    """Transposed gradient (weak-form assembly) on a VMEM block, (e, n^3)."""
+    # w += sum_l D[l,i] ur[e,k,j,l]  ==  ur @ D
+    w = _dot(ur.reshape(e * n * n, n), D).reshape(e, n, n, n)
+    us_kij = us.transpose(0, 1, 3, 2)
+    w += _dot(us_kij.reshape(e * n * n, n), D).reshape(e, n, n, n).transpose(0, 1, 3, 2)
+    ut_jil = ut.reshape(e, n, n * n).transpose(0, 2, 1)
+    wt2 = _dot(ut_jil.reshape(e * n * n, n), D)
+    w += wt2.reshape(e, n * n, n).transpose(0, 2, 1).reshape(e, n, n, n)
+    return w.reshape(e, n ** 3)
 
 
 def ax_block(u: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
@@ -68,17 +104,7 @@ def ax_block(u: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
       g: (e, 6, n^3) metric (rr, rs, rt, ss, st, tt).
     Returns (e, n^3), in the accumulation dtype of ``u``.
     """
-    # ---- forward gradient: fold (e,k,j) / (e,k,i) / (e,j,i) into M --------
-    # wr[e,k,j,i] = sum_l u[e,k,j,l] D[i,l]      (M = e*n^2, K = n, N = n)
-    wr = _dot(u.reshape(e * n * n, n), Dt).reshape(e, n, n, n)
-    # ws[e,k,j,i] = sum_l u[e,k,l,i] D[j,l]: transpose j<->i, contract, undo.
-    u_kij = u.reshape(e, n, n, n).transpose(0, 1, 3, 2)  # (e,k,i,l=j)
-    ws = _dot(u_kij.reshape(e * n * n, n), Dt)
-    ws = ws.reshape(e, n, n, n).transpose(0, 1, 3, 2)
-    # wt[e,k,j,i] = sum_l u[e,l,j,i] D[k,l]: contract the layer axis.
-    u_jil = u.reshape(e, n, n * n).transpose(0, 2, 1)    # (e, ji, l=k)
-    wt = _dot(u_jil.reshape(e * n * n, n), Dt)
-    wt = wt.reshape(e, n * n, n).transpose(0, 2, 1).reshape(e, n, n, n)
+    wr, ws, wt = _grad3(u, Dt, n=n, e=e)
 
     # ---- metric application (element-wise, VPU) ---------------------------
     grr, grs, grt, gss, gst, gtt = (
@@ -87,15 +113,25 @@ def ax_block(u: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
     us = grs * wr + gss * ws + gst * wt
     ut = grt * wr + gst * ws + gtt * wt
 
-    # ---- transposed gradient (same shapes, D^T) ---------------------------
-    # w += sum_l D[l,i] ur[e,k,j,l]  ==  ur @ D
-    w = _dot(ur.reshape(e * n * n, n), D).reshape(e, n, n, n)
-    us_kij = us.transpose(0, 1, 3, 2)
-    w += _dot(us_kij.reshape(e * n * n, n), D).reshape(e, n, n, n).transpose(0, 1, 3, 2)
-    ut_jil = ut.reshape(e, n, n * n).transpose(0, 2, 1)
-    wt2 = _dot(ut_jil.reshape(e * n * n, n), D)
-    w += wt2.reshape(e, n * n, n).transpose(0, 2, 1).reshape(e, n, n, n)
-    return w.reshape(e, n ** 3)
+    return _grad3_t(ur, us, ut, D, n=n, e=e)
+
+
+def ax_block_diag(u: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
+                  g3: jnp.ndarray, *, n: int, e: int) -> jnp.ndarray:
+    """``ax_block`` for a *diagonal* metric (axis-aligned box elements).
+
+    For the structured box mesh the off-diagonal metric entries are
+    identically zero (core/geom.py), so the metric application collapses to
+    three products and ``G`` to three HBM streams instead of six — half the
+    metric traffic of the general kernel, with bit-identical results (adding
+    an exactly-zero product is exact in floating point).
+
+    Args:
+      u: (e, n^3); g3: (e, 3, n^3) metric diagonal (rr, ss, tt).
+    """
+    wr, ws, wt = _grad3(u, Dt, n=n, e=e)
+    grr, gss, gtt = (g3[:, m, :].reshape(e, n, n, n) for m in range(3))
+    return _grad3_t(grr * wr, gss * ws, gtt * wt, D, n=n, e=e)
 
 
 def nekbone_ax_kernel(u_ref, d_ref, dt_ref, g_ref, w_ref, *, n: int,
@@ -244,3 +280,296 @@ def nekbone_ax_dots_pallas(p2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
         interpret=interpret,
         name=f"nekbone_ax_dots_n{n}_be{block_e}",
     )(p2, D, Dt, g2, mask2, r2, c2)
+
+
+# ---------------------------------------------------------------------------
+# pap-only kernel: the dots kernel with the r·c·r partial carried instead
+# ---------------------------------------------------------------------------
+
+def nekbone_ax_pap_kernel(p_ref, d_ref, dt_ref, g_ref, mask_ref, w_ref,
+                          pap_ref, *, n: int, block_e: int):
+    """Masked Ax plus the ``p·c·Ap`` partial only (DESIGN.md §3.3).
+
+    The ``r·c·r`` partial of :func:`nekbone_ax_dots_kernel` equals the
+    previous iteration's post-update reduction; once the solver carries that
+    scalar through its loop state the kernel's ``r``/``c`` operands are dead
+    weight — dropping them takes the fused-v1 iteration from 19 to 17
+    streams.  Refs as in :func:`nekbone_ax_dots_kernel` minus ``r``/``c``
+    and ``rcz``.
+    """
+    f32 = jnp.float64 if p_ref.dtype == jnp.float64 else jnp.float32
+    p = p_ref[...].astype(f32)
+    D = d_ref[...].astype(f32)
+    Dt = dt_ref[...].astype(f32)
+    g = g_ref[...].astype(f32)
+    w = ax_block(p, D, Dt, g, n=n, e=block_e)
+    w = w * mask_ref[...].astype(f32)
+    pap_ref[0, 0] = jnp.sum(p * w).astype(pap_ref.dtype)
+    w_ref[...] = w.astype(w_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_e", "interpret"))
+def nekbone_ax_pap_pallas(p2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
+                          g2: jnp.ndarray, mask2: jnp.ndarray, *, n: int,
+                          block_e: int, interpret: bool = False):
+    """pallas_call wrapper: returns ``(w2, pap_parts)`` (carried-rtz path)."""
+    E = p2.shape[0]
+    assert E % block_e == 0, (E, block_e)
+    n3 = n ** 3
+    nblk = E // block_e
+    acc = jnp.float64 if p2.dtype == jnp.float64 else jnp.float32
+    field = pl.BlockSpec((block_e, n3), lambda i: (i, 0))
+    part = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(nekbone_ax_pap_kernel, n=n, block_e=block_e),
+        grid=(nblk,),
+        in_specs=[
+            field,                                      # p
+            pl.BlockSpec((n, n), lambda i: (0, 0)),     # D
+            pl.BlockSpec((n, n), lambda i: (0, 0)),     # Dt
+            pl.BlockSpec((block_e, 6, n3), lambda i: (i, 0, 0)),  # g
+            field,                                      # mask
+        ],
+        out_specs=(field, part),
+        out_shape=(
+            jax.ShapeDtypeStruct((E, n3), p2.dtype),
+            jax.ShapeDtypeStruct((nblk, 1), acc),
+        ),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+        name=f"nekbone_ax_pap_n{n}_be{block_e}",
+    )(p2, D, Dt, g2, mask2)
+
+
+# ---------------------------------------------------------------------------
+# v2 slab pipeline: in-kernel gather-scatter + merged vector updates
+# (DESIGN.md §3.4).  The grid marches whole z-slabs of the element box so the
+# x/y direct-stiffness summation and the intra-block z interfaces are summed
+# on the VMEM-resident output; only the two block-boundary z-planes leave the
+# kernel as O(E n^2) side outputs.  The Dirichlet mask and the inner-product
+# weight c = mask/mult are *per-axis index products* on the structured box
+# (core/geom.py), so both kernels rebuild them in VMEM from three tiny
+# (extent, n) factor arrays instead of streaming full fields.
+# ---------------------------------------------------------------------------
+
+def nekbone_ax_slab_kernel(p_ref, r_ref, d_ref, dt_ref, g_ref, mx_ref, my_ref,
+                           mz_ref, beta_ref, p_out, w_ref, bot_ref, top_ref,
+                           pap_ref, *, n: int, ex: int, ey: int, sz: int):
+    """Fused CG front-half on one block of ``sz`` whole z-slabs.
+
+    In one VMEM residency:
+
+        p   = r + beta * p_prev              (merged-CG direction update)
+        w   = mask * (D^T G D p)             (diagonal metric, structural mask)
+        pap = sum(p * w)                     (partial, *before* assembly)
+        w  <- ds_sum within the block        (x, y, and intra-block z faces)
+
+    The block's outermost z-planes (after x/y assembly; untouched by the
+    intra-block z summation) are emitted so the update kernel can stitch
+    neighbouring blocks without a full-field pass.
+
+    Refs (VMEM blocks; ``block_e = sz*ey*ex`` elements, z-major):
+      p_ref:    (block_e, n^3)   previous search direction
+      r_ref:    (block_e, n^3)   residual
+      d_ref/dt_ref: (n, n)       D and D^T
+      g_ref:    (block_e, 3, n^3) metric diagonal (rr, ss, tt)
+      mx_ref:   (ex, n)          per-axis Dirichlet factors (my: (ey, n),
+      my_ref:   (ey, n)           mz: the block's (sz, n) slice of (EZ, n))
+      mz_ref:   (sz, n)
+      beta_ref: (1, 1)           beta scalar (0 on the first iteration)
+      p_out:    (block_e, n^3)   updated direction
+      w_ref:    (block_e, n^3)   masked, block-assembled operator output
+      bot_ref:  (1, ey*ex*n^2)   bottom boundary plane (k = 0 of slab 0)
+      top_ref:  (1, ey*ex*n^2)   top boundary plane (k = n-1 of slab sz-1)
+      pap_ref:  (1, 1)           partial  sum(p * mask * w_local)
+    """
+    block_e = sz * ey * ex
+    f32 = jnp.float64 if p_ref.dtype == jnp.float64 else jnp.float32
+    beta = beta_ref[0, 0].astype(f32)
+    p = r_ref[...].astype(f32) + beta * p_ref[...].astype(f32)
+    D = d_ref[...].astype(f32)
+    Dt = dt_ref[...].astype(f32)
+    g3 = g_ref[...].astype(f32)
+    w = ax_block_diag(p, D, Dt, g3, n=n, e=block_e)
+
+    # structural mask: outer product of the three per-axis 0/1 factors
+    mask = _box_outer(mz_ref[...].astype(f32), my_ref[...].astype(f32),
+                      mx_ref[...].astype(f32))
+    v = w.reshape(sz, ey, ex, n, n, n) * mask
+
+    # continuity identity (DESIGN.md §3.2): the partial must see the
+    # *unassembled* masked output — summation below redistributes values.
+    pap_ref[0, 0] = jnp.sum(p.reshape(v.shape) * v).astype(pap_ref.dtype)
+
+    # in-block direct stiffness: same pair sums, same order as
+    # core/gs.ds_sum_local restricted to the block (x, then y, then z).
+    if ex > 1:
+        s = v[:, :, :-1, :, :, -1] + v[:, :, 1:, :, :, 0]
+        v = v.at[:, :, :-1, :, :, -1].set(s)
+        v = v.at[:, :, 1:, :, :, 0].set(s)
+    if ey > 1:
+        s = v[:, :-1, :, :, -1, :] + v[:, 1:, :, :, 0, :]
+        v = v.at[:, :-1, :, :, -1, :].set(s)
+        v = v.at[:, 1:, :, :, 0, :].set(s)
+    if sz > 1:
+        s = v[:-1, :, :, -1, :, :] + v[1:, :, :, 0, :, :]
+        v = v.at[:-1, :, :, -1, :, :].set(s)
+        v = v.at[1:, :, :, 0, :, :].set(s)
+
+    out_dtype = w_ref.dtype
+    w_ref[...] = v.reshape(block_e, n ** 3).astype(out_dtype)
+    p_out[...] = p.astype(out_dtype)
+    pln = ey * ex * n * n
+    bot_ref[...] = v[0, :, :, 0, :, :].reshape(1, pln).astype(out_dtype)
+    top_ref[...] = v[-1, :, :, -1, :, :].reshape(1, pln).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "interpret"))
+def nekbone_ax_slab_pallas(p2: jnp.ndarray, r2: jnp.ndarray, D: jnp.ndarray,
+                           Dt: jnp.ndarray, g3: jnp.ndarray, mx: jnp.ndarray,
+                           my: jnp.ndarray, mz: jnp.ndarray,
+                           beta: jnp.ndarray, *, n: int,
+                           grid: tuple[int, int, int], sz: int,
+                           interpret: bool = False):
+    """Multi-output pallas_call for the v2 slab dots kernel.
+
+    Args:
+      p2/r2: (E, n^3); g3: (E, 3, n^3); mx/my/mz: (EX|EY|EZ, n) per-axis
+      mask factors; beta: (1, 1) scalar operand; grid: (EX, EY, EZ) with
+      ``EZ % sz == 0`` and elements z-major.
+
+    Returns ``(p2_new, w2, bot, top, pap_parts)`` with the boundary planes of
+    shape ``(EZ//sz, EY*EX*n^2)`` and partials ``(EZ//sz, 1)``.
+    """
+    ex, ey, ez = grid
+    E = p2.shape[0]
+    assert E == ex * ey * ez and ez % sz == 0, (grid, sz, E)
+    block_e = sz * ey * ex
+    nblk = ez // sz
+    n3 = n ** 3
+    pln = ey * ex * n * n
+    acc = jnp.float64 if p2.dtype == jnp.float64 else jnp.float32
+    field = pl.BlockSpec((block_e, n3), lambda i: (i, 0))
+    plane = pl.BlockSpec((1, pln), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(nekbone_ax_slab_kernel, n=n, ex=ex, ey=ey, sz=sz),
+        grid=(nblk,),
+        in_specs=[
+            field,                                      # p_prev
+            field,                                      # r
+            pl.BlockSpec((n, n), lambda i: (0, 0)),     # D
+            pl.BlockSpec((n, n), lambda i: (0, 0)),     # Dt
+            pl.BlockSpec((block_e, 3, n3), lambda i: (i, 0, 0)),  # g diag
+            pl.BlockSpec((ex, n), lambda i: (0, 0)),    # mask factor x
+            pl.BlockSpec((ey, n), lambda i: (0, 0)),    # mask factor y
+            pl.BlockSpec((sz, n), lambda i: (i, 0)),    # mask factor z slice
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),     # beta
+        ],
+        out_specs=(field, field, plane, plane,
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))),
+        out_shape=(
+            jax.ShapeDtypeStruct((E, n3), p2.dtype),    # p
+            jax.ShapeDtypeStruct((E, n3), p2.dtype),    # w
+            jax.ShapeDtypeStruct((nblk, pln), p2.dtype),
+            jax.ShapeDtypeStruct((nblk, pln), p2.dtype),
+            jax.ShapeDtypeStruct((nblk, 1), acc),
+        ),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+        name=f"nekbone_ax_slab_n{n}_sz{sz}",
+    )(p2, r2, D, Dt, g3, mx, my, mz, beta)
+
+
+def nekbone_cg_update_kernel(x_ref, p_ref, r_ref, w_ref, addb_ref, addt_ref,
+                             alpha_ref, cx_ref, cy_ref, cz_ref, x_out, r_out,
+                             rcr_ref, *, n: int, ex: int, ey: int, sz: int):
+    """Merged CG back-half on one slab block (DESIGN.md §3.4).
+
+    In one VMEM residency: stitch the cross-block z-interface planes into
+    ``w`` (completing the direct-stiffness summation), apply both axpys, and
+    emit the weighted-norm partial of the *updated* residual:
+
+        w   += neighbour boundary planes     (VMEM-local, O(n^2) operands)
+        x   += alpha * p
+        r   -= alpha * w
+        rcr  = sum(r * c * r)                (c from per-axis factors)
+
+    Refs:
+      x_ref/p_ref/r_ref/w_ref: (block_e, n^3)
+      addb_ref/addt_ref: (1, ey*ex*n^2)  neighbour planes to add at the
+                         block's bottom / top boundary (zeros at the ends)
+      alpha_ref: (1, 1)
+      cx_ref/cy_ref/cz_ref: per-axis c = mask/mult factors ((ex|ey|sz), n)
+      x_out/r_out: (block_e, n^3);  rcr_ref: (1, 1)
+    """
+    block_e = sz * ey * ex
+    f32 = jnp.float64 if x_ref.dtype == jnp.float64 else jnp.float32
+    alpha = alpha_ref[0, 0].astype(f32)
+    v = w_ref[...].astype(f32).reshape(sz, ey, ex, n, n, n)
+    v = v.at[0, :, :, 0, :, :].add(
+        addb_ref[...].astype(f32).reshape(ey, ex, n, n))
+    v = v.at[-1, :, :, -1, :, :].add(
+        addt_ref[...].astype(f32).reshape(ey, ex, n, n))
+
+    x = x_ref[...].astype(f32) + alpha * p_ref[...].astype(f32)
+    r = r_ref[...].astype(f32) - alpha * v.reshape(block_e, n ** 3)
+
+    c = _box_outer(cz_ref[...].astype(f32), cy_ref[...].astype(f32),
+                   cx_ref[...].astype(f32))
+    r6 = r.reshape(sz, ey, ex, n, n, n)
+    rcr_ref[0, 0] = jnp.sum(r6 * c * r6).astype(rcr_ref.dtype)
+    x_out[...] = x.astype(x_out.dtype)
+    r_out[...] = r.astype(r_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "interpret"))
+def nekbone_cg_update_pallas(x2: jnp.ndarray, p2: jnp.ndarray,
+                             r2: jnp.ndarray, w2: jnp.ndarray,
+                             addb: jnp.ndarray, addt: jnp.ndarray,
+                             alpha: jnp.ndarray, cx: jnp.ndarray,
+                             cy: jnp.ndarray, cz: jnp.ndarray, *, n: int,
+                             grid: tuple[int, int, int], sz: int,
+                             interpret: bool = False):
+    """Multi-output pallas_call for the merged vector-update kernel.
+
+    Args mirror :func:`nekbone_ax_slab_pallas`; ``addb``/``addt`` are the
+    *shifted* boundary planes (``addb[b] = top[b-1]``, ``addt[b] = bot[b+1]``,
+    zeros at the global ends).  Returns ``(x2_new, r2_new, rcr_parts)``.
+    """
+    ex, ey, ez = grid
+    E = x2.shape[0]
+    assert E == ex * ey * ez and ez % sz == 0, (grid, sz, E)
+    block_e = sz * ey * ex
+    nblk = ez // sz
+    n3 = n ** 3
+    pln = ey * ex * n * n
+    acc = jnp.float64 if x2.dtype == jnp.float64 else jnp.float32
+    field = pl.BlockSpec((block_e, n3), lambda i: (i, 0))
+    plane = pl.BlockSpec((1, pln), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(nekbone_cg_update_kernel, n=n, ex=ex, ey=ey, sz=sz),
+        grid=(nblk,),
+        in_specs=[
+            field, field, field, field,                 # x, p, r, w
+            plane, plane,                               # addb, addt
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),     # alpha
+            pl.BlockSpec((ex, n), lambda i: (0, 0)),    # c factor x
+            pl.BlockSpec((ey, n), lambda i: (0, 0)),    # c factor y
+            pl.BlockSpec((sz, n), lambda i: (i, 0)),    # c factor z slice
+        ],
+        out_specs=(field, field, pl.BlockSpec((1, 1), lambda i: (i, 0))),
+        out_shape=(
+            jax.ShapeDtypeStruct((E, n3), x2.dtype),
+            jax.ShapeDtypeStruct((E, n3), x2.dtype),
+            jax.ShapeDtypeStruct((nblk, 1), acc),
+        ),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+        name=f"nekbone_cg_update_n{n}_sz{sz}",
+    )(x2, p2, r2, w2, addb, addt, alpha, cx, cy, cz)

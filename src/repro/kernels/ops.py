@@ -18,8 +18,9 @@ from repro.kernels import flash_attn as _flash
 from repro.kernels import nekbone_ax as _ax
 from repro.kernels import wkv6 as _wkv6
 
-__all__ = ["nekbone_ax", "nekbone_ax_dots", "flash_attention", "wkv6",
-           "default_interpret"]
+__all__ = ["nekbone_ax", "nekbone_ax_dots", "nekbone_ax_dots_slab",
+           "nekbone_cg_update", "slab_axis_factors", "diag_metric",
+           "flash_attention", "wkv6", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -108,6 +109,142 @@ def nekbone_ax_dots(p: jnp.ndarray, D: jnp.ndarray, g: jnp.ndarray,
         c.reshape(Ep, n3), n=n, block_e=block_e, interpret=interpret)
     w = w2.reshape(Ep, n, n, n)
     return (w[:E] if pad else w), jnp.sum(pap_b), jnp.sum(rcz_b)
+
+
+def slab_axis_factors(grid: tuple[int, int, int], n: int, dtype):
+    """Per-axis mask and c factors of the structured box, as jnp arrays.
+
+    Thin dtype-casting wrapper over :func:`repro.core.geom.box_axis_factors`
+    (the single source of the factorization); the factor values (0, 1, 1/2)
+    are exact in every supported dtype, so the in-kernel outer products
+    reproduce the full fields bitwise.
+    """
+    from repro.core.geom import box_axis_factors
+
+    masks, cs = box_axis_factors(grid, n)
+    return (tuple(jnp.asarray(m, dtype) for m in masks),
+            tuple(jnp.asarray(c, dtype) for c in cs))
+
+
+def diag_metric(g: jnp.ndarray, E: int, n: int) -> jnp.ndarray:
+    """Pack the metric to its (rr, ss, tt) diagonal, shape (E, 3, n^3).
+
+    Accepts an already-packed (E, 3, ...) metric, or the general 6-component
+    one when its off-diagonal entries are (verifiably) zero — true for every
+    axis-aligned ``BoxMesh``.  Tracers skip the check (callers under jit
+    close over concrete mesh fields, so the check ran at trace time).
+    """
+    import numpy as np
+
+    from repro.core.geom import GEOM_RR, GEOM_RS, GEOM_RT, GEOM_SS, GEOM_ST, \
+        GEOM_TT
+
+    if g.shape[1] == 3:
+        return g.reshape(E, 3, n ** 3)
+    if g.shape[1] != 6:
+        raise ValueError(f"metric must have 3 or 6 components, got {g.shape}")
+    try:
+        off = np.asarray(g[:, (GEOM_RS, GEOM_RT, GEOM_ST)])
+        if off.any():
+            raise ValueError(
+                "the slab (v2) pipeline requires an axis-aligned (diagonal-"
+                "metric) mesh; off-diagonal metric entries are non-zero")
+    except jax.errors.TracerArrayConversionError:
+        pass
+    return g[:, (GEOM_RR, GEOM_SS, GEOM_TT)].reshape(E, 3, n ** 3)
+
+
+def nekbone_ax_dots_slab(p_prev: jnp.ndarray, r: jnp.ndarray,
+                         D: jnp.ndarray, g3: jnp.ndarray,
+                         grid: tuple[int, int, int], *, beta: float = 0.0,
+                         sz: int | None = None,
+                         interpret: bool | None = None):
+    """v2 slab dots kernel on natural shapes, with the planes stitched.
+
+    Computes ``p = r + beta * p_prev`` and the *fully assembled* masked
+    operator output ``w = mask * gs(D^T G D p)`` — the kernel performs the
+    x/y and intra-block z direct-stiffness summation in VMEM, and this
+    wrapper adds the cross-block boundary planes host-side (the fused CG
+    driver stitches them inside the update kernel instead).
+
+    Args:
+      p_prev, r: (E, n, n, n); elements z-major over ``grid``.
+      D: (n, n); g3: (E, 3, n, n, n) metric diagonal (rr, ss, tt), or the
+         full (E, 6, ...) metric of an axis-aligned box (off-diagonals
+         validated zero, then dropped — see :func:`diag_metric`).
+      grid: (EX, EY, EZ); beta: direction-update scalar.
+      sz: slabs per block (default: autotuned divisor of EZ).
+
+    Returns ``(p, w, pap)`` with ``pap == p·c·(mask gs w_local)`` tree-
+    reduced from the per-block partials.
+    """
+    ex, ey, ez = grid = tuple(grid)
+    E = p_prev.shape[0]
+    n = p_prev.shape[-1]
+    interpret = default_interpret() if interpret is None else interpret
+    if sz is None:
+        sz = _autotune.pick_slab_sz(grid, n, p_prev.dtype)
+    n3 = n ** 3
+    nblk = ez // sz
+    (mx, my, mz), _ = slab_axis_factors(grid, n, p_prev.dtype)
+    D = jnp.asarray(D, p_prev.dtype)
+    g3 = diag_metric(jnp.asarray(g3, p_prev.dtype), E, n)
+    acc = jnp.float64 if p_prev.dtype == jnp.float64 else jnp.float32
+    beta_arr = jnp.full((1, 1), beta, acc)
+    p2, w2, bot, top, pap_b = _ax.nekbone_ax_slab_pallas(
+        p_prev.reshape(E, n3), r.reshape(E, n3), D, D.T,
+        g3, mx, my, mz,
+        beta_arr, n=n, grid=grid, sz=sz, interpret=interpret)
+    vb = w2.reshape(nblk, sz, ey, ex, n, n, n)
+    plane = (nblk - 1, ey, ex, n, n)
+    if nblk > 1:
+        vb = vb.at[1:, 0, :, :, 0, :, :].add(top[:-1].reshape(plane))
+        vb = vb.at[:-1, -1, :, :, -1, :, :].add(bot[1:].reshape(plane))
+    return (p2.reshape(p_prev.shape), vb.reshape(p_prev.shape),
+            jnp.sum(pap_b))
+
+
+def nekbone_cg_update(x: jnp.ndarray, p: jnp.ndarray, r: jnp.ndarray,
+                      w: jnp.ndarray, alpha: float,
+                      grid: tuple[int, int, int], *,
+                      addb: jnp.ndarray | None = None,
+                      addt: jnp.ndarray | None = None,
+                      sz: int | None = None,
+                      interpret: bool | None = None):
+    """Merged CG vector-update kernel on natural shapes.
+
+    Computes ``x + alpha p``, ``r - alpha (w + planes)`` and the weighted
+    norm ``sum(r_new * c * r_new)`` of the updated residual, with ``c``
+    rebuilt in-kernel from the box's per-axis factors.
+
+    Args:
+      x, p, r, w: (E, n, n, n); grid: (EX, EY, EZ); alpha: step scalar.
+      addb/addt: optional (EZ//sz, EY*EX*n^2) boundary planes added at each
+                 block's bottom/top before the axpy (default zeros).
+
+    Returns ``(x_new, r_new, rtz_new)``.
+    """
+    ex, ey, ez = grid = tuple(grid)
+    E = x.shape[0]
+    n = x.shape[-1]
+    interpret = default_interpret() if interpret is None else interpret
+    if sz is None:
+        sz = _autotune.pick_slab_sz(grid, n, x.dtype)
+    n3 = n ** 3
+    nblk = ez // sz
+    pln = ey * ex * n * n
+    _, (cx, cy, cz) = slab_axis_factors(grid, n, x.dtype)
+    acc = jnp.float64 if x.dtype == jnp.float64 else jnp.float32
+    if addb is None:
+        addb = jnp.zeros((nblk, pln), x.dtype)
+    if addt is None:
+        addt = jnp.zeros((nblk, pln), x.dtype)
+    alpha_arr = jnp.full((1, 1), alpha, acc)
+    x2, r2, rcr_b = _ax.nekbone_cg_update_pallas(
+        x.reshape(E, n3), p.reshape(E, n3), r.reshape(E, n3),
+        w.reshape(E, n3), addb.reshape(nblk, pln), addt.reshape(nblk, pln),
+        alpha_arr, cx, cy, cz, n=n, grid=grid, sz=sz, interpret=interpret)
+    return x2.reshape(x.shape), r2.reshape(x.shape), jnp.sum(rcr_b)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,

@@ -28,6 +28,17 @@ except ModuleNotFoundError:
     sys.modules["hypothesis.strategies"] = _stub.strategies
 
 
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_autotune_cache(tmp_path_factory):
+    """Point the autotune disk cache at a session tmp dir.
+
+    Keeps the suite from reading or writing ``~/.cache/repro`` (or any
+    pre-exported ``REPRO_CACHE_DIR``) — stale machine-local tuning must not
+    leak into test picks, so the override is unconditional.
+    """
+    os.environ["REPRO_CACHE_DIR"] = str(tmp_path_factory.mktemp("repro-cache"))
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

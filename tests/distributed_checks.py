@@ -173,6 +173,47 @@ def check_sharded_nekbone_cg():
     check("sharded_nekbone_cg", err < 1e-4 * max(scale, 1.0))
 
 
+def check_fused_cg_sharded():
+    """Sharded fused-CG pipeline == single-device fused CG.
+
+    Per shard: the fused operator+pap Pallas kernel, ``ds_sum_sharded`` for
+    the cross-shard z-planes (``halo_exchange_z`` ppermutes), and psum'd
+    inner-product partials.  check_vma off: the replication checker has no
+    rule for pallas_call.
+    """
+    from repro.core.cg_fused import (cg_fused_fixed_iters,
+                                     cg_fused_sharded_fixed_iters)
+    from repro.core.nekbone import NekboneCase
+
+    mesh = mesh1d("data")
+    case = NekboneCase(n=4, grid=(2, 2, 8), dtype=jnp.float32)
+    _, f = case.manufactured()
+    niter = 30
+    ref = cg_fused_fixed_iters(f, D=case.D, g=case.g, mask=case.mask,
+                               c=case.c, grid=case.grid, niter=niter,
+                               interpret=True)
+    grid_l = case.shard_grid(8)
+
+    def solve(f_l, g_l, m_l, c_l):
+        res = cg_fused_sharded_fixed_iters(
+            f_l, D=case.D, g=g_l, mask=m_l, c=c_l, grid_local=grid_l,
+            axis_names=("data",), niter=niter, interpret=True)
+        return res.x, res.rnorm_history
+
+    x, hist = jax.jit(shard_map(
+        solve, mesh=mesh, in_specs=(P("data"),) * 4,
+        out_specs=(P("data"), P()), check_vma=False))(
+            f, case.g, case.mask, case.c)
+    scale = float(jnp.abs(ref.x).max())
+    err = float(jnp.abs(x - ref.x).max())
+    check("fused_cg_sharded_x", err < 1e-4 * max(scale, 1.0))
+    h_ref = np.asarray(ref.rnorm_history)
+    h = np.asarray(hist)
+    check("fused_cg_sharded_hist",
+          np.isfinite(h).all()
+          and float(np.abs(h[:10] - h_ref[:10]).max()) < 1e-4 * h_ref[0])
+
+
 def check_seq_sharded_attention():
     """Sequence-parallel chunked attention == plain chunked (odd head count)."""
     from repro.models.attention import _chunked, _seq_sharded_chunked
@@ -332,6 +373,7 @@ if __name__ == "__main__":
     check_sharded_gather_scatter()
     check_sharded_gs_hierarchical()
     check_sharded_nekbone_cg()
+    check_fused_cg_sharded()
     check_seq_sharded_attention()
     check_seq_sharded_decode()
     check_moe_shardmap_equals_local()

@@ -1,4 +1,7 @@
-"""block_e autotuner: heuristic bounds, measurement path, cache behavior."""
+"""block_e autotuner: heuristic bounds, measurement path, cache behavior,
+slab-mode candidates, and the JSON disk cache."""
+import json
+
 import pytest
 
 import jax.numpy as jnp
@@ -7,7 +10,9 @@ from repro.kernels import autotune
 
 
 @pytest.fixture(autouse=True)
-def _fresh_cache():
+def _fresh_cache(tmp_path, monkeypatch):
+    # point the disk layer at a per-test dir so tests never touch ~/.cache
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
     autotune.clear_cache()
     yield
     autotune.clear_cache()
@@ -73,3 +78,124 @@ def test_measured_winner_beats_heuristic_order():
     be = autotune.pick_block_e(8, 4, jnp.float32, backend="tpu",
                                measure=measure)
     assert be == 4
+
+
+# ---------------------------------------------------------------------------
+# slab mode (v2 pipeline)
+# ---------------------------------------------------------------------------
+
+def test_slab_candidates_divide_ez_and_fit_budget():
+    for grid in ((2, 2, 8), (4, 8, 16), (1, 3, 5), (16, 16, 14)):
+        for n in (4, 10):
+            cands = autotune.candidate_slab_sizes(grid, n)
+            assert cands, (grid, n)
+            assert all(grid[2] % sz == 0 for sz in cands)
+            assert cands == sorted(cands, reverse=True)
+            assert cands[-1] == 1          # one slab is always viable
+            ex, ey, _ = grid
+            n3p = -(-(n ** 3) // 128) * 128
+            # every candidate above the floor fits the working-set budget
+            for sz in cands:
+                if sz > 1:
+                    assert (autotune._LIVE_ARRAYS * n3p * 4 * sz * ex * ey
+                            <= autotune.VMEM_BUDGET_BYTES), (grid, n, sz)
+
+
+def test_pick_slab_sz_cached_per_grid():
+    calls = []
+
+    def measure(sz):
+        calls.append(sz)
+        return float(sz)               # smallest "fastest": picks 1
+
+    sz1 = autotune.pick_slab_sz((2, 2, 8), 4, jnp.float32, backend="tpu",
+                                measure=measure)
+    assert sz1 == 1
+    n_calls = len(calls)
+    assert n_calls == len(autotune.candidate_slab_sizes((2, 2, 8), 4))
+    # same key: cached; different grid: distinct key
+    autotune.pick_slab_sz((2, 2, 8), 4, jnp.float32, backend="tpu",
+                          measure=measure)
+    assert len(calls) == n_calls
+    autotune.pick_slab_sz((2, 2, 4), 4, jnp.float32, backend="tpu",
+                          measure=measure)
+    assert len(calls) > n_calls
+    assert ("slab", 4, 2, 2, 8, "float32", "tpu") in autotune.cache_info()
+
+
+def test_slab_heuristic_on_cpu_prefers_largest():
+    sz = autotune.pick_slab_sz((2, 2, 8), 4, jnp.float32, backend="cpu")
+    assert sz == autotune.candidate_slab_sizes((2, 2, 8), 4)[0]
+
+
+# ---------------------------------------------------------------------------
+# disk persistence
+# ---------------------------------------------------------------------------
+
+def test_measured_pick_persists_and_reloads():
+    def measure(be):
+        return {8: 3.0, 4: 1.0, 2: 2.0, 1: 5.0}[be]
+
+    be = autotune.pick_block_e(8, 4, jnp.float32, backend="tpu",
+                               measure=measure)
+    assert be == 4
+    assert autotune.cache_path().exists()
+
+    # simulate a fresh process: drop memory but keep the file
+    autotune._CACHE.clear()
+    autotune._DISK_LOADED = False
+
+    def boom(be):
+        raise AssertionError("disk-cached pick must not re-measure")
+
+    be2 = autotune.pick_block_e(8, 4, jnp.float32, backend="tpu",
+                                measure=boom)
+    assert be2 == 4
+
+
+def test_heuristic_pick_does_not_write_disk():
+    autotune.pick_block_e(64, 10, jnp.float32, backend="cpu")
+    assert not autotune.cache_path().exists()
+
+
+def test_heuristic_picks_stay_out_of_measured_disk_cache():
+    # a heuristic pick memoized before a measured one must not be persisted
+    # alongside it — heuristic values recompute when the budget constants
+    # change, so pinning them on disk would mask that.
+    autotune.pick_block_e(64, 10, jnp.float32, backend="cpu")
+    autotune.pick_block_e(8, 4, jnp.float32, backend="tpu",
+                          measure=lambda be: float(be))
+    data = json.loads(autotune.cache_path().read_text())
+    keys = {tuple(e["key"]) for e in data["entries"]}
+    assert keys == {(4, 8, "float32", "tpu")}
+
+
+def test_corrupt_cache_file_is_tolerated():
+    path = autotune.cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text("{ not json !!")
+
+    calls = []
+
+    def measure(be):
+        calls.append(be)
+        return float(be)
+
+    be = autotune.pick_block_e(8, 4, jnp.float32, backend="tpu",
+                               measure=measure)
+    assert be == 1 and calls           # re-measured, no crash
+    # and the rewritten file is valid JSON with the new entry
+    data = json.loads(path.read_text())
+    assert any(tuple(e["key"]) == (4, 8, "float32", "tpu")
+               for e in data["entries"])
+
+
+def test_clear_cache_removes_disk():
+    def measure(be):
+        return float(be)
+
+    autotune.pick_block_e(8, 4, jnp.float32, backend="tpu", measure=measure)
+    assert autotune.cache_path().exists()
+    autotune.clear_cache()
+    assert not autotune.cache_path().exists()
+    assert not autotune.cache_info()

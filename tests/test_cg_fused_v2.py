@@ -1,0 +1,239 @@
+"""v2 fused-CG pipeline: slab gather-scatter + merged update (DESIGN.md §3.4).
+
+Three layers are pinned:
+
+* the slab dots kernel's in-block direct-stiffness summation (+ host plane
+  stitch) against ``ds_sum_local`` over randomized element grids — the
+  assembly must be *bitwise* the same pair sums;
+* the merged vector-update kernel against the XLA axpy reference, including
+  the cross-block plane corrections;
+* the whole ``cg_fused_v2_fixed_iters`` against ``cg_fixed_iters`` to fp64
+  round-off in interpret mode, plus fp32/bf16 behaviour through
+  ``NekboneCase(ax_impl='pallas_fused_cg_v2')``.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import cg as cg_mod
+from repro.core.ax import ax_local_fused
+from repro.core.cg_fused import cg_fused_v2_fixed_iters
+from repro.core.gs import ds_sum_local
+from repro.core.nekbone import NekboneCase
+from repro.kernels import ops
+
+
+def _continuous_field(rng, case):
+    """A continuous, masked field — the CG invariant the pap identity needs."""
+    u = jnp.asarray(rng.normal(size=case.mask.shape), case.dtype)
+    return ds_sum_local(u, case.grid) * case.mask
+
+
+def _random_slab_setup(seed):
+    """Randomized (EX, EY, EZ, n, sz) with sz a divisor of EZ."""
+    r = np.random.default_rng(seed)
+    grid = tuple(int(v) for v in r.integers(1, 4, size=3))
+    n = int(r.integers(3, 7))
+    divisors = [d for d in range(1, grid[2] + 1) if grid[2] % d == 0]
+    sz = int(r.choice(divisors))
+    return grid, n, sz
+
+
+# ---------------------------------------------------------------------------
+# Slab kernel: in-block assembly + plane stitch vs ds_sum_local
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_slab_assembly_matches_ds_sum_local(rng, x64, seed):
+    grid, n, sz = _random_slab_setup(seed)
+    case = NekboneCase(n=n, grid=grid, dtype=jnp.float64)
+    p = _continuous_field(rng, case)
+
+    # beta = 0 makes the kernel's direction p == r; the zeros passed as
+    # p_prev must not leak through.
+    p_out, w, pap = ops.nekbone_ax_dots_slab(
+        jnp.zeros_like(p), p, case.D, case.g, grid, beta=0.0, sz=sz,
+        interpret=True)
+
+    np.testing.assert_array_equal(np.asarray(p_out), np.asarray(p))
+    # the in-kernel gather-scatter performs the same pair sums as the
+    # reference assembly; round-off tolerance only covers the operator's
+    # matmul-vs-einsum contraction order.
+    w_ref = ds_sum_local(ax_local_fused(p, case.D, case.g) * case.mask, grid)
+    scale = float(np.abs(np.asarray(w_ref)).max()) + 1e-300
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref),
+                               rtol=1e-12, atol=1e-12 * scale,
+                               err_msg=f"{grid=} {n=} {sz=}")
+    # continuity identity: pap partials (pre-assembly) sum to p·c·Ap.
+    pap_ref = float(jnp.sum(p * case.c * w_ref))
+    assert abs(float(pap) - pap_ref) <= 1e-12 * max(abs(pap_ref), 1e-30)
+
+
+def test_slab_beta_folds_direction_update(rng, x64):
+    """p = r + beta * p_prev inside the kernel, exactly."""
+    grid, n, sz = (2, 2, 4), 4, 2
+    case = NekboneCase(n=n, grid=grid, dtype=jnp.float64)
+    p_prev = _continuous_field(rng, case)
+    r = _continuous_field(rng, case)
+    beta = 0.73
+    p_out, w, pap = ops.nekbone_ax_dots_slab(
+        p_prev, r, case.D, case.g, grid, beta=beta, sz=sz, interpret=True)
+    p_ref = r + beta * p_prev
+    np.testing.assert_allclose(np.asarray(p_out), np.asarray(p_ref),
+                               rtol=1e-15, atol=1e-15)
+    w_ref = ds_sum_local(ax_local_fused(p_ref, case.D, case.g) * case.mask,
+                         grid)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref),
+                               rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Merged vector-update kernel vs the XLA axpy reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("grid,n,sz", [((2, 3, 4), 4, 2), ((1, 2, 3), 5, 1),
+                                       ((2, 2, 2), 3, 2)])
+def test_update_kernel_vs_xla_reference(rng, x64, grid, n, sz):
+    ex, ey, ez = grid
+    case = NekboneCase(n=n, grid=grid, dtype=jnp.float64)
+    E = case.mesh.nelt
+    shp = (E, n, n, n)
+    x, p, r, w = (jnp.asarray(rng.normal(size=shp), jnp.float64)
+                  for _ in range(4))
+    nblk = ez // sz
+    pln = ey * ex * n * n
+    addb = jnp.asarray(rng.normal(size=(nblk, pln)), jnp.float64)
+    addt = jnp.asarray(rng.normal(size=(nblk, pln)), jnp.float64)
+    alpha = 0.37
+
+    x2, r2, rtz = ops.nekbone_cg_update(x, p, r, w, alpha, grid,
+                                        addb=addb, addt=addt, sz=sz,
+                                        interpret=True)
+
+    # reference: stitch the planes into w, then the two axpys + weighted norm
+    vb = np.asarray(w).reshape(nblk, sz, ey, ex, n, n, n).copy()
+    vb[:, 0, :, :, 0, :, :] += np.asarray(addb).reshape(nblk, ey, ex, n, n)
+    vb[:, -1, :, :, -1, :, :] += np.asarray(addt).reshape(nblk, ey, ex, n, n)
+    w_full = vb.reshape(shp)
+    x_ref = np.asarray(x) + alpha * np.asarray(p)
+    r_ref = np.asarray(r) - alpha * w_full
+    rtz_ref = float(np.sum(r_ref * np.asarray(case.c) * r_ref))
+
+    np.testing.assert_allclose(np.asarray(x2), x_ref, rtol=1e-15, atol=1e-15)
+    np.testing.assert_allclose(np.asarray(r2), r_ref, rtol=1e-14, atol=1e-14)
+    assert abs(float(rtz) - rtz_ref) <= 1e-12 * abs(rtz_ref)
+
+
+# ---------------------------------------------------------------------------
+# Solver parity: v2 fused CG vs cg_fixed_iters, fp64 interpret mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,grid,niter", [
+    (4, (2, 2, 2), 10),
+    (5, (2, 3, 2), 8),
+    (10, (2, 2, 4), 5),     # the paper's degree (n=10, E=1024-class) scaled
+])
+def test_cg_fused_v2_matches_fixed_iters_fp64(x64, n, grid, niter):
+    case = NekboneCase(n=n, grid=grid, dtype=jnp.float64)
+    _, f = case.manufactured()
+
+    ref = cg_mod.cg_fixed_iters(case.ax_full, f, niter=niter, dot=case.dot())
+    fused = cg_fused_v2_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                                    niter=niter, mask=case.mask, c=case.c,
+                                    interpret=True)
+
+    h_ref = np.asarray(ref.rnorm_history)
+    h_fus = np.asarray(fused.rnorm_history)
+    assert h_fus.shape == h_ref.shape
+    # rtol pins the different summation association to fp64 round-off; the
+    # atol floor covers entries that already converged to machine epsilon
+    # relative to the initial residual.
+    np.testing.assert_allclose(h_fus, h_ref, rtol=1e-12,
+                               atol=1e-13 * h_ref[0])
+    xs = np.abs(np.asarray(ref.x)).max() + 1e-300
+    np.testing.assert_allclose(np.asarray(fused.x), np.asarray(ref.x),
+                               atol=1e-12 * xs)
+
+
+@pytest.mark.parametrize("sz", [1, 2, 4])
+def test_cg_fused_v2_invariant_to_slab_split_fp64(x64, sz):
+    """The slab split changes only the partial-sum association."""
+    case = NekboneCase(n=4, grid=(2, 2, 4), dtype=jnp.float64)
+    _, f = case.manufactured()
+    ref = cg_mod.cg_fixed_iters(case.ax_full, f, niter=6, dot=case.dot())
+    fused = cg_fused_v2_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                                    niter=6, sz=sz, interpret=True)
+    np.testing.assert_allclose(np.asarray(fused.rnorm_history),
+                               np.asarray(ref.rnorm_history), rtol=1e-12,
+                               atol=1e-13 * float(ref.rnorm_history[0]))
+
+
+def test_cg_fused_v2_through_case_fp32():
+    """NekboneCase(ax_impl='pallas_fused_cg_v2') dispatches fixed-iter solves
+    to the two-kernel pipeline and converges like the XLA path in fp32."""
+    fused_case = NekboneCase(n=6, grid=(2, 2, 2), dtype=jnp.float32,
+                             ax_impl="pallas_fused_cg_v2")
+    res, u_ex = fused_case.solve_manufactured(niter=40)
+    assert int(res.iters) == 40
+    hist = np.asarray(res.rnorm_history)
+    assert np.isfinite(hist).all()
+    assert hist[-1] < hist[0] * 1e-3, "v2 fused CG must actually converge"
+
+    xla_case = NekboneCase(n=6, grid=(2, 2, 2), dtype=jnp.float32,
+                           ax_impl="fused")
+    ref, _ = xla_case.solve_manufactured(niter=40)
+    h_ref = np.asarray(ref.rnorm_history)
+    # fp32 trajectories drift once round-off accumulates through alpha/beta;
+    # early history must agree tightly (fp64 parity is pinned above).
+    np.testing.assert_allclose(hist[:15], h_ref[:15], rtol=5e-3)
+    np.testing.assert_allclose(hist, h_ref, rtol=0.5, atol=1e-4 * hist[0])
+    err_f = float(fused_case.solution_error(res.x, u_ex))
+    err_x = float(xla_case.solution_error(ref.x, u_ex))
+    assert err_f <= err_x * 1.1 + 1e-6
+
+
+def test_cg_fused_v2_bf16_runs_and_converges():
+    """bf16 fields with f32 in-kernel accumulation (the TPU target dtype)."""
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.bfloat16,
+                       ax_impl="pallas_fused_cg_v2")
+    res, _ = case.solve_manufactured(niter=5)
+    assert res.x.dtype == jnp.bfloat16
+    hist = np.asarray(res.rnorm_history, np.float32)
+    assert np.isfinite(hist).all()
+    assert hist[-1] < hist[0]
+
+
+# ---------------------------------------------------------------------------
+# Guard rails: the v2 path must refuse non-box fields
+# ---------------------------------------------------------------------------
+
+def test_cg_fused_v2_rejects_foreign_mask():
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.float32)
+    _, f = case.manufactured()
+    bad_mask = case.mask.at[0, 1, 1, 1].set(0.0)   # interior node masked
+    with pytest.raises(ValueError, match="structured box mask"):
+        cg_fused_v2_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                                niter=2, mask=bad_mask, interpret=True)
+
+
+def test_cg_fused_v2_rejects_nondiagonal_metric(rng):
+    from repro.core.geom import random_spd_metric
+
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.float32)
+    _, f = case.manufactured()
+    g_bad = jnp.asarray(random_spd_metric(rng, case.mesh.nelt, 4),
+                        jnp.float32)
+    with pytest.raises(ValueError, match="axis-aligned"):
+        cg_fused_v2_fixed_iters(f, D=case.D, g=g_bad, grid=case.grid,
+                                niter=2, interpret=True)
+
+
+def test_cg_fused_v2_tol_and_precond_fall_back():
+    """tol-driven and preconditioned solves route to the generic CG."""
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.float32,
+                       ax_impl="pallas_fused_cg_v2")
+    res, _ = case.solve_manufactured(tol=1e-4, max_iter=100)
+    assert int(res.iters) < 100
+    res_pc, _ = case.solve_manufactured(niter=10, precond=True)
+    assert res_pc.rnorm_history.shape == (11,)
