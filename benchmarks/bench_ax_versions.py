@@ -100,6 +100,13 @@ def run():
                      _fused_streams_derived()))
         rows.append((f"cg_fused_v2_iter_e{E}", _time_cg_fused(E, "v2") * 1e6,
                      _fused_v2_streams_derived()))
+        # mixed-precision rung (DESIGN.md §7): the same 13-stream v2
+        # iteration with bf16 storage / f32 accumulation — half the
+        # bytes/DOF/iter of the f32 row above (the derived column carries
+        # the exact ratio; interpret-mode wall time is emulator time).
+        rows.append((f"cg_fused_v2_bf16_iter_e{E}",
+                     _time_cg_fused(E, "v2", precision="bf16") * 1e6,
+                     _v2_precision_derived("bf16")))
     return rows
 
 
@@ -117,7 +124,16 @@ def _fused_v2_streams_derived() -> str:
             f";streams_iter={v2}")
 
 
-def _time_cg_fused(E: int, version: str) -> float:
+def _v2_precision_derived(precision: str) -> str:
+    from repro.core.cost import bytes_per_dof_iter
+
+    lo = sum(bytes_per_dof_iter("fused_v2", precision))
+    f32 = sum(bytes_per_dof_iter("fused_v2", "f32"))
+    return (f"B/dof/iter_{lo}v{f32}={lo / f32:.2f}x"
+            f";streams_iter={FUSED_V2_READ_STREAMS + FUSED_V2_WRITE_STREAMS}")
+
+
+def _time_cg_fused(E: int, version: str, precision: str | None = None) -> float:
     from repro.configs.nekbone import PAPER_CASES
     from repro.core.cg_fused import (cg_fused_fixed_iters,
                                      cg_fused_v2_fixed_iters)
@@ -131,12 +147,14 @@ def _time_cg_fused(E: int, version: str) -> float:
         def one_iter():
             return cg_fused_v2_fixed_iters(f, D=case.D, g=case.g,
                                            grid=case.grid, niter=1,
-                                           mask=case.mask, c=case.c)
+                                           mask=case.mask, c=case.c,
+                                           precision=precision)
     else:
         def one_iter():
             return cg_fused_fixed_iters(f, D=case.D, g=case.g,
                                         mask=case.mask, c=case.c,
-                                        grid=case.grid, niter=1)
+                                        grid=case.grid, niter=1,
+                                        precision=precision)
 
     jax.block_until_ready(one_iter().x)       # compile / warm, like _time()
     t0 = time.perf_counter()

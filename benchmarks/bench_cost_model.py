@@ -17,17 +17,16 @@ from __future__ import annotations
 
 import os
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.cost import (FUSED_CG_READ_STREAMS, FUSED_CG_WRITE_STREAMS,
                              FUSED_V2_READ_STREAMS, FUSED_V2_WRITE_STREAMS,
-                             cg_iter_bytes, cg_iter_flops, fused_cg_iter_bytes,
-                             fused_intensity, fused_v2_cg_iter_bytes,
-                             fused_v2_intensity, fused_v2_plane_streams,
-                             intensity)
+                             bytes_per_dof_iter, cg_iter_bytes,
+                             fused_cg_iter_bytes, fused_intensity,
+                             fused_v2_cg_iter_bytes, fused_v2_intensity,
+                             fused_v2_plane_streams, intensity,
+                             ir_overhead_streams, pipeline_intensity)
 from repro.core.nekbone import NekboneCase
 from repro.launch.hlo_analysis import analyze_hlo
 
@@ -57,7 +56,6 @@ def run():
         hlo_dot = analyze_hlo(compiled.as_text())["dot_flops"]
         bytes_acc = _bytes_accessed(compiled)
 
-        model_flops = cg_iter_flops(D, n)
         model_bytes = sum(cg_iter_bytes(D, itemsize=4))
         # dots are the 12n part of (12n + 34)
         dot_model = D * 12 * n
@@ -101,6 +99,21 @@ def run():
         if v2_bytes is not None:
             rows.append((f"eq2_fused_v2_xla_n{n}", 0.0,
                          f"xla/v2model={v2_bytes / v2_model_bytes:.3f}"))
+
+        # --- precision ladder (DESIGN.md §7): the 13 v2 streams re-priced
+        # per storage dtype — bf16 halves f32's bytes/DOF/iter and doubles
+        # its intensity; these rows land in BENCH_<tag>.json and are what
+        # benchmarks/check_regression.py holds across PRs.
+        for pol in ("f64", "f32", "bf16"):
+            rb, wb = bytes_per_dof_iter("fused_v2", pol)
+            rows.append((f"v2_bytes_{pol}_n{n}", 0.0,
+                         f"B/dof/iter={rb + wb}"
+                         f";I={pipeline_intensity(n, 'fused_v2', pol):.3f}"
+                         "flop/B"))
+        # refinement surcharge: the hi-precision outer pass, amortized over
+        # the default 12-iteration bf16 inner sweeps, in bf16-stream units.
+        rows.append((f"v2_bf16_ir_overhead_n{n}", 0.0,
+                     f"+{ir_overhead_streams(12):.2f}str@inner12"))
     return rows
 
 

@@ -17,12 +17,10 @@ from __future__ import annotations
 import os
 import time
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost import cg_iter_flops, intensity
+from repro.core.cost import cg_iter_flops, intensity, pipeline_intensity
 from repro.core.nekbone import NekboneCase
 
 QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
@@ -63,10 +61,17 @@ def run():
         # beyond-paper: bf16 storage halves every stream of the
         # memory-bound operator => the attainable roofline doubles
         # (I(10) 1.28 -> 2.57 flop/B); fp32 accumulation inside the kernel
-        # keeps CG convergence (tests/test_kernels_ax.py bf16 sweep +
-        # mixed-precision IR for fp64-grade residuals).
+        # keeps CG convergence (tests/test_precision.py parity sweep +
+        # cg_ir_fixed_iters for fp64-grade residuals, DESIGN.md §7).
         rows.append((f"roofline_bound_bf16_e{E}", 0.0,
                      f"{bw * intensity(N_GLL, 2) / 1e9:.2f}GF/s(2x)"))
+        # the fused-v2 pipeline under each precision policy: same bandwidth,
+        # policy-priced streams — the attainable GF/s ladder the
+        # mixed-precision work climbs (cost.pipeline_intensity).
+        for pol in ("f32", "bf16"):
+            bnd = bw * pipeline_intensity(N_GLL, "fused_v2", pol)
+            rows.append((f"roofline_v2_{pol}_e{E}", 0.0,
+                         f"{bnd / 1e9:.2f}GF/s"))
 
         # --- achieved: one full CG iteration (paper's measured quantity) --
         u_ex, f = case.manufactured()

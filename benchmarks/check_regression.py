@@ -1,0 +1,186 @@
+"""CI perf-regression gate over the machine-readable bench JSON.
+
+  PYTHONPATH=src python -m benchmarks.check_regression [FRESH.json]
+      [--baseline benchmarks/baseline/BENCH_baseline.json] [--tol 0.05]
+
+Diffs a fresh ``BENCH_<tag>.json`` (default: the newest one under
+``$REPRO_BENCH_DIR`` / ``benchmarks/out``) against the committed baseline
+and fails (exit 1) on:
+
+* **streams/iter ladder** — the 30 → 17 → 13 Eq.-2 fusion ladder
+  (DESIGN.md §6) must match the baseline *exactly*: a higher number is a
+  real traffic regression, a lower one means someone improved the pipeline
+  and must refresh the baseline to pin the win (benchmarks/README.md).
+* **bytes/DOF/iter** — the per-(pipeline, precision) byte table
+  (DESIGN.md §7) must match within ``--tol`` relative tolerance, and the
+  bf16 column must stay ≈ half of f32 on every rung (the mixed-precision
+  headline).
+* **schema presence** — a fresh file missing either table fails: the gate
+  exists precisely so these numbers cannot silently disappear.
+
+A missing or corrupt file is a hard error (exit 2) with a one-line
+explanation — never a traceback, and never a silent pass.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+DEFAULT_BASELINE = pathlib.Path(__file__).parent / "baseline" / \
+    "BENCH_baseline.json"
+DEFAULT_TOL = 0.05
+
+
+def _die(msg: str) -> None:
+    print(msg, file=sys.stderr)
+    sys.exit(2)
+
+
+def load_bench_json(path: pathlib.Path, role: str) -> dict:
+    """Load one bench JSON; exits 2 with a clear message when the file is
+    missing, unreadable, or corrupt (a stale half-written artifact must
+    fail loudly, not crash or pass)."""
+    path = pathlib.Path(path)
+    try:
+        raw = path.read_text()
+    except OSError as e:
+        _die(f"ERROR: cannot read {role} bench json {path}: {e}")
+    try:
+        data = json.loads(raw)
+    except ValueError as e:
+        _die(f"ERROR: {role} bench json {path} is corrupt "
+             f"(not valid JSON: {e}); delete it and re-run "
+             "`python -m benchmarks.run`")
+    if not isinstance(data, dict):
+        _die(f"ERROR: {role} bench json {path} is corrupt "
+             "(top level is not an object)")
+    return data
+
+
+def find_fresh(bench_dir: pathlib.Path | None = None) -> pathlib.Path:
+    """Newest BENCH_*.json under $REPRO_BENCH_DIR (default benchmarks/out)."""
+    if bench_dir is None:
+        bench_dir = pathlib.Path(os.environ.get("REPRO_BENCH_DIR",
+                                                "benchmarks/out"))
+    cands = sorted(bench_dir.glob("BENCH_*.json"),
+                   key=lambda p: p.stat().st_mtime)
+    if not cands:
+        _die(f"ERROR: no BENCH_*.json under {bench_dir}; run "
+             "`python -m benchmarks.run` first (or pass the file "
+             "explicitly)")
+    return cands[-1]
+
+
+def compare(fresh: dict, base: dict, tol: float = DEFAULT_TOL) -> list[str]:
+    """All regressions of ``fresh`` against ``base`` (empty == gate passes)."""
+    problems: list[str] = []
+
+    # --- streams/iter ladder: exact match -------------------------------
+    base_streams = base.get("streams_per_iter") or {}
+    fresh_streams = fresh.get("streams_per_iter")
+    if not base_streams:
+        problems.append("baseline has no streams_per_iter table "
+                        "(refresh it per benchmarks/README.md)")
+    elif not fresh_streams:
+        problems.append("fresh bench json has no streams_per_iter table — "
+                        "the ladder silently disappeared")
+    else:
+        for rung, want in sorted(base_streams.items()):
+            got = fresh_streams.get(rung)
+            if got is None:
+                problems.append(f"streams/iter rung '{rung}' missing "
+                                f"(baseline: {want})")
+            elif got != want:
+                direction = ("regressed" if got > want else
+                             "improved — refresh the baseline to pin it")
+                problems.append(f"streams/iter '{rung}': {got} != baseline "
+                                f"{want} ({direction})")
+
+    # --- bytes/DOF/iter: tolerance + the bf16 ≈ f32/2 invariant ---------
+    base_bytes = base.get("bytes_per_dof_iter") or {}
+    fresh_bytes = fresh.get("bytes_per_dof_iter")
+    if not base_bytes:
+        problems.append("baseline has no bytes_per_dof_iter table "
+                        "(refresh it per benchmarks/README.md)")
+        return problems
+    if not fresh_bytes:
+        problems.append("fresh bench json has no bytes_per_dof_iter table — "
+                        "per-precision accounting silently disappeared")
+        return problems
+
+    for pipeline, pols in sorted(base_bytes.items()):
+        got_pols = fresh_bytes.get(pipeline)
+        if got_pols is None:
+            problems.append(f"bytes/DOF/iter pipeline '{pipeline}' missing")
+            continue
+        for pol, want in sorted(pols.items()):
+            got = got_pols.get(pol)
+            if got is None:
+                problems.append(
+                    f"bytes/DOF/iter '{pipeline}/{pol}' missing")
+                continue
+            for field in ("read", "write"):
+                w, g = float(want[field]), float(got.get(field, -1))
+                if abs(g - w) > tol * max(abs(w), 1.0):
+                    problems.append(
+                        f"bytes/DOF/iter '{pipeline}/{pol}' {field}: "
+                        f"{g:g} outside ±{tol:.0%} of baseline {w:g}")
+        # bf16 must price at ~half of f32 on every rung present in fresh
+        f32 = got_pols.get("f32")
+        bf16 = got_pols.get("bf16")
+        if f32 and bf16:
+            tot32 = float(f32["read"]) + float(f32["write"])
+            tot16 = float(bf16["read"]) + float(bf16["write"])
+            if tot32 <= 0 or abs(tot16 / tot32 - 0.5) > tol:
+                problems.append(
+                    f"'{pipeline}': bf16 bytes/DOF/iter {tot16:g} is not "
+                    f"≈ half of f32's {tot32:g} "
+                    f"(ratio {tot16 / max(tot32, 1e-9):.3f})")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff a fresh BENCH_<tag>.json against the committed "
+                    "baseline (streams ladder exact, bytes within "
+                    "tolerance)")
+    ap.add_argument("fresh", nargs="?", default=None,
+                    help="fresh BENCH_<tag>.json (default: newest under "
+                         "$REPRO_BENCH_DIR / benchmarks/out)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help=f"committed baseline (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
+                    help="relative tolerance for byte counts "
+                         f"(default {DEFAULT_TOL})")
+    args = ap.parse_args(argv)
+
+    fresh_path = pathlib.Path(args.fresh) if args.fresh else find_fresh()
+    fresh = load_bench_json(fresh_path, "fresh")
+    base = load_bench_json(pathlib.Path(args.baseline), "baseline")
+
+    try:
+        problems = compare(fresh, base, tol=args.tol)
+    except (KeyError, TypeError, AttributeError, ValueError) as e:
+        # valid JSON, wrong shape (hand-edited table, scalar where an
+        # object belongs): same contract as corrupt JSON — clear error,
+        # exit 2, never a traceback.
+        _die(f"ERROR: bench json structure is malformed ({e!r}); "
+             f"re-generate {fresh_path} with `python -m benchmarks.run` "
+             "or refresh the baseline per benchmarks/README.md")
+    if problems:
+        print(f"perf-regression gate FAILED ({fresh_path} vs "
+              f"{args.baseline}):")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    streams = fresh.get("streams_per_iter", {})
+    print(f"perf-regression gate OK: {fresh_path} matches {args.baseline} "
+          f"(streams/iter {streams}, bytes within ±{args.tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

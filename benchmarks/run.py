@@ -6,9 +6,17 @@ roofline), §III-A Eq. 1-2 (cost-model adherence).
 
 Besides the CSV on stdout, the full result set is written as
 ``BENCH_<tag>.json`` (machine readable: rows + the stream-per-iteration
-ladder + us/call) under ``$REPRO_BENCH_DIR`` (default ``benchmarks/out``),
-with ``tag`` from ``$REPRO_BENCH_TAG`` (default ``local``) — CI uploads it
-as an artifact so the perf trajectory is tracked across PRs.
+ladder + the per-precision bytes/DOF/iter table + us/call) under
+``$REPRO_BENCH_DIR`` (default ``benchmarks/out``), with ``tag`` from
+``$REPRO_BENCH_TAG`` (default ``local``) — CI uploads it as an artifact
+and ``benchmarks/check_regression.py`` diffs it against the committed
+``benchmarks/baseline/BENCH_baseline.json`` so the ladder cannot silently
+regress.
+
+The JSON is written atomically (tmp + rename): a crash mid-write can
+never leave a corrupt ``BENCH_<tag>.json`` for the regression gate (or a
+later run) to trip over, and an unwritable ``$REPRO_BENCH_DIR`` degrades
+to a clear one-line error after the CSV instead of a traceback.
 """
 from __future__ import annotations
 
@@ -23,6 +31,55 @@ def _bench_json_path() -> pathlib.Path:
                                           "benchmarks/out"))
     tag = os.environ.get("REPRO_BENCH_TAG", "local")
     return out_dir / f"BENCH_{tag}.json"
+
+
+def write_json_atomic(path: pathlib.Path, payload: dict) -> bool:
+    """Atomically (tmp + rename) write ``payload`` as JSON to ``path``.
+
+    Returns False — after printing a clear one-line error to stderr —
+    instead of raising when the directory is unwritable, the path is
+    occupied by a directory, or any other OSError fires; the rename is
+    atomic, so a stale ``BENCH_<tag>.json`` is either fully replaced or
+    untouched, never half-written.
+    """
+    tmp = None
+    try:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_name(path.name + f".tmp.{os.getpid()}")
+        tmp.write_text(json.dumps(payload, indent=1))
+        tmp.replace(path)
+        return True
+    except OSError as e:
+        print(f"# ERROR: could not write bench json {path}: {e} "
+              "(CSV above is complete; set $REPRO_BENCH_DIR to a writable "
+              "directory to keep the machine-readable copy)",
+              file=sys.stderr)
+        if tmp is not None:
+            try:
+                tmp.unlink(missing_ok=True)
+            except OSError:
+                pass
+        return False
+
+
+def _precision_table() -> dict:
+    """The ndof-independent bytes/DOF/iter table the regression gate holds.
+
+    Every (pipeline rung, precision policy) point of DESIGN.md §6-7:
+    stream counts are pipeline constants, the policy prices the bytes —
+    bf16 is exactly half of f32 on every rung, which
+    check_regression.py asserts.
+    """
+    from repro.core import cost
+
+    table = {}
+    for pipeline in cost.PIPELINE_STREAMS:
+        table[pipeline] = {}
+        for pol in ("f64", "f32", "bf16"):
+            rb, wb = cost.bytes_per_dof_iter(pipeline, pol)
+            table[pipeline][pol] = {"read": rb, "write": wb}
+    return table
 
 
 def main() -> None:
@@ -44,7 +101,7 @@ def main() -> None:
                          "rows": rows})
 
     payload = {
-        "schema": "repro-bench/1",
+        "schema": "repro-bench/2",
         "tag": os.environ.get("REPRO_BENCH_TAG", "local"),
         "quick": bool(os.environ.get("REPRO_BENCH_QUICK")),
         # the Eq.-2 fusion ladder this repo climbs (reads+writes per DOF
@@ -56,15 +113,14 @@ def main() -> None:
             "fused_v2": (cost.FUSED_V2_READ_STREAMS
                          + cost.FUSED_V2_WRITE_STREAMS),
         },
+        # the second axis of the ladder (DESIGN.md §7): bytes each stream
+        # carries under each precision policy, per DOF per iteration.
+        "bytes_per_dof_iter": _precision_table(),
         "sections": sections,
     }
     path = _bench_json_path()
-    try:
-        path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(payload, indent=1))
+    if write_json_atomic(path, payload):
         print(f"# wrote {path}", file=sys.stderr)
-    except OSError as e:                      # read-only checkout: CSV stands
-        print(f"# could not write {path}: {e}", file=sys.stderr)
 
 
 if __name__ == '__main__':

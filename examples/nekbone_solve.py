@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.nekbone import PAPER_CASES
-from repro.core.cg import cg
 from repro.core.cost import cg_iter_flops
 from repro.core.nekbone import NekboneCase
 
@@ -89,17 +88,29 @@ def main():
     print(f"iterations to 1e-6: plain={int(r_plain.iters)} "
           f"jacobi={int(r_pc.iters)}")
 
-    print("\n== beyond-paper: mixed-precision iterative refinement ==")
-    from repro.core.cg import ir_solve
+    print("\n== beyond-paper: mixed-precision fused CG (DESIGN.md §7) ==")
+    # bf16 storage halves every stream of the 13-stream v2 pipeline; the
+    # iterative-refinement outer loop (cg_ir_fixed_iters) recovers the
+    # caller-precision residual floor from the bf16-priced inner solves.
+    # (true fp64 outer residuals need JAX_ENABLE_X64=1; the structure is
+    # identical in fp32, demonstrated here on a small case.)
+    from repro.core.cg_fused import cg_ir_fixed_iters
+    from repro.core.cost import bytes_per_dof_iter, ir_overhead_streams
 
-    # (true fp64 outer residuals need JAX_ENABLE_X64=1; the structure of the
-    # refinement loop is identical and demonstrated here in fp32)
-    def inner(r):
-        tol = 1e-5 * jnp.linalg.norm(r.ravel())
-        return cg(case.ax_full, r, tol=tol, max_iter=300, dot=case.dot()).x
+    for pol in ("f64", "f32", "bf16"):
+        rb, wb = bytes_per_dof_iter("fused_v2", pol)
+        print(f"  fused_v2 bytes/DOF/iter {pol:>4}: {rb + wb:3d} "
+              f"({rb}R + {wb}W)")
+    print(f"  bf16_ir outer-pass surcharge: "
+          f"+{ir_overhead_streams(20):.2f} bf16-streams/iter @ 20-iter sweeps")
 
-    x, norms = ir_solve(case.ax_full, f, inner, outer_iters=3)
-    print("IR residual norms:", [f"{float(n):.2e}" for n in norms])
+    mp = NekboneCase(n=6, grid=(2, 2, 2), dtype=jnp.float32)
+    _, fmp = mp.manufactured()
+    ir = cg_ir_fixed_iters(fmp, D=mp.D, g=mp.g, grid=mp.grid, niter=20,
+                           precision="bf16_ir", outer_iters=3)
+    print("bf16_ir outer residual norms:",
+          [f"{float(v):.2e}" for v in ir.rnorm_history],
+          f"({int(ir.iters)} bf16-priced inner iterations)")
 
 
 if __name__ == "__main__":

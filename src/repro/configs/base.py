@@ -8,7 +8,6 @@ only ever lowered via the dry-run (ShapeDtypeStruct, no allocation).
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 

@@ -19,6 +19,13 @@ class NekboneConfig:
     niter: int = 100                     # paper: 100 CG iterations
     dtype: str = "float32"               # TPU target; fp64 on CPU oracle
     ax_impl: str = "pallas"
+    # Fused-pipeline precision policy (DESIGN.md §7, core/precision.py):
+    # "f64" | "f32" | "bf16" | "bf16_ir" | "f32_ir", or None to leave the
+    # solver dtype entirely to ``dtype`` (pre-policy behaviour — a
+    # non-refined policy would otherwise *override* ``dtype`` with its
+    # storage dtype).  "bf16_ir" is the mixed-precision target (bf16
+    # storage streams, f32 accumulation, iterative-refinement outer loop).
+    precision: str | None = None
 
     @property
     def nelt(self) -> int:
@@ -28,6 +35,23 @@ class NekboneConfig:
     @property
     def ndof(self) -> int:
         return self.nelt * self.n ** 3
+
+    def make_case(self, **overrides):
+        """Instantiate the runnable :class:`repro.core.nekbone.NekboneCase`
+        for this configuration (keyword overrides win)."""
+        from repro.core.nekbone import NekboneCase
+
+        kwargs = dict(n=self.n, grid=self.grid,
+                      dtype=jnp_dtype(self.dtype), ax_impl=self.ax_impl,
+                      precision=self.precision)
+        kwargs.update(overrides)
+        return NekboneCase(**kwargs)
+
+
+def jnp_dtype(name: str):
+    import jax.numpy as jnp
+
+    return jnp.dtype(name)
 
 
 def _case(nelt: int, grid) -> NekboneConfig:
@@ -47,5 +71,10 @@ PAPER_CASES = {
 }
 
 
-def paper_case(nelt: int = 1024) -> NekboneConfig:
-    return PAPER_CASES[nelt]
+def paper_case(nelt: int = 1024,
+               precision: str | None = None) -> NekboneConfig:
+    """A paper-grid case, optionally re-priced under a precision policy."""
+    cfg = PAPER_CASES[nelt]
+    if precision != cfg.precision:
+        cfg = dataclasses.replace(cfg, precision=precision)
+    return cfg

@@ -15,7 +15,6 @@ Provided solvers:
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple
 
 import jax

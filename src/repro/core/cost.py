@@ -23,7 +23,9 @@ __all__ = ["flops_per_dof", "cg_iter_flops", "cg_iter_bytes", "intensity",
            "FUSED_CG_WRITE_STREAMS", "fused_cg_iter_bytes", "fused_intensity",
            "FUSED_V2_READ_STREAMS", "FUSED_V2_WRITE_STREAMS",
            "fused_v2_cg_iter_bytes", "fused_v2_intensity",
-           "fused_v2_plane_streams"]
+           "fused_v2_plane_streams", "PIPELINE_STREAMS", "PRECISION_ITEMSIZE",
+           "precision_itemsize", "bytes_per_dof_iter", "pipeline_intensity",
+           "ir_overhead_streams"]
 
 # Eq. 2's stream counts: fp64 words moved per DOF per CG iteration when the
 # operator, mask, and every inner product run as separate passes.
@@ -111,6 +113,66 @@ def fused_v2_plane_streams(n: int, sz: int) -> float:
     full stream (0.1 at the paper's n=10 with sz=4) — why the accounting
     charges them as ~zero."""
     return 4.0 / (float(n) * float(sz))
+
+
+# ---------------------------------------------------------------------------
+# dtype-aware accounting (DESIGN.md §7): the stream *counts* above are fixed
+# per pipeline; the precision policy sets the bytes each stream carries.
+# ---------------------------------------------------------------------------
+
+# (reads, writes) full-field streams per DOF per CG iteration, per pipeline
+# rung of the DESIGN.md §6 ladder.
+PIPELINE_STREAMS = {
+    "eq2": (CG_READ_STREAMS, CG_WRITE_STREAMS),
+    "fused_v1": (FUSED_CG_READ_STREAMS, FUSED_CG_WRITE_STREAMS),
+    "fused_v2": (FUSED_V2_READ_STREAMS, FUSED_V2_WRITE_STREAMS),
+}
+
+# Storage-dtype bytes per word, per precision-policy name
+# (core/precision.py).  The refined policies price like their storage: the
+# refinement outer loop's high-precision pass is charged separately
+# (:func:`ir_overhead_streams`), amortized over the inner iterations.
+PRECISION_ITEMSIZE = {"f64": 8, "f32": 4, "bf16": 2,
+                      "f32_ir": 4, "bf16_ir": 2}
+
+
+def precision_itemsize(precision) -> int:
+    """Storage bytes/word of a policy name or PrecisionPolicy instance."""
+    itemsize = getattr(precision, "itemsize", None)
+    if itemsize is not None:
+        return int(itemsize)
+    return PRECISION_ITEMSIZE[str(precision)]
+
+
+def bytes_per_dof_iter(pipeline: str, precision) -> tuple[int, int]:
+    """(read_bytes, write_bytes) per DOF per CG iteration for a pipeline
+    rung under a precision policy — the ndof-independent quantity the CI
+    regression gate diffs (benchmarks/check_regression.py)."""
+    reads, writes = PIPELINE_STREAMS[pipeline]
+    itemsize = precision_itemsize(precision)
+    return reads * itemsize, writes * itemsize
+
+
+def pipeline_intensity(n: int, pipeline: str, precision) -> float:
+    """Eq. 2 arithmetic intensity of a (pipeline, precision) point:
+    same (12n + 34) flops over the policy-priced streams."""
+    return flops_per_dof(n) / float(sum(bytes_per_dof_iter(pipeline,
+                                                           precision)))
+
+
+def ir_overhead_streams(inner_iters: int, hi_itemsize: int = 8,
+                        itemsize: int = 2) -> float:
+    """Storage-stream equivalents the refinement outer loop adds per inner
+    iteration.
+
+    Each sweep runs one high-precision pass — the operator refresh
+    (7R + 1W), the residual/solution axpys (4R + 2W) — ~14 ``hi_itemsize``
+    words/DOF, amortized over ``inner_iters`` low-precision iterations and
+    expressed in units of one storage-dtype stream.  At the defaults
+    (bf16 inner, f64 outer, 12 inner iters) that is ~4.7 extra bf16
+    streams on the v2 budget's 13: ~35 bytes/DOF/iter against unrefined
+    f32 v2's 52 — the refined pipeline still moves ~1.5x fewer bytes."""
+    return 14.0 * float(hi_itemsize) / (float(itemsize) * float(inner_iters))
 
 
 def ax_local_flops(nelt: int, n: int) -> int:

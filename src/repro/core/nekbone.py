@@ -18,10 +18,8 @@ and assembling interfaces with a ppermute halo exchange (core/gs.py).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -51,6 +49,13 @@ class NekboneCase:
                iteration plus XLA assembly/vector passes (DESIGN.md §3.3);
                v2 runs the whole iteration in two slab-resident Pallas
                kernels with in-kernel gather-scatter (DESIGN.md §3.4).
+      precision: 'f64' | 'f32' | 'bf16' | 'bf16_ir' | 'f32_ir' | None —
+               the fused pipeline's precision policy (DESIGN.md §7).
+               Non-refined policies also set the case ``dtype`` to the
+               storage dtype; refined (``*_ir``) policies keep ``dtype``
+               as the *outer* (residual) precision and route fixed-iter
+               solves through ``cg_ir_fixed_iters``.  ``None`` keeps the
+               pre-policy behaviour: everything in ``dtype``.
     """
 
     n: int = 10
@@ -58,8 +63,17 @@ class NekboneCase:
     lengths: tuple[float, float, float] = (1.0, 1.0, 1.0)
     dtype: jnp.dtype = jnp.float32
     ax_impl: str = "fused"
+    precision: str | None = None
 
     def __post_init__(self):
+        if self.precision is not None:
+            from repro.core.precision import resolve_policy
+
+            policy = resolve_policy(self.precision)
+            if not policy.refine:
+                # storage dtype IS the case dtype: mesh fields, rhs, and
+                # the solver all live in it (Eq.-2 streams are billed here).
+                self.dtype = policy.storage_dtype
         self.mesh = BoxMesh(self.n, self.grid, self.lengths)
         ops = self.mesh.ops
         dt = self.dtype
@@ -73,7 +87,12 @@ class NekboneCase:
     # ------------------------------------------------------------------
     @property
     def cost(self) -> CostModel:
-        return CostModel(self.mesh.nelt, self.n, jnp.dtype(self.dtype).itemsize)
+        from repro.core.cost import precision_itemsize
+
+        itemsize = (precision_itemsize(self.precision)
+                    if self.precision is not None
+                    else jnp.dtype(self.dtype).itemsize)
+        return CostModel(self.mesh.nelt, self.n, itemsize)
 
     # ------------------------------------------------------------------
     def ax_local(self, u: jnp.ndarray) -> jnp.ndarray:
@@ -114,14 +133,27 @@ class NekboneCase:
         M = None
         if precond:
             M = cg_mod.jacobi_preconditioner(self.operator_diagonal())
+        fused = self.ax_impl in ("pallas_fused_cg", "pallas_fused_cg_v2")
+        if (fused and niter is not None and M is None
+                and self.precision is not None):
+            from repro.core.precision import resolve_policy
+
+            policy = resolve_policy(self.precision)
+            if policy.refine:
+                variant = ("v2" if self.ax_impl == "pallas_fused_cg_v2"
+                           else "v1")
+                return cg_fused_mod.cg_ir_fixed_iters(
+                    f, D=self.D, g=self.g, grid=self.grid, niter=niter,
+                    precision=policy, mask=self.mask, c=self.c,
+                    variant=variant)
         if self.ax_impl == "pallas_fused_cg_v2" and niter is not None and M is None:
             return cg_fused_mod.cg_fused_v2_fixed_iters(
                 f, D=self.D, g=self.g, grid=self.grid, niter=niter,
-                mask=self.mask, c=self.c)
+                mask=self.mask, c=self.c, precision=self.precision)
         if self.ax_impl == "pallas_fused_cg" and niter is not None and M is None:
             return cg_fused_mod.cg_fused_fixed_iters(
                 f, D=self.D, g=self.g, mask=self.mask, c=self.c,
-                grid=self.grid, niter=niter)
+                grid=self.grid, niter=niter, precision=self.precision)
         if niter is not None:
             return cg_mod.cg_fixed_iters(self.ax_full, f, niter=niter,
                                          dot=self.dot(), precond=M)

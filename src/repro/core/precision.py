@@ -1,0 +1,155 @@
+"""Precision policies for the fused CG pipeline (DESIGN.md §7).
+
+The paper's arithmetic is fp64; the roofline analysis (§IV) shows the Ax
+kernel bandwidth-bound at 77-92 % of peak, so once the stream *count* is
+fixed (30 → 17 → 13, DESIGN.md §6) the remaining lever is the bytes *per*
+stream.  A policy makes the field dtype a first-class parameter of the
+pipeline, split into two independent choices:
+
+* **storage** — the dtype ``x``/``r``/``p``/``w`` and the diagonal metric
+  occupy in HBM.  This is what every stream of the Eq.-2 ladder is billed
+  in: bf16 storage halves f32's traffic and quarters f64's.
+* **accum** — the dtype the kernels upcast to on load and accumulate the
+  tensor contractions, direct-stiffness sums, and the ``p·c·Ap`` /
+  ``r·c·r`` partials in.  Accumulation is VMEM/register-resident, so a
+  wide accum costs no HBM bytes.
+
+Low-precision storage stalls CG at the storage dtype's round-off floor
+(bf16: ~4e-3 relative); policies with ``refine=True`` wrap the inner
+solve in an iterative-refinement outer loop
+(:func:`repro.core.cg_fused.cg_ir_fixed_iters`) whose residuals are
+formed in the caller's (high) precision — recovering fp64-class floors
+from bf16-priced streams.
+
+Named policies::
+
+    f64      f64 storage, f64 accum          (CPU oracle / paper precision)
+    f32      f32 storage, f32 accum          (TPU default)
+    bf16     bf16 storage, f32 accum         (half of f32's bytes/iter)
+    f32_ir   f32 storage, f32 accum, refined
+    bf16_ir  bf16 vectors, f32 accum + x + metric, refined  (the target)
+
+Every fused entry point accepts ``precision`` as a name, a
+:class:`PrecisionPolicy`, or ``None`` (infer the non-refined policy from
+the operand dtype — the pre-policy behaviour, bit-for-bit).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["PrecisionPolicy", "POLICIES", "resolve_policy",
+           "policy_from_dtype"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """One (storage, accum, refine) point of the precision space.
+
+    Attributes:
+      name:    registry key (``POLICIES``) and autotune/bench label.
+      storage: dtype name fields live in, in HBM (what streams are billed in).
+      accum:   dtype in-kernel contractions and reduction partials use.
+      refine:  wrap the solve in the iterative-refinement outer loop.
+      x_storage: optional override for the *solution* vector's storage
+               dtype.  ``x`` never feeds the operator — it only
+               accumulates ``alpha p`` — so widening it leaves the tensor
+               contractions' streams untouched while removing the
+               ``O(storage-eps · kappa)`` residual noise that rounding the
+               returned solution injects; the refined policies need that
+               (the correction each sweep hands back IS a solution), so
+               ``bf16_ir`` stores ``x`` in f32 at +2 of 26 bytes/DOF/iter.
+      op_storage: optional override for the dtype of the operator's
+               *defining data* — the diagonal metric and the derivative
+               matrix.  Rounding them perturbs ``A`` itself, which caps
+               iterative refinement's per-sweep contraction at a fixed
+               ``O(op-eps · kappa_eff)`` floor no number of sweeps can
+               pass; the refined bf16 policy therefore keeps the metric in
+               f32 (3 of the v2 pipeline's 13 streams) while all CG
+               *vectors* stream at bf16 width.
+    """
+
+    name: str
+    storage: str
+    accum: str
+    refine: bool = False
+    x_storage: str | None = None
+    op_storage: str | None = None
+
+    @property
+    def storage_dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.storage)
+
+    @property
+    def accum_dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.accum)
+
+    @property
+    def x_storage_dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.x_storage or self.storage)
+
+    @property
+    def op_storage_dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.op_storage or self.storage)
+
+    @property
+    def itemsize(self) -> int:
+        """Bytes per stored word — the Eq.-2 byte multiplier."""
+        return self.storage_dtype.itemsize
+
+    @property
+    def eps(self) -> float:
+        """Unit round-off of the *storage* dtype: the parity-test tolerance
+        scale and the per-sweep floor of the refinement loop."""
+        return float(jnp.finfo(self.storage_dtype).eps)
+
+
+POLICIES: dict[str, PrecisionPolicy] = {
+    "f64": PrecisionPolicy("f64", "float64", "float64"),
+    "f32": PrecisionPolicy("f32", "float32", "float32"),
+    "bf16": PrecisionPolicy("bf16", "bfloat16", "float32"),
+    "f32_ir": PrecisionPolicy("f32_ir", "float32", "float32", refine=True),
+    "bf16_ir": PrecisionPolicy("bf16_ir", "bfloat16", "float32",
+                               refine=True, x_storage="float32",
+                               op_storage="float32"),
+}
+
+
+def policy_from_dtype(dtype) -> PrecisionPolicy:
+    """The non-refined policy matching a bare operand dtype.
+
+    This is the pre-policy implicit behaviour: f64 accumulates in f64
+    (the CPU oracle), everything narrower accumulates in f32.
+    """
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.float64:
+        return POLICIES["f64"]
+    if dtype == jnp.dtype(jnp.bfloat16):
+        return POLICIES["bf16"]
+    if dtype == jnp.float32:
+        return POLICIES["f32"]
+    # f16 etc.: storage as given, f32 accumulation — the TPU-safe default.
+    return PrecisionPolicy(dtype.name, dtype.name, "float32")
+
+
+def resolve_policy(precision, dtype=None) -> PrecisionPolicy:
+    """Normalize a ``precision=`` argument to a :class:`PrecisionPolicy`.
+
+    Args:
+      precision: a policy name (``POLICIES`` key), a policy instance, or
+                 ``None`` to infer from ``dtype``.
+      dtype:     operand dtype used when ``precision`` is ``None``.
+    """
+    if precision is None:
+        if dtype is None:
+            raise ValueError("precision=None needs an operand dtype")
+        return policy_from_dtype(dtype)
+    if isinstance(precision, PrecisionPolicy):
+        return precision
+    try:
+        return POLICIES[str(precision)]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of "
+            f"{sorted(POLICIES)} or a PrecisionPolicy") from None

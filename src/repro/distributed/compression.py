@@ -15,7 +15,6 @@ Used by ``launch/train.py`` via ``--grad-compression {none,bf16,int8}``.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -169,7 +169,8 @@ def candidate_blocks(E: int, n: int, itemsize: int = 4) -> list[int]:
     return cands or [1]
 
 
-def _default_measure(E: int, n: int, dtype) -> Callable[[int], float]:
+def _default_measure(E: int, n: int, dtype,
+                     acc_dtype=None) -> Callable[[int], float]:
     """Times the real Ax kernel on synthetic data for one block size."""
     import time
 
@@ -185,8 +186,11 @@ def _default_measure(E: int, n: int, dtype) -> Callable[[int], float]:
     Dt = D.T
 
     def measure(block_e: int) -> float:
-        f = lambda: _ax.nekbone_ax_pallas(u2, D, Dt, g2, n=n,
-                                          block_e=block_e, interpret=False)
+        def f():
+            return _ax.nekbone_ax_pallas(u2, D, Dt, g2, n=n,
+                                         block_e=block_e, interpret=False,
+                                         acc_dtype=acc_dtype)
+
         jax.block_until_ready(f())             # compile + warm
         t0 = time.perf_counter()
         for _ in range(3):
@@ -197,10 +201,24 @@ def _default_measure(E: int, n: int, dtype) -> Callable[[int], float]:
     return measure
 
 
+def _acc_name(dtype, acc_dtype) -> str:
+    """Resolved accumulation-dtype name for cache keys.
+
+    Mirrors ``kernels/nekbone_ax._accum``: an explicit precision-policy
+    choice wins, else f64 storage accumulates in f64 and everything
+    narrower in f32.  Keys carry the resolved pair so e.g. (bf16, f32) and
+    (bf16, f64) — different VMEM working sets, different kernels — never
+    collide.
+    """
+    if acc_dtype is not None:
+        return jnp.dtype(acc_dtype).name
+    return "float64" if jnp.dtype(dtype) == jnp.float64 else "float32"
+
+
 def pick_block_e(E: int, n: int, dtype=jnp.float32, *,
-                 backend: str | None = None,
+                 acc_dtype=None, backend: str | None = None,
                  measure: Callable[[int], float] | None = None) -> int:
-    """Best ``block_e`` for ``(E, n, dtype)`` on ``backend``, memoized.
+    """Best ``block_e`` for ``(E, n, storage/accum dtypes)``, memoized.
 
     On a TPU backend (or when an explicit ``measure`` callable is supplied)
     the candidates are timed and the fastest wins; elsewhere the VMEM
@@ -210,13 +228,18 @@ def pick_block_e(E: int, n: int, dtype=jnp.float32, *,
     """
     dtype = jnp.dtype(dtype)
     backend = backend or jax.default_backend()
-    key = (n, E, dtype.name, backend)
+    acc_name = _acc_name(dtype, acc_dtype)
+    key = (n, E, dtype.name, acc_name, backend)
+    # the ~14 live block arrays sit in VMEM in the *accumulation* dtype,
+    # so candidates must be sized by the wider of the pair — a (bf16, f64)
+    # policy holds 8-byte temporaries off 2-byte streams.
+    size_item = max(dtype.itemsize, jnp.dtype(acc_name).itemsize)
 
     def pick() -> tuple[int, bool]:
-        cands = candidate_blocks(E, n, itemsize=dtype.itemsize)
+        cands = candidate_blocks(E, n, itemsize=size_item)
         m = measure
         if m is None and backend == "tpu":
-            m = _default_measure(E, n, dtype)
+            m = _default_measure(E, n, dtype, acc_dtype)
         if m is None:
             return cands[0], False
         return min(cands, key=m), True
@@ -246,8 +269,8 @@ def candidate_slab_sizes(grid: tuple[int, int, int], n: int,
     return cands or [1]
 
 
-def _default_measure_slab(grid: tuple[int, int, int], n: int,
-                          dtype) -> Callable[[int], float]:
+def _default_measure_slab(grid: tuple[int, int, int], n: int, dtype,
+                          acc_dtype=None) -> Callable[[int], float]:
     """Times the v2 slab kernel on synthetic data for one slab count."""
     import time
 
@@ -267,13 +290,14 @@ def _default_measure_slab(grid: tuple[int, int, int], n: int,
     mx = jnp.asarray(axis_mask_factor(ex, n), dtype)
     my = jnp.asarray(axis_mask_factor(ey, n), dtype)
     mz = jnp.asarray(axis_mask_factor(ez, n), dtype)
-    acc = jnp.float64 if jnp.dtype(dtype) == jnp.float64 else jnp.float32
-    beta = jnp.zeros((1, 1), acc)
+    beta = jnp.zeros((1, 1), _ax._accum(jnp.dtype(dtype), acc_dtype))
 
     def measure(sz: int) -> float:
-        f = lambda: _ax.nekbone_ax_slab_pallas(
-            p2, r2, D, D.T, g3, mx, my, mz, beta, n=n, grid=grid, sz=sz,
-            interpret=False)
+        def f():
+            return _ax.nekbone_ax_slab_pallas(
+                p2, r2, D, D.T, g3, mx, my, mz, beta, n=n, grid=grid, sz=sz,
+                interpret=False, acc_dtype=acc_dtype)
+
         jax.block_until_ready(f()[0])          # compile + warm
         t0 = time.perf_counter()
         for _ in range(3):
@@ -285,24 +309,28 @@ def _default_measure_slab(grid: tuple[int, int, int], n: int,
 
 
 def pick_slab_sz(grid: tuple[int, int, int], n: int, dtype=jnp.float32, *,
-                 backend: str | None = None,
+                 acc_dtype=None, backend: str | None = None,
                  measure: Callable[[int], float] | None = None) -> int:
     """Best slabs-per-block for the v2 pipeline on ``grid``, memoized.
 
     Same measure-on-TPU / heuristic-elsewhere policy as
     :func:`pick_block_e`; cache keys carry the full element grid because
-    the slab layout (and the plane side-output sizes) depend on it.
+    the slab layout (and the plane side-output sizes) depend on it, plus
+    the resolved (storage, accum) dtype pair.
     """
     dtype = jnp.dtype(dtype)
     backend = backend or jax.default_backend()
     ex, ey, ez = grid
-    key = ("slab", n, ex, ey, ez, dtype.name, backend)
+    acc_name = _acc_name(dtype, acc_dtype)
+    key = ("slab", n, ex, ey, ez, dtype.name, acc_name, backend)
+    # as in pick_block_e: VMEM residency is in the accumulation dtype
+    size_item = max(dtype.itemsize, jnp.dtype(acc_name).itemsize)
 
     def pick() -> tuple[int, bool]:
-        cands = candidate_slab_sizes(grid, n, itemsize=dtype.itemsize)
+        cands = candidate_slab_sizes(grid, n, itemsize=size_item)
         m = measure
         if m is None and backend == "tpu":
-            m = _default_measure_slab(grid, n, dtype)
+            m = _default_measure_slab(grid, n, dtype, acc_dtype)
         if m is None:
             return cands[0], False
         return min(cands, key=m), True

@@ -43,7 +43,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 __all__ = ["nekbone_ax_kernel", "nekbone_ax_pallas", "ax_block",
            "ax_block_diag", "nekbone_ax_dots_kernel", "nekbone_ax_dots_pallas",
@@ -55,9 +54,29 @@ from repro.compat import CompilerParams as _CompilerParams
 from repro.core.geom import box_outer as _box_outer
 
 
+def _accum(dtype, acc_dtype: str | None) -> jnp.dtype:
+    """In-kernel accumulation dtype for a given storage dtype.
+
+    ``acc_dtype`` is the precision policy's explicit choice (DESIGN.md §7);
+    ``None`` keeps the historical rule — f64 accumulates in f64 (the CPU
+    oracle path), every narrower storage dtype (f32, bf16) in f32.  The
+    kernels upcast operands to this dtype on load and downcast field
+    outputs on store, so storage precision never touches the contraction
+    or reduction arithmetic.
+    """
+    if acc_dtype is not None:
+        return jnp.dtype(acc_dtype)
+    return jnp.dtype(jnp.float64 if dtype == jnp.float64 else jnp.float32)
+
+
+def _acc_tag(acc_dtype: str | None) -> str:
+    """Kernel-name suffix for an explicit accumulation dtype."""
+    return "" if acc_dtype is None else f"_acc{jnp.dtype(acc_dtype).name}"
+
+
 def _dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """2-D matmul; f32 accumulation on the MXU (f64 stays f64: the paper's
-    precision, exercised through interpret mode on CPU)."""
+    """2-D matmul; accumulate in the (already upcast) operand dtype — f32 on
+    the MXU, f64 on the interpret-mode oracle path."""
     acc = jnp.float64 if a.dtype == jnp.float64 else jnp.float32
     return jax.lax.dot(a, b, preferred_element_type=acc)
 
@@ -135,7 +154,7 @@ def ax_block_diag(u: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
 
 
 def nekbone_ax_kernel(u_ref, d_ref, dt_ref, g_ref, w_ref, *, n: int,
-                      block_e: int):
+                      block_e: int, acc_dtype: str | None = None):
     """Fused  w = D^T ( G (D u) )  for one block of ``block_e`` elements.
 
     Refs (VMEM blocks):
@@ -145,8 +164,11 @@ def nekbone_ax_kernel(u_ref, d_ref, dt_ref, g_ref, w_ref, *, n: int,
                                 body issues only layout-friendly matmuls
       g_ref:  (block_e, 6, n^3) metric (rr, rs, rt, ss, st, tt)
       w_ref:  (block_e, n^3)    output
+
+    ``acc_dtype``: explicit accumulation dtype (precision policy); operands
+    are upcast on load, the output downcast to ``w_ref``'s storage dtype.
     """
-    f32 = jnp.float64 if u_ref.dtype == jnp.float64 else jnp.float32
+    f32 = _accum(u_ref.dtype, acc_dtype)
     u = u_ref[...].astype(f32)
     D = d_ref[...].astype(f32)
     Dt = dt_ref[...].astype(f32)
@@ -155,21 +177,26 @@ def nekbone_ax_kernel(u_ref, d_ref, dt_ref, g_ref, w_ref, *, n: int,
     w_ref[...] = w.astype(w_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block_e", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n", "block_e", "interpret",
+                                             "acc_dtype"))
 def nekbone_ax_pallas(u2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
                       g2: jnp.ndarray, *, n: int, block_e: int,
-                      interpret: bool = False) -> jnp.ndarray:
+                      interpret: bool = False,
+                      acc_dtype: str | None = None) -> jnp.ndarray:
     """pallas_call wrapper on pre-flattened operands.
 
     Args:
       u2: (E, n^3), g2: (E, 6, n^3), D/Dt: (n, n); E divisible by block_e.
+      acc_dtype: explicit in-kernel accumulation dtype name (default: the
+        storage-derived rule of :func:`_accum`).
     """
     E = u2.shape[0]
     assert E % block_e == 0, (E, block_e)
     n3 = n ** 3
     grid = (E // block_e,)
     return pl.pallas_call(
-        functools.partial(nekbone_ax_kernel, n=n, block_e=block_e),
+        functools.partial(nekbone_ax_kernel, n=n, block_e=block_e,
+                          acc_dtype=acc_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_e, n3), lambda i: (i, 0)),
@@ -183,7 +210,7 @@ def nekbone_ax_pallas(u2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
-        name=f"nekbone_ax_n{n}_be{block_e}",
+        name=f"nekbone_ax_n{n}_be{block_e}{_acc_tag(acc_dtype)}",
     )(u2, D, Dt, g2)
 
 
@@ -193,7 +220,7 @@ def nekbone_ax_pallas(u2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
 
 def nekbone_ax_dots_kernel(p_ref, d_ref, dt_ref, g_ref, mask_ref, r_ref,
                            c_ref, w_ref, pap_ref, rcz_ref, *, n: int,
-                           block_e: int):
+                           block_e: int, acc_dtype: str | None = None):
     """Masked Ax plus the two CG inner-product partials, one element block.
 
     In the same VMEM residency as the operator this computes
@@ -219,7 +246,7 @@ def nekbone_ax_dots_kernel(p_ref, d_ref, dt_ref, g_ref, mask_ref, r_ref,
       pap_ref:  (1, 1)             partial  Σ p * w
       rcz_ref:  (1, 1)             partial  Σ r * c * r
     """
-    f32 = jnp.float64 if p_ref.dtype == jnp.float64 else jnp.float32
+    f32 = _accum(p_ref.dtype, acc_dtype)
     p = p_ref[...].astype(f32)
     D = d_ref[...].astype(f32)
     Dt = dt_ref[...].astype(f32)
@@ -234,11 +261,13 @@ def nekbone_ax_dots_kernel(p_ref, d_ref, dt_ref, g_ref, mask_ref, r_ref,
     w_ref[...] = w.astype(w_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block_e", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n", "block_e", "interpret",
+                                             "acc_dtype"))
 def nekbone_ax_dots_pallas(p2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
                            g2: jnp.ndarray, mask2: jnp.ndarray,
                            r2: jnp.ndarray, c2: jnp.ndarray, *, n: int,
-                           block_e: int, interpret: bool = False):
+                           block_e: int, interpret: bool = False,
+                           acc_dtype: str | None = None):
     """Multi-output pallas_call for the fused CG iteration.
 
     Args: all field operands pre-flattened to (E, n^3) (g2: (E, 6, n^3));
@@ -246,18 +275,20 @@ def nekbone_ax_dots_pallas(p2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
     partials of shape ``(E // block_e, 1)`` — tree-reduce them with
     ``jnp.sum`` on the host side of the call.
 
-    Partials accumulate in f32 for <=f32 inputs and f64 for f64 (the paper's
-    precision, exercised through interpret mode).
+    Partials accumulate (and are emitted) in ``acc_dtype`` when given, else
+    f32 for <=f32 inputs and f64 for f64 (the paper's precision, exercised
+    through interpret mode).
     """
     E = p2.shape[0]
     assert E % block_e == 0, (E, block_e)
     n3 = n ** 3
     nblk = E // block_e
-    acc = jnp.float64 if p2.dtype == jnp.float64 else jnp.float32
+    acc = _accum(p2.dtype, acc_dtype)
     field = pl.BlockSpec((block_e, n3), lambda i: (i, 0))
     part = pl.BlockSpec((1, 1), lambda i: (i, 0))
     return pl.pallas_call(
-        functools.partial(nekbone_ax_dots_kernel, n=n, block_e=block_e),
+        functools.partial(nekbone_ax_dots_kernel, n=n, block_e=block_e,
+                          acc_dtype=acc_dtype),
         grid=(nblk,),
         in_specs=[
             field,                                      # p
@@ -278,7 +309,7 @@ def nekbone_ax_dots_pallas(p2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
-        name=f"nekbone_ax_dots_n{n}_be{block_e}",
+        name=f"nekbone_ax_dots_n{n}_be{block_e}{_acc_tag(acc_dtype)}",
     )(p2, D, Dt, g2, mask2, r2, c2)
 
 
@@ -287,7 +318,8 @@ def nekbone_ax_dots_pallas(p2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def nekbone_ax_pap_kernel(p_ref, d_ref, dt_ref, g_ref, mask_ref, w_ref,
-                          pap_ref, *, n: int, block_e: int):
+                          pap_ref, *, n: int, block_e: int,
+                          acc_dtype: str | None = None):
     """Masked Ax plus the ``p·c·Ap`` partial only (DESIGN.md §3.3).
 
     The ``r·c·r`` partial of :func:`nekbone_ax_dots_kernel` equals the
@@ -297,7 +329,7 @@ def nekbone_ax_pap_kernel(p_ref, d_ref, dt_ref, g_ref, mask_ref, w_ref,
     streams.  Refs as in :func:`nekbone_ax_dots_kernel` minus ``r``/``c``
     and ``rcz``.
     """
-    f32 = jnp.float64 if p_ref.dtype == jnp.float64 else jnp.float32
+    f32 = _accum(p_ref.dtype, acc_dtype)
     p = p_ref[...].astype(f32)
     D = d_ref[...].astype(f32)
     Dt = dt_ref[...].astype(f32)
@@ -308,20 +340,23 @@ def nekbone_ax_pap_kernel(p_ref, d_ref, dt_ref, g_ref, mask_ref, w_ref,
     w_ref[...] = w.astype(w_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block_e", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n", "block_e", "interpret",
+                                             "acc_dtype"))
 def nekbone_ax_pap_pallas(p2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
                           g2: jnp.ndarray, mask2: jnp.ndarray, *, n: int,
-                          block_e: int, interpret: bool = False):
+                          block_e: int, interpret: bool = False,
+                          acc_dtype: str | None = None):
     """pallas_call wrapper: returns ``(w2, pap_parts)`` (carried-rtz path)."""
     E = p2.shape[0]
     assert E % block_e == 0, (E, block_e)
     n3 = n ** 3
     nblk = E // block_e
-    acc = jnp.float64 if p2.dtype == jnp.float64 else jnp.float32
+    acc = _accum(p2.dtype, acc_dtype)
     field = pl.BlockSpec((block_e, n3), lambda i: (i, 0))
     part = pl.BlockSpec((1, 1), lambda i: (i, 0))
     return pl.pallas_call(
-        functools.partial(nekbone_ax_pap_kernel, n=n, block_e=block_e),
+        functools.partial(nekbone_ax_pap_kernel, n=n, block_e=block_e,
+                          acc_dtype=acc_dtype),
         grid=(nblk,),
         in_specs=[
             field,                                      # p
@@ -339,7 +374,7 @@ def nekbone_ax_pap_pallas(p2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
-        name=f"nekbone_ax_pap_n{n}_be{block_e}",
+        name=f"nekbone_ax_pap_n{n}_be{block_e}{_acc_tag(acc_dtype)}",
     )(p2, D, Dt, g2, mask2)
 
 
@@ -356,7 +391,8 @@ def nekbone_ax_pap_pallas(p2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
 
 def nekbone_ax_slab_kernel(p_ref, r_ref, d_ref, dt_ref, g_ref, mx_ref, my_ref,
                            mz_ref, beta_ref, p_out, w_ref, bot_ref, top_ref,
-                           pap_ref, *, n: int, ex: int, ey: int, sz: int):
+                           pap_ref, *, n: int, ex: int, ey: int, sz: int,
+                           acc_dtype: str | None = None):
     """Fused CG front-half on one block of ``sz`` whole z-slabs.
 
     In one VMEM residency:
@@ -386,9 +422,16 @@ def nekbone_ax_slab_kernel(p_ref, r_ref, d_ref, dt_ref, g_ref, mx_ref, my_ref,
       pap_ref:  (1, 1)           partial  sum(p * mask * w_local)
     """
     block_e = sz * ey * ex
-    f32 = jnp.float64 if p_ref.dtype == jnp.float64 else jnp.float32
+    f32 = _accum(p_ref.dtype, acc_dtype)
+    out_dtype = w_ref.dtype
     beta = beta_ref[0, 0].astype(f32)
     p = r_ref[...].astype(f32) + beta * p_ref[...].astype(f32)
+    # round the direction through the *storage* dtype before the operator:
+    # the update kernel applies alpha to the stored p, so w must be A of
+    # exactly that vector — an unrounded p here would make w inconsistent
+    # with the CG algebra by O(storage eps), which diverges bf16 CG on
+    # ill-conditioned cases.  For f32/f64 storage this is the identity.
+    p = p.astype(out_dtype).astype(f32)
     D = d_ref[...].astype(f32)
     Dt = dt_ref[...].astype(f32)
     g3 = g_ref[...].astype(f32)
@@ -418,7 +461,6 @@ def nekbone_ax_slab_kernel(p_ref, r_ref, d_ref, dt_ref, g_ref, mx_ref, my_ref,
         v = v.at[:-1, :, :, -1, :, :].set(s)
         v = v.at[1:, :, :, 0, :, :].set(s)
 
-    out_dtype = w_ref.dtype
     w_ref[...] = v.reshape(block_e, n ** 3).astype(out_dtype)
     p_out[...] = p.astype(out_dtype)
     pln = ey * ex * n * n
@@ -426,19 +468,23 @@ def nekbone_ax_slab_kernel(p_ref, r_ref, d_ref, dt_ref, g_ref, mx_ref, my_ref,
     top_ref[...] = v[-1, :, :, -1, :, :].reshape(1, pln).astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "interpret",
+                                             "acc_dtype"))
 def nekbone_ax_slab_pallas(p2: jnp.ndarray, r2: jnp.ndarray, D: jnp.ndarray,
                            Dt: jnp.ndarray, g3: jnp.ndarray, mx: jnp.ndarray,
                            my: jnp.ndarray, mz: jnp.ndarray,
                            beta: jnp.ndarray, *, n: int,
                            grid: tuple[int, int, int], sz: int,
-                           interpret: bool = False):
+                           interpret: bool = False,
+                           acc_dtype: str | None = None):
     """Multi-output pallas_call for the v2 slab dots kernel.
 
     Args:
       p2/r2: (E, n^3); g3: (E, 3, n^3); mx/my/mz: (EX|EY|EZ, n) per-axis
       mask factors; beta: (1, 1) scalar operand; grid: (EX, EY, EZ) with
       ``EZ % sz == 0`` and elements z-major.
+      acc_dtype: explicit accumulation dtype (precision policy); the field
+      outputs stay in the storage dtype of ``p2``, the pap partials in acc.
 
     Returns ``(p2_new, w2, bot, top, pap_parts)`` with the boundary planes of
     shape ``(EZ//sz, EY*EX*n^2)`` and partials ``(EZ//sz, 1)``.
@@ -450,11 +496,12 @@ def nekbone_ax_slab_pallas(p2: jnp.ndarray, r2: jnp.ndarray, D: jnp.ndarray,
     nblk = ez // sz
     n3 = n ** 3
     pln = ey * ex * n * n
-    acc = jnp.float64 if p2.dtype == jnp.float64 else jnp.float32
+    acc = _accum(p2.dtype, acc_dtype)
     field = pl.BlockSpec((block_e, n3), lambda i: (i, 0))
     plane = pl.BlockSpec((1, pln), lambda i: (i, 0))
     return pl.pallas_call(
-        functools.partial(nekbone_ax_slab_kernel, n=n, ex=ex, ey=ey, sz=sz),
+        functools.partial(nekbone_ax_slab_kernel, n=n, ex=ex, ey=ey, sz=sz,
+                          acc_dtype=acc_dtype),
         grid=(nblk,),
         in_specs=[
             field,                                      # p_prev
@@ -480,13 +527,14 @@ def nekbone_ax_slab_pallas(p2: jnp.ndarray, r2: jnp.ndarray, D: jnp.ndarray,
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
-        name=f"nekbone_ax_slab_n{n}_sz{sz}",
+        name=f"nekbone_ax_slab_n{n}_sz{sz}{_acc_tag(acc_dtype)}",
     )(p2, r2, D, Dt, g3, mx, my, mz, beta)
 
 
 def nekbone_cg_update_kernel(x_ref, p_ref, r_ref, w_ref, addb_ref, addt_ref,
                              alpha_ref, cx_ref, cy_ref, cz_ref, x_out, r_out,
-                             rcr_ref, *, n: int, ex: int, ey: int, sz: int):
+                             rcr_ref, *, n: int, ex: int, ey: int, sz: int,
+                             acc_dtype: str | None = None):
     """Merged CG back-half on one slab block (DESIGN.md §3.4).
 
     In one VMEM residency: stitch the cross-block z-interface planes into
@@ -507,7 +555,7 @@ def nekbone_cg_update_kernel(x_ref, p_ref, r_ref, w_ref, addb_ref, addt_ref,
       x_out/r_out: (block_e, n^3);  rcr_ref: (1, 1)
     """
     block_e = sz * ey * ex
-    f32 = jnp.float64 if x_ref.dtype == jnp.float64 else jnp.float32
+    f32 = _accum(x_ref.dtype, acc_dtype)
     alpha = alpha_ref[0, 0].astype(f32)
     v = w_ref[...].astype(f32).reshape(sz, ey, ex, n, n, n)
     v = v.at[0, :, :, 0, :, :].add(
@@ -517,23 +565,29 @@ def nekbone_cg_update_kernel(x_ref, p_ref, r_ref, w_ref, addb_ref, addt_ref,
 
     x = x_ref[...].astype(f32) + alpha * p_ref[...].astype(f32)
     r = r_ref[...].astype(f32) - alpha * v.reshape(block_e, n ** 3)
+    # the r·c·r partial must see the *stored* residual: the carried rtz is
+    # next iteration's beta numerator, and that iteration reads the rounded
+    # r from HBM.  Identity for f32/f64 storage; load-bearing for bf16.
+    r = r.astype(r_out.dtype)
 
     c = _box_outer(cz_ref[...].astype(f32), cy_ref[...].astype(f32),
                    cx_ref[...].astype(f32))
-    r6 = r.reshape(sz, ey, ex, n, n, n)
+    r6 = r.astype(f32).reshape(sz, ey, ex, n, n, n)
     rcr_ref[0, 0] = jnp.sum(r6 * c * r6).astype(rcr_ref.dtype)
     x_out[...] = x.astype(x_out.dtype)
-    r_out[...] = r.astype(r_out.dtype)
+    r_out[...] = r
 
 
-@functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "interpret",
+                                             "acc_dtype"))
 def nekbone_cg_update_pallas(x2: jnp.ndarray, p2: jnp.ndarray,
                              r2: jnp.ndarray, w2: jnp.ndarray,
                              addb: jnp.ndarray, addt: jnp.ndarray,
                              alpha: jnp.ndarray, cx: jnp.ndarray,
                              cy: jnp.ndarray, cz: jnp.ndarray, *, n: int,
                              grid: tuple[int, int, int], sz: int,
-                             interpret: bool = False):
+                             interpret: bool = False,
+                             acc_dtype: str | None = None):
     """Multi-output pallas_call for the merged vector-update kernel.
 
     Args mirror :func:`nekbone_ax_slab_pallas`; ``addb``/``addt`` are the
@@ -547,11 +601,12 @@ def nekbone_cg_update_pallas(x2: jnp.ndarray, p2: jnp.ndarray,
     nblk = ez // sz
     n3 = n ** 3
     pln = ey * ex * n * n
-    acc = jnp.float64 if x2.dtype == jnp.float64 else jnp.float32
+    acc = _accum(x2.dtype, acc_dtype)
     field = pl.BlockSpec((block_e, n3), lambda i: (i, 0))
     plane = pl.BlockSpec((1, pln), lambda i: (i, 0))
     return pl.pallas_call(
-        functools.partial(nekbone_cg_update_kernel, n=n, ex=ex, ey=ey, sz=sz),
+        functools.partial(nekbone_cg_update_kernel, n=n, ex=ex, ey=ey, sz=sz,
+                          acc_dtype=acc_dtype),
         grid=(nblk,),
         in_specs=[
             field, field, field, field,                 # x, p, r, w
@@ -563,13 +618,15 @@ def nekbone_cg_update_pallas(x2: jnp.ndarray, p2: jnp.ndarray,
         ],
         out_specs=(field, field, pl.BlockSpec((1, 1), lambda i: (i, 0))),
         out_shape=(
+            # x keeps its (possibly wider, DESIGN.md §7) storage dtype;
+            # r stays in the field storage dtype.
             jax.ShapeDtypeStruct((E, n3), x2.dtype),
-            jax.ShapeDtypeStruct((E, n3), x2.dtype),
+            jax.ShapeDtypeStruct((E, n3), r2.dtype),
             jax.ShapeDtypeStruct((nblk, 1), acc),
         ),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
-        name=f"nekbone_cg_update_n{n}_sz{sz}",
+        name=f"nekbone_cg_update_n{n}_sz{sz}{_acc_tag(acc_dtype)}",
     )(x2, p2, r2, w2, addb, addt, alpha, cx, cy, cz)

@@ -158,7 +158,8 @@ def nekbone_ax_dots_slab(p_prev: jnp.ndarray, r: jnp.ndarray,
                          D: jnp.ndarray, g3: jnp.ndarray,
                          grid: tuple[int, int, int], *, beta: float = 0.0,
                          sz: int | None = None,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         acc_dtype: str | None = None):
     """v2 slab dots kernel on natural shapes, with the planes stitched.
 
     Computes ``p = r + beta * p_prev`` and the *fully assembled* masked
@@ -174,6 +175,7 @@ def nekbone_ax_dots_slab(p_prev: jnp.ndarray, r: jnp.ndarray,
          validated zero, then dropped — see :func:`diag_metric`).
       grid: (EX, EY, EZ); beta: direction-update scalar.
       sz: slabs per block (default: autotuned divisor of EZ).
+      acc_dtype: explicit in-kernel accumulation dtype (precision policy).
 
     Returns ``(p, w, pap)`` with ``pap == p·c·(mask gs w_local)`` tree-
     reduced from the per-block partials.
@@ -183,18 +185,20 @@ def nekbone_ax_dots_slab(p_prev: jnp.ndarray, r: jnp.ndarray,
     n = p_prev.shape[-1]
     interpret = default_interpret() if interpret is None else interpret
     if sz is None:
-        sz = _autotune.pick_slab_sz(grid, n, p_prev.dtype)
+        sz = _autotune.pick_slab_sz(grid, n, p_prev.dtype,
+                                    acc_dtype=acc_dtype)
     n3 = n ** 3
     nblk = ez // sz
     (mx, my, mz), _ = slab_axis_factors(grid, n, p_prev.dtype)
     D = jnp.asarray(D, p_prev.dtype)
     g3 = diag_metric(jnp.asarray(g3, p_prev.dtype), E, n)
-    acc = jnp.float64 if p_prev.dtype == jnp.float64 else jnp.float32
+    acc = _ax._accum(p_prev.dtype, acc_dtype)
     beta_arr = jnp.full((1, 1), beta, acc)
     p2, w2, bot, top, pap_b = _ax.nekbone_ax_slab_pallas(
         p_prev.reshape(E, n3), r.reshape(E, n3), D, D.T,
         g3, mx, my, mz,
-        beta_arr, n=n, grid=grid, sz=sz, interpret=interpret)
+        beta_arr, n=n, grid=grid, sz=sz, interpret=interpret,
+        acc_dtype=acc_dtype)
     vb = w2.reshape(nblk, sz, ey, ex, n, n, n)
     plane = (nblk - 1, ey, ex, n, n)
     if nblk > 1:
@@ -210,7 +214,8 @@ def nekbone_cg_update(x: jnp.ndarray, p: jnp.ndarray, r: jnp.ndarray,
                       addb: jnp.ndarray | None = None,
                       addt: jnp.ndarray | None = None,
                       sz: int | None = None,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None,
+                      acc_dtype: str | None = None):
     """Merged CG vector-update kernel on natural shapes.
 
     Computes ``x + alpha p``, ``r - alpha (w + planes)`` and the weighted
@@ -229,12 +234,12 @@ def nekbone_cg_update(x: jnp.ndarray, p: jnp.ndarray, r: jnp.ndarray,
     n = x.shape[-1]
     interpret = default_interpret() if interpret is None else interpret
     if sz is None:
-        sz = _autotune.pick_slab_sz(grid, n, x.dtype)
+        sz = _autotune.pick_slab_sz(grid, n, x.dtype, acc_dtype=acc_dtype)
     n3 = n ** 3
     nblk = ez // sz
     pln = ey * ex * n * n
     _, (cx, cy, cz) = slab_axis_factors(grid, n, x.dtype)
-    acc = jnp.float64 if x.dtype == jnp.float64 else jnp.float32
+    acc = _ax._accum(x.dtype, acc_dtype)
     if addb is None:
         addb = jnp.zeros((nblk, pln), x.dtype)
     if addt is None:
@@ -243,7 +248,8 @@ def nekbone_cg_update(x: jnp.ndarray, p: jnp.ndarray, r: jnp.ndarray,
     x2, r2, rcr_b = _ax.nekbone_cg_update_pallas(
         x.reshape(E, n3), p.reshape(E, n3), r.reshape(E, n3),
         w.reshape(E, n3), addb.reshape(nblk, pln), addt.reshape(nblk, pln),
-        alpha_arr, cx, cy, cz, n=n, grid=grid, sz=sz, interpret=interpret)
+        alpha_arr, cx, cy, cz, n=n, grid=grid, sz=sz, interpret=interpret,
+        acc_dtype=acc_dtype)
     return x2.reshape(x.shape), r2.reshape(x.shape), jnp.sum(rcr_b)
 
 

@@ -296,13 +296,11 @@ def run_nekbone(mesh_kind: str, nelt_per_device: int = 1024,
     quality is recovered by iterative refinement (core/cg.py).
     """
     from repro.core.nekbone import NekboneCase
-    import repro.core.gs as gs_mod
 
     multi = mesh_kind == "multi"
     mesh = make_production_mesh(multi_pod=multi)
     n_dev = int(mesh.devices.size)
-    # Global grid: stack every device's (16,16,4) block along z.
-    grid = (16, 16, 4 * n_dev)
+    # Global grid: every device's (16,16,4) block stacked along z.
     case = NekboneCase(n=10, grid=(16, 16, 4), dtype=dtype,
                        ax_impl="fused")
     axes = mesh.axis_names

@@ -10,13 +10,11 @@ dry-run, the trainer, and the tests all lower exactly the same code.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.distributed import compression as C
 from repro.models import model as M
 from repro.optim import adamw_init, adamw_update, cosine_schedule
 

@@ -19,9 +19,6 @@ Supports: GQA grouping, sliding window, gemma2 logit softcap, QKV biases
 """
 from __future__ import annotations
 
-import functools
-import math
-
 import jax
 import jax.numpy as jnp
 

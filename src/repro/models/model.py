@@ -20,7 +20,6 @@ the standard activation-memory/compute trade at scale.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -21,7 +21,6 @@ problems -> one skinny GEMM" layout move (DESIGN.md §4).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +28,7 @@ import jax.numpy as jnp
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import RULES, constrain, current_mesh
+from repro.distributed.sharding import RULES, current_mesh
 from repro.models import layers as L
 
 __all__ = ["init_moe", "moe_ffn"]

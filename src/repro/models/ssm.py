@@ -15,7 +15,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models import layers as L
 
 __all__ = ["init_mamba", "mamba", "mamba_decode", "init_mamba_cache"]
 

@@ -6,7 +6,6 @@ update is the standard Loshchilov-Hutter formulation with bias correction.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple
 
 import jax
@@ -28,7 +27,9 @@ def global_norm(tree) -> jnp.ndarray:
 
 
 def adamw_init(params, *, moment_dtype=jnp.float32) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, moment_dtype)
+
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       mu=jax.tree.map(zeros, params),
                       nu=jax.tree.map(zeros, params))

@@ -43,7 +43,6 @@ def check_compressed_psum():
 
     y = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod"),
                               out_specs=P("pod")))(x)
-    exact = jnp.broadcast_to(x.reshape(8, 1, 64).sum(0), (8, 64))
     # bf16 wire: ~3 decimal digits
     rel = float(jnp.abs(y - x.sum(0)).max() / (jnp.abs(x.sum(0)).max()))
     check("compressed_psum_bf16", rel < 2e-2)
@@ -162,7 +161,6 @@ def check_sharded_nekbone_cg():
         dot = cg_mod.weighted_dot(c, psum_axes="data")
         return cg_mod.cg_fixed_iters(A, f, niter=40, dot=dot).x
 
-    E = case.mesh.nelt
     espec = P("data")
     x = jax.jit(shard_map(
         solve_sharded, mesh=mesh,

@@ -65,7 +65,8 @@ def test_cpu_backend_uses_heuristic_without_measuring():
 
     be = autotune.pick_block_e(64, 10, jnp.float32, backend="cpu")
     assert be == autotune.candidate_blocks(64, 10)[0]
-    assert (10, 64, "float32", "cpu") in autotune.cache_info()
+    # keys carry the resolved (storage, accum) dtype pair (DESIGN.md §7)
+    assert (10, 64, "float32", "float32", "cpu") in autotune.cache_info()
 
 
 def test_measured_winner_beats_heuristic_order():
@@ -78,6 +79,61 @@ def test_measured_winner_beats_heuristic_order():
     be = autotune.pick_block_e(8, 4, jnp.float32, backend="tpu",
                                measure=measure)
     assert be == 4
+
+
+# ---------------------------------------------------------------------------
+# precision-policy keys: (storage, accum) dtype pairs must never collide
+# ---------------------------------------------------------------------------
+
+def test_block_keys_distinct_per_dtype_pair():
+    """(bf16,f32), (bf16,f64), (f32,f32), (f32,f64): four distinct keys.
+
+    A collision would hand a slab/block size tuned for one VMEM working set
+    (accum dtype decides the resident bytes) to a different kernel.
+    """
+    calls = []
+
+    def measure_factory(tag):
+        def measure(be):
+            calls.append((tag, be))
+            return float(be)
+        return measure
+
+    pairs = [("bfloat16", None), ("bfloat16", "float64"),
+             ("float32", None), ("float32", "float64")]
+    for i, (storage, acc) in enumerate(pairs):
+        autotune.pick_block_e(8, 4, jnp.dtype(storage), acc_dtype=acc,
+                              backend="tpu", measure=measure_factory(i))
+    # every pair measured independently (no cache hits across pairs) ...
+    assert {t for t, _ in calls} == set(range(len(pairs)))
+    # ... under four distinct keys
+    assert len(autotune.cache_info()) == len(pairs)
+
+    # explicit accum equal to the storage-derived default is the SAME key:
+    # the resolved pair, not the spelling, is what identifies the kernel.
+    def boom(be):
+        raise AssertionError("resolved-identical pair must hit the cache")
+
+    autotune.pick_block_e(8, 4, jnp.bfloat16, acc_dtype="float32",
+                          backend="tpu", measure=boom)
+
+
+def test_slab_keys_distinct_per_dtype_pair():
+    seen = []
+
+    def measure(sz):
+        seen.append(sz)
+        return float(sz)
+
+    autotune.pick_slab_sz((2, 2, 8), 4, jnp.bfloat16, backend="tpu",
+                          measure=measure)
+    n1 = len(seen)
+    autotune.pick_slab_sz((2, 2, 8), 4, jnp.bfloat16, acc_dtype="float64",
+                          backend="tpu", measure=measure)
+    assert len(seen) > n1              # distinct key -> re-measured
+    keys = set(autotune.cache_info())
+    assert ("slab", 4, 2, 2, 8, "bfloat16", "float32", "tpu") in keys
+    assert ("slab", 4, 2, 2, 8, "bfloat16", "float64", "tpu") in keys
 
 
 # ---------------------------------------------------------------------------
@@ -120,7 +176,8 @@ def test_pick_slab_sz_cached_per_grid():
     autotune.pick_slab_sz((2, 2, 4), 4, jnp.float32, backend="tpu",
                           measure=measure)
     assert len(calls) > n_calls
-    assert ("slab", 4, 2, 2, 8, "float32", "tpu") in autotune.cache_info()
+    assert (("slab", 4, 2, 2, 8, "float32", "float32", "tpu")
+            in autotune.cache_info())
 
 
 def test_slab_heuristic_on_cpu_prefers_largest():
@@ -167,7 +224,7 @@ def test_heuristic_picks_stay_out_of_measured_disk_cache():
                           measure=lambda be: float(be))
     data = json.loads(autotune.cache_path().read_text())
     keys = {tuple(e["key"]) for e in data["entries"]}
-    assert keys == {(4, 8, "float32", "tpu")}
+    assert keys == {(4, 8, "float32", "float32", "tpu")}
 
 
 def test_corrupt_cache_file_is_tolerated():
@@ -186,7 +243,7 @@ def test_corrupt_cache_file_is_tolerated():
     assert be == 1 and calls           # re-measured, no crash
     # and the rewritten file is valid JSON with the new entry
     data = json.loads(path.read_text())
-    assert any(tuple(e["key"]) == (4, 8, "float32", "tpu")
+    assert any(tuple(e["key"]) == (4, 8, "float32", "float32", "tpu")
                for e in data["entries"])
 
 

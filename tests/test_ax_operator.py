@@ -1,6 +1,5 @@
 """Local Poisson operator: implementation equivalence + SPD properties."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -1,0 +1,181 @@
+"""The CI perf-regression gate (benchmarks/check_regression.py) and the
+bench driver's atomic JSON write (benchmarks/run.py)."""
+import json
+import os
+import pathlib
+import stat
+
+import pytest
+
+from benchmarks import run as bench_run
+from benchmarks.check_regression import compare, load_bench_json, main
+
+BASELINE = (pathlib.Path(__file__).parent.parent / "benchmarks" /
+            "baseline" / "BENCH_baseline.json")
+
+
+def _payload(**overrides):
+    base = {
+        "schema": "repro-bench/2",
+        "streams_per_iter": {"eq2": 30, "fused_v1": 17, "fused_v2": 13},
+        "bytes_per_dof_iter": bench_run._precision_table(),
+        "sections": [],
+    }
+    base.update(overrides)
+    return base
+
+
+# ---------------------------------------------------------------------------
+# compare(): the gate's three checks
+# ---------------------------------------------------------------------------
+
+def test_identical_payload_passes():
+    assert compare(_payload(), _payload()) == []
+
+
+def test_precision_table_from_cost_model_halves():
+    """The committed table itself satisfies the bf16 == f32/2 headline."""
+    table = bench_run._precision_table()
+    for pipeline, pols in table.items():
+        f32 = pols["f32"]["read"] + pols["f32"]["write"]
+        bf16 = pols["bf16"]["read"] + pols["bf16"]["write"]
+        f64 = pols["f64"]["read"] + pols["f64"]["write"]
+        assert bf16 * 2 == f32, pipeline
+        assert f32 * 2 == f64, pipeline
+
+
+def test_stream_ladder_regression_fails():
+    fresh = _payload()
+    fresh["streams_per_iter"]["fused_v2"] = 15
+    problems = compare(fresh, _payload())
+    assert any("fused_v2" in p and "regressed" in p for p in problems)
+
+
+def test_stream_ladder_improvement_also_fails():
+    """A *better* number still fails: the baseline must be refreshed so
+    the win is pinned, not floating."""
+    fresh = _payload()
+    fresh["streams_per_iter"]["fused_v2"] = 11
+    problems = compare(fresh, _payload())
+    assert any("improved" in p for p in problems)
+
+
+def test_missing_tables_fail():
+    fresh = _payload()
+    del fresh["streams_per_iter"]
+    del fresh["bytes_per_dof_iter"]
+    problems = compare(fresh, _payload())
+    assert any("streams_per_iter" in p for p in problems)
+    assert any("bytes_per_dof_iter" in p for p in problems)
+
+
+def test_bytes_within_tolerance_passes_and_outside_fails():
+    fresh = _payload()
+    fresh["bytes_per_dof_iter"]["fused_v2"]["f32"]["read"] *= 1.04
+    assert compare(fresh, _payload(), tol=0.05) == []
+    fresh["bytes_per_dof_iter"]["fused_v2"]["f32"]["read"] *= 1.10
+    assert compare(fresh, _payload(), tol=0.05)
+
+
+def test_bf16_half_of_f32_invariant():
+    fresh = _payload()
+    # consistent with baseline per-entry tolerance is not enough: breaking
+    # the ratio beyond tol must fail even if each entry drifted "legally"
+    fresh["bytes_per_dof_iter"]["fused_v2"]["bf16"]["read"] = 40
+    problems = compare(fresh, _payload(), tol=0.05)
+    assert any("half" in p for p in problems)
+
+
+# ---------------------------------------------------------------------------
+# file handling: corrupt / missing inputs exit with a clear error
+# ---------------------------------------------------------------------------
+
+def test_corrupt_fresh_json_exits_cleanly(tmp_path, capsys):
+    bad = tmp_path / "BENCH_bad.json"
+    bad.write_text("{ definitely not json")
+    with pytest.raises(SystemExit) as e:
+        load_bench_json(bad, "fresh")
+    assert e.value.code == 2
+    assert "corrupt" in capsys.readouterr().err
+
+
+def test_missing_fresh_json_exits_cleanly(tmp_path):
+    with pytest.raises(SystemExit) as e:
+        load_bench_json(tmp_path / "nope.json", "fresh")
+    assert e.value.code == 2
+
+
+def test_malformed_table_exits_cleanly(tmp_path, capsys):
+    """Valid JSON, wrong shape (scalar where {read,write} belongs): same
+    contract as corrupt JSON — clear message, exit 2, no traceback."""
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_payload()))
+    bad = _payload()
+    bad["bytes_per_dof_iter"]["fused_v2"]["f32"] = 52
+    fresh = tmp_path / "BENCH_f.json"
+    fresh.write_text(json.dumps(bad))
+    with pytest.raises(SystemExit) as e:
+        main([str(fresh), "--baseline", str(base)])
+    assert e.value.code == 2
+    assert "malformed" in capsys.readouterr().err
+
+
+def test_main_end_to_end(tmp_path):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_payload()))
+    fresh = tmp_path / "BENCH_fresh.json"
+    fresh.write_text(json.dumps(_payload()))
+    assert main([str(fresh), "--baseline", str(base)]) == 0
+
+    bad = _payload()
+    bad["streams_per_iter"]["eq2"] = 31
+    fresh.write_text(json.dumps(bad))
+    assert main([str(fresh), "--baseline", str(base)]) == 1
+
+
+def test_committed_baseline_is_valid_and_self_consistent():
+    """The checked-in baseline parses and matches the live cost model —
+    i.e. HEAD would pass its own gate."""
+    data = load_bench_json(BASELINE, "baseline")
+    assert compare(_payload(), data) == []
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py atomic write (the satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_write_json_atomic_success_and_no_tmp_left(tmp_path):
+    path = tmp_path / "out" / "BENCH_t.json"
+    assert bench_run.write_json_atomic(path, {"a": 1})
+    assert json.loads(path.read_text()) == {"a": 1}
+    assert list(path.parent.glob("*.tmp.*")) == []
+
+
+def test_write_json_atomic_replaces_corrupt_stale_file(tmp_path):
+    path = tmp_path / "BENCH_t.json"
+    path.write_text("{ stale half-written garbage")
+    assert bench_run.write_json_atomic(path, {"b": 2})
+    assert json.loads(path.read_text()) == {"b": 2}
+
+
+def test_write_json_atomic_unwritable_dir_is_clear_error(tmp_path, capsys):
+    if os.geteuid() == 0:
+        pytest.skip("running as root: chmod cannot make a dir unwritable")
+    ro = tmp_path / "ro"
+    ro.mkdir()
+    ro.chmod(stat.S_IRUSR | stat.S_IXUSR)
+    try:
+        ok = bench_run.write_json_atomic(ro / "BENCH_t.json", {"c": 3})
+    finally:
+        ro.chmod(stat.S_IRWXU)
+    assert not ok
+    err = capsys.readouterr().err
+    assert "could not write bench json" in err
+
+
+def test_write_json_atomic_path_is_directory_is_clear_error(tmp_path,
+                                                           capsys):
+    target = tmp_path / "BENCH_t.json"
+    target.mkdir()                      # occupied by a directory
+    assert not bench_run.write_json_atomic(target, {"d": 4})
+    assert "could not write bench json" in capsys.readouterr().err

@@ -1,6 +1,4 @@
 """The paper's cost model (Eq. 1-2) and our operator's adherence to it."""
-import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

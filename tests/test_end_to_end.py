@@ -1,6 +1,5 @@
 """End-to-end loops: Nekbone solve, LM training convergence, serving."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,7 @@ from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
-from repro.core.cg import cg, cg_fixed_iters, ir_solve, jacobi_preconditioner
+from repro.core.cg import cg, ir_solve
 from repro.core.geom import BoxMesh
 from repro.core.gs import ds_sum_local
 from repro.core.nekbone import NekboneCase

@@ -1,9 +1,6 @@
 """Optimizer, data pipeline, checkpoint manager, schedules."""
-import os
-import pathlib
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +8,6 @@ import jax.numpy as jnp
 from repro.checkpoint import CheckpointManager
 from repro.data import MemmapTokenReader, SyntheticLMStream
 from repro.optim import adamw_init, adamw_update, cosine_schedule
-from repro.optim.adamw import global_norm
 
 
 def test_adamw_minimizes_quadratic():
