@@ -107,6 +107,15 @@ def run():
         rows.append((f"cg_fused_v2_bf16_iter_e{E}",
                      _time_cg_fused(E, "v2", precision="bf16") * 1e6,
                      _v2_precision_derived("bf16")))
+        # s-step ladder (DESIGN.md §8): one full cycle (s iterations) of
+        # the v3 matrix-powers pipeline per s — the derived column carries
+        # the amortized bytes/DOF/iter against the v2 row at the same
+        # precision (strictly fewer for every s > 1; s = 1 reproduces the
+        # v2 budget exactly, which the regression gate pins).
+        for s in (1, 2, 4):
+            rows.append((f"cg_sstep_v3_s{s}_iter_e{E}",
+                         _time_cg_sstep(E, s) * 1e6,
+                         _sstep_derived(s)))
     return rows
 
 
@@ -131,6 +140,42 @@ def _v2_precision_derived(precision: str) -> str:
     f32 = sum(bytes_per_dof_iter("fused_v2", "f32"))
     return (f"B/dof/iter_{lo}v{f32}={lo / f32:.2f}x"
             f";streams_iter={FUSED_V2_READ_STREAMS + FUSED_V2_WRITE_STREAMS}")
+
+
+def _sstep_derived(s: int) -> str:
+    from repro.core.cost import bytes_per_dof_iter, sstep_effective_streams
+
+    v3 = sum(bytes_per_dof_iter("sstep_v3", "f32", s=s))
+    v2 = sum(bytes_per_dof_iter("fused_v2", "f32"))
+    return (f"B/dof/iter_{v3:g}v{v2}={v3 / v2:.2f}x"
+            f";streams_eff={sstep_effective_streams(s, 4):.2f};s={s}")
+
+
+def _time_cg_sstep(E: int, s: int) -> float:
+    """One full s-step cycle (s iterations) of the v3 pipeline, timed like
+    the other fused rows (interpret-mode emulator time; the derived byte
+    ratios are the claims).  theta is precomputed outside the timed region
+    — the power-iteration setup is a per-problem one-time cost, not part
+    of the cycle this row prices."""
+    from repro.configs.nekbone import PAPER_CASES
+    from repro.core.cg_sstep import cg_sstep_fixed_iters, estimate_theta
+    from repro.core.nekbone import NekboneCase
+
+    grid = (PAPER_CASES[E].grid if E in PAPER_CASES else (2, 2, E // 4))
+    case = NekboneCase(n=N_GLL, grid=grid, dtype=jnp.float32)
+    _, f = case.manufactured()
+    theta = estimate_theta(case.D, case.g, case.grid, case.mask)
+
+    def one_cycle():
+        return cg_sstep_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                                    niter=s, s=s, mask=case.mask, c=case.c,
+                                    theta=theta)
+
+    jax.block_until_ready(one_cycle().x)       # compile / warm
+    t0 = time.perf_counter()
+    res = one_cycle()
+    jax.block_until_ready(res.x)
+    return time.perf_counter() - t0
 
 
 def _time_cg_fused(E: int, version: str, precision: str | None = None) -> float:

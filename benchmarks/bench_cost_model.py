@@ -22,11 +22,13 @@ import jax.numpy as jnp
 
 from repro.core.cost import (FUSED_CG_READ_STREAMS, FUSED_CG_WRITE_STREAMS,
                              FUSED_V2_READ_STREAMS, FUSED_V2_WRITE_STREAMS,
-                             bytes_per_dof_iter, cg_iter_bytes,
-                             fused_cg_iter_bytes, fused_intensity,
-                             fused_v2_cg_iter_bytes, fused_v2_intensity,
-                             fused_v2_plane_streams, intensity,
-                             ir_overhead_streams, pipeline_intensity)
+                             SSTEP_DEFAULT_S, bytes_per_dof_iter,
+                             cg_iter_bytes, fused_cg_iter_bytes,
+                             fused_intensity, fused_v2_cg_iter_bytes,
+                             fused_v2_intensity, fused_v2_plane_streams,
+                             intensity, ir_overhead_streams,
+                             pipeline_intensity, sstep_effective_streams,
+                             sstep_intensity, sstep_streams)
 from repro.core.nekbone import NekboneCase
 from repro.launch.hlo_analysis import analyze_hlo
 
@@ -100,15 +102,41 @@ def run():
             rows.append((f"eq2_fused_v2_xla_n{n}", 0.0,
                          f"xla/v2model={v2_bytes / v2_model_bytes:.3f}"))
 
+        # --- v3: s-step matrix-powers pipeline (DESIGN.md §8) -------------
+        # The s-sweep is the claim ladder: (4s+9)/s amortized streams per
+        # iteration, exactly the v2 budget at s=1, 6.25 at the default
+        # s=4; 'eff' folds in the matrix-powers halo side channel at the
+        # default sz=4 slab split (<= 9 effective streams at s=4).
+        for s_ in (1, 2, SSTEP_DEFAULT_S):
+            rs, ws = sstep_streams(s_)
+            v3_bytes = sum(bytes_per_dof_iter("sstep_v3", "f32", s=s_))
+            rows.append((f"eq2_sstep_v3_s{s_}_streams_n{n}", 0.0,
+                         f"streams/iter={rs + ws:g}"
+                         f";eff={sstep_effective_streams(s_, 4):.2f}"
+                         f";B/dof/iter_f32={v3_bytes:g}"
+                         f";I_v3={sstep_intensity(n, s_, 4):.3f}flop/B"))
+
         # --- precision ladder (DESIGN.md §7): the 13 v2 streams re-priced
         # per storage dtype — bf16 halves f32's bytes/DOF/iter and doubles
         # its intensity; these rows land in BENCH_<tag>.json and are what
         # benchmarks/check_regression.py holds across PRs.
         for pol in ("f64", "f32", "bf16"):
             rb, wb = bytes_per_dof_iter("fused_v2", pol)
+            re_, we = bytes_per_dof_iter("fused_v2", pol, exact=True, n=n)
             rows.append((f"v2_bytes_{pol}_n{n}", 0.0,
                          f"B/dof/iter={rb + wb}"
+                         f";exact={re_ + we:.2f}"
                          f";I={pipeline_intensity(n, 'fused_v2', pol):.3f}"
+                         "flop/B"))
+        # v3 at the default s: the same policies re-price 6.25 streams;
+        # the exact column folds in the matrix-powers halo (10/sz).
+        for pol in ("f64", "f32", "bf16"):
+            rb, wb = bytes_per_dof_iter("sstep_v3", pol)
+            re_, we = bytes_per_dof_iter("sstep_v3", pol, exact=True, n=n)
+            rows.append((f"v3_bytes_{pol}_n{n}", 0.0,
+                         f"B/dof/iter={rb + wb:g}"
+                         f";exact={re_ + we:.2f}"
+                         f";I={pipeline_intensity(n, 'sstep_v3', pol):.3f}"
                          "flop/B"))
         # refinement surcharge: the hi-precision outer pass, amortized over
         # the default 12-iteration bf16 inner sweeps, in bf16-stream units.

@@ -18,6 +18,15 @@ and fails (exit 1) on:
 * **schema presence** — a fresh file missing either table fails: the gate
   exists precisely so these numbers cannot silently disappear.
 
+Forward compatibility: rungs / pipelines / policy columns present in the
+*fresh* file but absent from the baseline are **warnings**, not failures —
+a PR that adds a ladder rung (a new pipeline) must not need a hand-edited
+baseline to go green; the warning tells the author to pin the new row on
+the next baseline refresh.  Rows the baseline *does* hold remain load-
+bearing: missing or regressed ones still fail.  The bench JSON carries a
+monotone ``schema_version`` int; a fresh/baseline version skew is also a
+warning (the shared tables are still compared).
+
 A missing or corrupt file is a hard error (exit 2) with a one-line
 explanation — never a traceback, and never a silent pass.
 """
@@ -74,9 +83,23 @@ def find_fresh(bench_dir: pathlib.Path | None = None) -> pathlib.Path:
     return cands[-1]
 
 
-def compare(fresh: dict, base: dict, tol: float = DEFAULT_TOL) -> list[str]:
-    """All regressions of ``fresh`` against ``base`` (empty == gate passes)."""
+def compare(fresh: dict, base: dict, tol: float = DEFAULT_TOL,
+            warnings: list[str] | None = None) -> list[str]:
+    """All regressions of ``fresh`` against ``base`` (empty == gate passes).
+
+    Forward-compat findings (rows *added* by the fresh run, schema-version
+    skew) are appended to ``warnings`` when given — surfaced, never
+    failing; see the module docstring.
+    """
     problems: list[str] = []
+    warnings = warnings if warnings is not None else []
+
+    # --- schema version: skew is a warning, the tables still compare ----
+    bv, fv = base.get("schema_version"), fresh.get("schema_version")
+    if fv != bv:
+        warnings.append(
+            f"bench json schema_version skew: fresh={fv!r} baseline={bv!r} "
+            "— comparing the shared tables; refresh the baseline to align")
 
     # --- streams/iter ladder: exact match -------------------------------
     base_streams = base.get("streams_per_iter") or {}
@@ -98,6 +121,11 @@ def compare(fresh: dict, base: dict, tol: float = DEFAULT_TOL) -> list[str]:
                              "improved — refresh the baseline to pin it")
                 problems.append(f"streams/iter '{rung}': {got} != baseline "
                                 f"{want} ({direction})")
+        for rung in sorted(set(fresh_streams) - set(base_streams)):
+            warnings.append(
+                f"new streams/iter rung '{rung}' = {fresh_streams[rung]} "
+                "not in baseline — unchecked until the next baseline "
+                "refresh pins it")
 
     # --- bytes/DOF/iter: tolerance + the bf16 ≈ f32/2 invariant ---------
     base_bytes = base.get("bytes_per_dof_iter") or {}
@@ -111,18 +139,35 @@ def compare(fresh: dict, base: dict, tol: float = DEFAULT_TOL) -> list[str]:
                         "per-precision accounting silently disappeared")
         return problems
 
+    for pipeline in sorted(set(fresh_bytes) - set(base_bytes)):
+        warnings.append(
+            f"new bytes/DOF/iter pipeline '{pipeline}' not in baseline — "
+            "unchecked until the next baseline refresh pins it")
     for pipeline, pols in sorted(base_bytes.items()):
         got_pols = fresh_bytes.get(pipeline)
         if got_pols is None:
             problems.append(f"bytes/DOF/iter pipeline '{pipeline}' missing")
             continue
+        for pol in sorted(set(got_pols) - set(pols)):
+            warnings.append(
+                f"new bytes/DOF/iter policy '{pipeline}/{pol}' not in "
+                "baseline — unchecked until the next baseline refresh "
+                "pins it")
         for pol, want in sorted(pols.items()):
             got = got_pols.get(pol)
             if got is None:
                 problems.append(
                     f"bytes/DOF/iter '{pipeline}/{pol}' missing")
                 continue
-            for field in ("read", "write"):
+            for field in sorted(set(got) - set(want)):
+                warnings.append(
+                    f"new bytes/DOF/iter column '{pipeline}/{pol}/{field}' "
+                    "not in baseline — unchecked until the next baseline "
+                    "refresh pins it")
+            # every numeric column the baseline pins must hold (headline
+            # read/write and, when present, the *_exact side-channel
+            # books); columns only the fresh file has are forward-compat.
+            for field in sorted(want):
                 w, g = float(want[field]), float(got.get(field, -1))
                 if abs(g - w) > tol * max(abs(w), 1.0):
                     problems.append(
@@ -161,8 +206,9 @@ def main(argv=None) -> int:
     fresh = load_bench_json(fresh_path, "fresh")
     base = load_bench_json(pathlib.Path(args.baseline), "baseline")
 
+    warnings: list[str] = []
     try:
-        problems = compare(fresh, base, tol=args.tol)
+        problems = compare(fresh, base, tol=args.tol, warnings=warnings)
     except (KeyError, TypeError, AttributeError, ValueError) as e:
         # valid JSON, wrong shape (hand-edited table, scalar where an
         # object belongs): same contract as corrupt JSON — clear error,
@@ -170,6 +216,8 @@ def main(argv=None) -> int:
         _die(f"ERROR: bench json structure is malformed ({e!r}); "
              f"re-generate {fresh_path} with `python -m benchmarks.run` "
              "or refresh the baseline per benchmarks/README.md")
+    for w in warnings:
+        print(f"WARNING: {w}", file=sys.stderr)
     if problems:
         print(f"perf-regression gate FAILED ({fresh_path} vs "
               f"{args.baseline}):")

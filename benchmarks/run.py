@@ -69,7 +69,12 @@ def _precision_table() -> dict:
     Every (pipeline rung, precision policy) point of DESIGN.md §6-7:
     stream counts are pipeline constants, the policy prices the bytes —
     bf16 is exactly half of f32 on every rung, which
-    check_regression.py asserts.
+    check_regression.py asserts.  Each entry carries both books: the
+    headline ``read``/``write`` (side channels charged as zero, the §6
+    convention) and the ``read_exact``/``write_exact`` column that folds
+    in the modeled side channels (v2 boundary planes, v3 matrix-powers
+    halo — ``cost.bytes_per_dof_iter(exact=True)`` at the paper's n=10
+    with the default slab split).
     """
     from repro.core import cost
 
@@ -78,7 +83,10 @@ def _precision_table() -> dict:
         table[pipeline] = {}
         for pol in ("f64", "f32", "bf16"):
             rb, wb = cost.bytes_per_dof_iter(pipeline, pol)
-            table[pipeline][pol] = {"read": rb, "write": wb}
+            re_, we = cost.bytes_per_dof_iter(pipeline, pol, exact=True)
+            table[pipeline][pol] = {"read": rb, "write": wb,
+                                    "read_exact": round(re_, 4),
+                                    "write_exact": round(we, 4)}
     return table
 
 
@@ -101,17 +109,25 @@ def main() -> None:
                          "rows": rows})
 
     payload = {
-        "schema": "repro-bench/2",
+        "schema": "repro-bench/3",
+        # monotone int for forward-compat decisions (check_regression.py
+        # warns on version skew instead of failing on unknown tables).
+        "schema_version": 3,
         "tag": os.environ.get("REPRO_BENCH_TAG", "local"),
         "quick": bool(os.environ.get("REPRO_BENCH_QUICK")),
         # the Eq.-2 fusion ladder this repo climbs (reads+writes per DOF
-        # per CG iteration) — the cross-PR perf-trajectory headline.
+        # per CG iteration) — the cross-PR perf-trajectory headline.  The
+        # s-step rung is amortized per iteration (4s+9 streams per s
+        # iterations, DESIGN.md §8); its s=1 point must stay exactly the
+        # v2 number — the gate holds that identity across PRs.
         "streams_per_iter": {
             "eq2": cost.CG_READ_STREAMS + cost.CG_WRITE_STREAMS,
             "fused_v1": (cost.FUSED_CG_READ_STREAMS
                          + cost.FUSED_CG_WRITE_STREAMS),
             "fused_v2": (cost.FUSED_V2_READ_STREAMS
                          + cost.FUSED_V2_WRITE_STREAMS),
+            "sstep_v3": sum(cost.sstep_streams(cost.SSTEP_DEFAULT_S)),
+            "sstep_v3_s1": sum(cost.sstep_streams(1)),
         },
         # the second axis of the ladder (DESIGN.md §7): bytes each stream
         # carries under each precision policy, per DOF per iteration.

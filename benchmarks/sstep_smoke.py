@@ -1,0 +1,68 @@
+"""CI smoke for the v3 s-step pipeline: interpret-mode parity, s-sweep.
+
+  JAX_ENABLE_X64=1 PYTHONPATH=src python -m benchmarks.sstep_smoke
+
+Runs the matrix-powers pipeline (core/cg_sstep.py) on a small paper-shaped
+case for s in {1, 2, 4} and asserts fp64 parity against the reference
+``cg_fixed_iters`` — the same gate the tier-1 tests pin, kept in the
+quick-bench CI leg so the v3 rung cannot silently break between the test
+matrix and the bench artifact.  Exits non-zero (with the offending s) on
+any parity miss; prints one CSV-ish row per s so the log doubles as an
+s-sweep record.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+# interpret-mode parity floor: fp64 round-off through the different
+# partial-sum associations (same budget as tests/test_cg_sstep.py).
+RTOL = 1e-9
+N, GRID, NITER = 5, (2, 2, 4), 10
+S_SWEEP = (1, 2, 4)
+
+
+def main() -> int:
+    from repro.core import cg as cg_mod
+    from repro.core.cg_sstep import cg_sstep_fixed_iters
+    from repro.core.cost import sstep_effective_streams, sstep_streams
+    from repro.core.nekbone import NekboneCase
+
+    case = NekboneCase(n=N, grid=GRID, dtype=jnp.float64)
+    _, f = case.manufactured()
+    ref = cg_mod.cg_fixed_iters(case.ax_full, f, niter=NITER,
+                                dot=case.dot())
+    h_ref = np.asarray(ref.rnorm_history)
+    x_ref = np.asarray(ref.x)
+    x_scale = np.abs(x_ref).max() + 1e-300
+
+    failures = 0
+    for s in S_SWEEP:
+        res = cg_sstep_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                                   niter=NITER, s=s, mask=case.mask,
+                                   c=case.c, interpret=True)
+        h = np.asarray(res.rnorm_history)
+        hist_rel = float(np.abs(h - h_ref).max() / h_ref[0])
+        x_rel = float(np.abs(np.asarray(res.x) - x_ref).max() / x_scale)
+        ok = hist_rel < RTOL and x_rel < RTOL
+        failures += not ok
+        streams = sum(sstep_streams(s))
+        print(f"sstep_smoke_s{s},0.0,hist_rel={hist_rel:.2e}"
+              f";x_rel={x_rel:.2e};streams/iter={streams:g}"
+              f";eff={sstep_effective_streams(s, 4):.2f}"
+              f";{'OK' if ok else 'FAIL'}")
+        if not ok:
+            print(f"ERROR: s={s} parity vs cg_fixed_iters exceeded "
+                  f"{RTOL:g} (hist {hist_rel:.2e}, x {x_rel:.2e})",
+                  file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

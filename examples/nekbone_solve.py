@@ -65,14 +65,18 @@ def main():
                                  FUSED_CG_READ_STREAMS,
                                  FUSED_CG_WRITE_STREAMS,
                                  FUSED_V2_READ_STREAMS,
-                                 FUSED_V2_WRITE_STREAMS)
+                                 FUSED_V2_WRITE_STREAMS,
+                                 sstep_effective_streams, sstep_streams)
 
     small = NekboneCase(n=6, grid=(2, 2, 2), dtype=jnp.float32,
                         ax_impl="fused")
     res_x, _ = small.solve_manufactured(niter=10)
+    v3 = sum(sstep_streams(4))
     print(f"streams/iter: {CG_READ_STREAMS}R+{CG_WRITE_STREAMS}W (Eq. 2) -> "
           f"{FUSED_CG_READ_STREAMS}R+{FUSED_CG_WRITE_STREAMS}W (fused v1) -> "
-          f"{FUSED_V2_READ_STREAMS}R+{FUSED_V2_WRITE_STREAMS}W (fused v2)")
+          f"{FUSED_V2_READ_STREAMS}R+{FUSED_V2_WRITE_STREAMS}W (fused v2) -> "
+          f"{v3:g} (s-step v3 @ s=4; "
+          f"{sstep_effective_streams(4, 4):.2f} eff w/ halo)")
     for impl in ("pallas_fused_cg", "pallas_fused_cg_v2"):
         small.ax_impl = impl
         res_f, _ = small.solve_manufactured(niter=10)
@@ -81,6 +85,23 @@ def main():
                                  jnp.abs(res_x.rnorm_history)))
         print(f"residual-history drift vs XLA CG over 10 iters "
               f"({impl}): {drift:.2e}")
+
+    print("\n== beyond-paper: s-step CG (matrix-powers pipeline, "
+          "DESIGN.md §8) ==")
+    # one matrix-powers cycle evaluates the whole s-vector Krylov basis in
+    # a single slab residency (metric/D/mask loaded once per s operator
+    # applications) and the s recurrence steps solve in f64 on (2s+1)-
+    # coefficient coordinates — one host round-trip per s iterations.
+    for s in (1, 2, 4):
+        small.ax_impl = "pallas_sstep_v3"
+        small.s = s
+        res_s, _ = small.solve_manufactured(niter=8)
+        drift = float(jnp.nanmax(jnp.abs(
+            res_s.rnorm_history - res_x.rnorm_history[:9]) /
+            jnp.abs(res_x.rnorm_history[:9])))
+        print(f"  s={s}: {sum(sstep_streams(s)):5.2f} streams/iter "
+              f"(eff {sstep_effective_streams(s, 4):5.2f}), history drift "
+              f"vs XLA CG over 8 iters: {drift:.2e}")
 
     print("\n== beyond-paper: Jacobi preconditioning ==")
     r_plain, _ = case.solve_manufactured(tol=1e-6, max_iter=500)

@@ -26,6 +26,11 @@ class NekboneConfig:
     # storage dtype).  "bf16_ir" is the mixed-precision target (bf16
     # storage streams, f32 accumulation, iterative-refinement outer loop).
     precision: str | None = None
+    # s-step cycle length for ax_impl="pallas_sstep_v3" (DESIGN.md §8):
+    # iterations per matrix-powers cycle.  s=1 reproduces the v2 stream
+    # budget exactly; s=4 is the tuned default (6.25 streams/iter, <= 9
+    # effective with the halo side channel).  Ignored by other ax_impls.
+    s: int = 4
 
     @property
     def nelt(self) -> int:
@@ -43,7 +48,7 @@ class NekboneConfig:
 
         kwargs = dict(n=self.n, grid=self.grid,
                       dtype=jnp_dtype(self.dtype), ax_impl=self.ax_impl,
-                      precision=self.precision)
+                      precision=self.precision, s=self.s)
         kwargs.update(overrides)
         return NekboneCase(**kwargs)
 

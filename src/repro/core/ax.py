@@ -100,7 +100,8 @@ def ax_local(u: jnp.ndarray, D: jnp.ndarray, g: jnp.ndarray, *,
         return ax_local_listing1(u, D, g)
     if impl == "fused":
         return ax_local_fused(u, D, g)
-    if impl in ("pallas", "pallas_fused_cg", "pallas_fused_cg_v2"):
+    if impl in ("pallas", "pallas_fused_cg", "pallas_fused_cg_v2",
+                "pallas_sstep_v3"):
         from repro.kernels import ops as kernel_ops
 
         return kernel_ops.nekbone_ax(u, D, g, **kw)

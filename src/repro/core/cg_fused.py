@@ -416,6 +416,7 @@ def cg_ir_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
                       mask: jnp.ndarray | None = None,
                       c: jnp.ndarray | None = None, variant: str = "v2",
                       sz: int | None = None, block_e: int | None = None,
+                      s: int = 4,
                       interpret: bool | None = None) -> CGResult:
     """Mixed-precision CG: fused low-precision inner solves wrapped in an
     iterative-refinement outer loop (DESIGN.md §7).
@@ -460,8 +461,12 @@ def cg_ir_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
       inner_iters: override the per-sweep inner count (default ``niter``).
       mask/c:  optional structural fields; rebuilt from the box's per-axis
                factors when omitted.
-      variant: inner pipeline — ``"v2"`` (two slab kernels) or ``"v1"``.
-      sz / block_e / interpret: forwarded to the inner pipeline.
+      variant: inner pipeline — ``"v2"`` (two slab kernels), ``"v1"``, or
+               ``"sstep"`` (the v3 s-step matrix-powers pipeline,
+               core/cg_sstep.py — its f64 Gram recurrence composes with
+               refinement unchanged: the basis streams at the policy's
+               storage width, the outer residuals stay in ``b.dtype``).
+      sz / block_e / s / interpret: forwarded to the inner pipeline.
 
     Returns a :class:`repro.core.cg.CGResult`: ``x`` in ``b.dtype``,
     ``rnorm_history`` holding the ``outer_iters + 1`` *outer* weighted
@@ -502,7 +507,22 @@ def cg_ir_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
         r = b - w * mask_hi
         return r, jnp.sqrt(jnp.abs(jnp.sum(r * c_hi * r)))
 
+    theta = None
+    if variant == "sstep":
+        from repro.core.cg_sstep import estimate_theta
+
+        # theta depends only on (D, g, grid, mask) — estimate once here,
+        # not once per refinement sweep inside cg_sstep_fixed_iters.
+        theta = estimate_theta(D_hi, g_hi, grid, mask_hi)
+
     def inner(r_scaled):
+        if variant == "sstep":
+            from repro.core.cg_sstep import cg_sstep_fixed_iters
+
+            return cg_sstep_fixed_iters(
+                r_scaled, D=D, g=g, grid=grid, niter=inner_iters, s=s,
+                mask=mask, c=c, sz=sz, theta=theta, interpret=interpret,
+                precision=policy)
         if variant == "v2":
             # forward the caller's mask/c so the v2 path *validates* them
             # against the structural box fields — the outer refresh uses
@@ -523,10 +543,10 @@ def cg_ir_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
     for _ in range(outer_iters):
         # inf-norm scaling: the downcast spends the narrow mantissa on the
         # digits that are still wrong, not on the already-converged scale.
-        s = jnp.max(jnp.abs(r))
-        s = jnp.where(s > 0, s, jnp.ones((), hi))
-        e = inner((r / s).astype(hi)).x
-        x = x + s * e.astype(hi)
+        scale = jnp.max(jnp.abs(r))
+        scale = jnp.where(scale > 0, scale, jnp.ones((), hi))
+        e = inner((r / scale).astype(hi)).x
+        x = x + scale * e.astype(hi)
         r, rn = refresh(x)
         norms.append(rn)
     hist = jnp.stack(norms)

@@ -25,7 +25,9 @@ __all__ = ["flops_per_dof", "cg_iter_flops", "cg_iter_bytes", "intensity",
            "fused_v2_cg_iter_bytes", "fused_v2_intensity",
            "fused_v2_plane_streams", "PIPELINE_STREAMS", "PRECISION_ITEMSIZE",
            "precision_itemsize", "bytes_per_dof_iter", "pipeline_intensity",
-           "ir_overhead_streams"]
+           "ir_overhead_streams", "SSTEP_DEFAULT_S", "sstep_cycle_streams",
+           "sstep_streams", "sstep_halo_streams", "sstep_effective_streams",
+           "sstep_intensity"]
 
 # Eq. 2's stream counts: fp64 words moved per DOF per CG iteration when the
 # operator, mask, and every inner product run as separate passes.
@@ -53,6 +55,64 @@ FUSED_CG_WRITE_STREAMS = 4
 # diagonal, so only 3 of Eq. 2's 6 metric streams exist.
 FUSED_V2_READ_STREAMS = 9
 FUSED_V2_WRITE_STREAMS = 4
+
+# The v3 pipeline (core/cg_sstep.py, DESIGN.md §8) runs s CG iterations per
+# *cycle*: a matrix-powers slab kernel builds the 2s+1-vector Krylov basis
+# {p, Ap..A^s p, r, Ar..A^{s-1} r} in one residency (re-reading the 3 metric
+# diagonals, D, and the mask factors once per s operator applications) and
+# emits the (2s+1)^2 Gram partials; a multi-axpy update kernel applies the
+# whole s-step of x/r/p updates.  Per cycle:
+#   powers kernel: reads p, r, 3 metric diagonals   (5)  writes 2s-1 basis
+#   update kernel: reads x + the 2s+1 basis (incl.  (2s+2)  writes x, r, p (3)
+#                  p and r, re-read)
+# = (2s+7) reads + (2s+2) writes = 4s+9 streams per s iterations.  At s=1
+# this is exactly the v2 budget (13); at the default s=4 it is 25/4 = 6.25
+# streams/iter.  Redundant halo reads (the matrix-powers ghost region) are
+# the side channel (:func:`sstep_halo_streams`); the effective total stays
+# <= 9 streams/iter at (s, sz) = (4, 4) (:func:`sstep_effective_streams`).
+SSTEP_DEFAULT_S = 4
+
+
+def sstep_cycle_streams(s: int) -> tuple[int, int]:
+    """(reads, writes) full-field streams per s-step *cycle* (s iterations)."""
+    return 2 * s + 7, 2 * s + 2
+
+
+def sstep_streams(s: int) -> tuple[float, float]:
+    """(reads, writes) streams per DOF per CG *iteration* of the v3 s-step
+    pipeline — the per-cycle budget amortized by 1/s.  ``sstep_streams(1)``
+    equals the v2 budget exactly: (9, 4)."""
+    r, w = sstep_cycle_streams(s)
+    return r / float(s), w / float(s)
+
+
+def sstep_halo_streams(s: int, sz: int) -> float:
+    """Stream-equivalents of the v3 matrix-powers halo, per iteration.
+
+    Chaining s operator applications in one residency needs ``s`` ghost
+    slabs on each side of an ``sz``-slab block (each application pollutes
+    one slab inward from the block edge); the kernel redundantly reads the
+    5 halo'd fields (p, r, 3 metric diagonals) over ``2s`` extra slabs per
+    block: ``5 * 2s / sz`` stream-fractions per cycle.  Amortized over the
+    cycle's s iterations the two s factors cancel — ``10/sz`` per
+    iteration whatever s is; ``s`` stays a parameter so the derivation is
+    auditable (the halo *depth* does scale with s).  The analog of
+    :func:`fused_v2_plane_streams` — charged as a side channel, not folded
+    into the headline count."""
+    return 2.0 * 5.0 * float(s) / (float(sz) * float(s))
+
+
+def sstep_effective_streams(s: int, sz: int) -> float:
+    """Headline + halo side channel: total effective streams/iteration of
+    the v3 pipeline.  <= 9 at the default (s, sz) = (4, 4): 6.25 + 2.5."""
+    r, w = sstep_streams(s)
+    return r + w + sstep_halo_streams(s, sz)
+
+
+def sstep_intensity(n: int, s: int, itemsize: int = 8) -> float:
+    """Eq. 2 re-evaluated for the s-step pipeline (headline streams)."""
+    r, w = sstep_streams(s)
+    return flops_per_dof(n) / ((r + w) * float(itemsize))
 
 
 def flops_per_dof(n: int) -> int:
@@ -121,11 +181,14 @@ def fused_v2_plane_streams(n: int, sz: int) -> float:
 # ---------------------------------------------------------------------------
 
 # (reads, writes) full-field streams per DOF per CG iteration, per pipeline
-# rung of the DESIGN.md §6 ladder.
+# rung of the DESIGN.md §6 ladder.  The s-step rung is s-dependent
+# (:func:`sstep_streams`); the registry entry carries the default s=4 point
+# (fractional streams: the per-cycle budget amortized by 1/s).
 PIPELINE_STREAMS = {
     "eq2": (CG_READ_STREAMS, CG_WRITE_STREAMS),
     "fused_v1": (FUSED_CG_READ_STREAMS, FUSED_CG_WRITE_STREAMS),
     "fused_v2": (FUSED_V2_READ_STREAMS, FUSED_V2_WRITE_STREAMS),
+    "sstep_v3": sstep_streams(SSTEP_DEFAULT_S),
 }
 
 # Storage-dtype bytes per word, per precision-policy name
@@ -144,11 +207,31 @@ def precision_itemsize(precision) -> int:
     return PRECISION_ITEMSIZE[str(precision)]
 
 
-def bytes_per_dof_iter(pipeline: str, precision) -> tuple[int, int]:
+def bytes_per_dof_iter(pipeline: str, precision, *, exact: bool = False,
+                       n: int = 10, sz: int = 4,
+                       s: int = SSTEP_DEFAULT_S) -> tuple[float, float]:
     """(read_bytes, write_bytes) per DOF per CG iteration for a pipeline
     rung under a precision policy — the ndof-independent quantity the CI
-    regression gate diffs (benchmarks/check_regression.py)."""
+    regression gate diffs (benchmarks/check_regression.py).
+
+    ``exact=True`` stops charging the sub-stream side channels as exactly
+    zero: the v2 boundary-plane channel (:func:`fused_v2_plane_streams` at
+    the given ``n``/``sz`` — 2 plane writes by the dots kernel, 2 plane
+    reads by the update kernel, split evenly) and the v3 matrix-powers halo
+    (:func:`sstep_halo_streams` — redundant *reads* only) are folded in.
+    The eq2 and fused_v1 rungs have no modeled side channel (v1's uncounted
+    assembly pass follows the original §3.3 books, see DESIGN.md §6), so
+    their exact numbers equal the headline ones.
+    """
     reads, writes = PIPELINE_STREAMS[pipeline]
+    if pipeline == "sstep_v3" and s != SSTEP_DEFAULT_S:
+        reads, writes = sstep_streams(s)
+    if exact:
+        if pipeline == "fused_v2":
+            half = fused_v2_plane_streams(n, sz) / 2.0
+            reads, writes = reads + half, writes + half
+        elif pipeline == "sstep_v3":
+            reads = reads + sstep_halo_streams(s, sz)
     itemsize = precision_itemsize(precision)
     return reads * itemsize, writes * itemsize
 

@@ -43,12 +43,16 @@ class NekboneCase:
       lengths: physical box size.
       dtype:   compute dtype (fp64 validated on CPU; fp32/bf16 TPU target).
       ax_impl: 'listing1' | 'fused' | 'pallas' | 'pallas_fused_cg' |
-               'pallas_fused_cg_v2'.
+               'pallas_fused_cg_v2' | 'pallas_sstep_v3'.
                The fused_cg variants select the step-fused CG pipelines
                (core/cg_fused.py): v1 runs one multi-output Pallas call per
                iteration plus XLA assembly/vector passes (DESIGN.md §3.3);
                v2 runs the whole iteration in two slab-resident Pallas
-               kernels with in-kernel gather-scatter (DESIGN.md §3.4).
+               kernels with in-kernel gather-scatter (DESIGN.md §3.4);
+               sstep_v3 runs s iterations per cycle through the
+               matrix-powers pipeline (core/cg_sstep.py, DESIGN.md §8).
+      s:       iterations per s-step cycle (the 'pallas_sstep_v3' knob;
+               ignored by every other ax_impl).
       precision: 'f64' | 'f32' | 'bf16' | 'bf16_ir' | 'f32_ir' | None —
                the fused pipeline's precision policy (DESIGN.md §7).
                Non-refined policies also set the case ``dtype`` to the
@@ -64,6 +68,7 @@ class NekboneCase:
     dtype: jnp.dtype = jnp.float32
     ax_impl: str = "fused"
     precision: str | None = None
+    s: int = 4
 
     def __post_init__(self):
         if self.precision is not None:
@@ -133,19 +138,36 @@ class NekboneCase:
         M = None
         if precond:
             M = cg_mod.jacobi_preconditioner(self.operator_diagonal())
-        fused = self.ax_impl in ("pallas_fused_cg", "pallas_fused_cg_v2")
+        fused = self.ax_impl in ("pallas_fused_cg", "pallas_fused_cg_v2",
+                                 "pallas_sstep_v3")
         if (fused and niter is not None and M is None
                 and self.precision is not None):
             from repro.core.precision import resolve_policy
 
             policy = resolve_policy(self.precision)
             if policy.refine:
-                variant = ("v2" if self.ax_impl == "pallas_fused_cg_v2"
-                           else "v1")
+                variant = {"pallas_fused_cg_v2": "v2",
+                           "pallas_sstep_v3": "sstep"}.get(self.ax_impl,
+                                                           "v1")
                 return cg_fused_mod.cg_ir_fixed_iters(
                     f, D=self.D, g=self.g, grid=self.grid, niter=niter,
                     precision=policy, mask=self.mask, c=self.c,
-                    variant=variant)
+                    variant=variant, s=self.s)
+        if self.ax_impl == "pallas_sstep_v3" and niter is not None and M is None:
+            from repro.core.cg_sstep import cg_sstep_fixed_iters, \
+                estimate_theta
+
+            # the basis scale depends only on the case's operator —
+            # estimate once per case, not once per solve.
+            theta = getattr(self, "_sstep_theta", None)
+            if theta is None:
+                theta = estimate_theta(self.D, self.g, self.grid,
+                                       self.mask)
+                self._sstep_theta = theta
+            return cg_sstep_fixed_iters(
+                f, D=self.D, g=self.g, grid=self.grid, niter=niter,
+                s=self.s, mask=self.mask, c=self.c, theta=theta,
+                precision=self.precision)
         if self.ax_impl == "pallas_fused_cg_v2" and niter is not None and M is None:
             return cg_fused_mod.cg_fused_v2_fixed_iters(
                 f, D=self.D, g=self.g, grid=self.grid, niter=niter,

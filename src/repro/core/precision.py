@@ -104,6 +104,19 @@ class PrecisionPolicy:
         scale and the per-sweep floor of the refinement loop."""
         return float(jnp.finfo(self.storage_dtype).eps)
 
+    @property
+    def gram(self) -> str:
+        """Dtype of the s-step Gram/recurrence solve — always float64.
+
+        The v3 pipeline's (2s+1)^2 Gram block conditions like
+        ``kappa(A)^{2s}`` (DESIGN.md §8), so the coefficient recurrence is
+        solved host-side in f64 *regardless* of storage/accum — it is
+        O(s^2) scalar work per cycle, never a stream.  Not configurable:
+        a narrow Gram would silently break the s-step algebra for every
+        policy at once.
+        """
+        return "float64"
+
 
 POLICIES: dict[str, PrecisionPolicy] = {
     "f64": PrecisionPolicy("f64", "float64", "float64"),

@@ -44,7 +44,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["vmem_block_e", "pick_block_e", "candidate_blocks",
-           "candidate_slab_sizes", "pick_slab_sz", "clear_cache",
+           "candidate_slab_sizes", "pick_slab_sz",
+           "candidate_slab_sizes_sstep", "pick_slab_sz_sstep", "clear_cache",
            "cache_info", "cache_path"]
 
 _CACHE: dict[tuple, int] = {}
@@ -331,6 +332,107 @@ def pick_slab_sz(grid: tuple[int, int, int], n: int, dtype=jnp.float32, *,
         m = measure
         if m is None and backend == "tpu":
             m = _default_measure_slab(grid, n, dtype, acc_dtype)
+        if m is None:
+            return cands[0], False
+        return min(cands, key=m), True
+
+    return _cached_pick(key, pick)
+
+
+# ---------------------------------------------------------------------------
+# s-step slab blocks (v3 matrix-powers pipeline): joint (sz, s) tuning
+# ---------------------------------------------------------------------------
+
+def candidate_slab_sizes_sstep(grid: tuple[int, int, int], n: int, s: int,
+                               itemsize: int = 4) -> list[int]:
+    """Slabs-per-block candidates for the v3 powers kernel, per ``s``.
+
+    The working set is *s-dependent* twice over — the block marches
+    ``sz + 2s`` slabs (owned + matrix-powers halo) and keeps the whole
+    ``2s+1``-vector basis live alongside the operator temporaries — so the
+    VMEM ceiling on ``sz`` shrinks as ``s`` grows and the two knobs must be
+    tuned jointly.  ``sz = 1`` stays always viable, as in
+    :func:`candidate_slab_sizes`.
+    """
+    ex, ey, ez = grid
+    n3_padded = -(-(n ** 3) // 128) * 128
+    live = 2 * s + 1 + 8        # basis vectors + gradients/temporaries
+    per_slab = live * ex * ey * n3_padded * max(itemsize, 4)
+    max_slabs = max(1, VMEM_BUDGET_BYTES // per_slab)
+    sz_max = max(1, max_slabs - 2 * s)
+    cands = [c for c in range(ez, 0, -1) if ez % c == 0 and c <= sz_max]
+    return cands or [1]
+
+
+def _default_measure_sstep(grid: tuple[int, int, int], n: int, s: int,
+                           dtype, acc_dtype=None) -> Callable[[int], float]:
+    """Times the v3 powers kernel on synthetic data for one slab count."""
+    import time
+
+    import numpy as np
+
+    from repro.core.geom import box_axis_factors
+    from repro.core.sem import derivative_matrix
+    from repro.kernels import nekbone_ax as _ax
+
+    ex, ey, ez = grid
+    E = ex * ey * ez
+    rng = np.random.default_rng(0)
+    p2 = jnp.asarray(rng.normal(size=(E, n ** 3)), dtype)
+    r2 = jnp.asarray(rng.normal(size=(E, n ** 3)), dtype)
+    g3 = jnp.asarray(rng.normal(size=(E, 3, n ** 3)), dtype)
+    D = jnp.asarray(derivative_matrix(n), dtype)
+    (mx, my, mz), (cx, cy, cz) = box_axis_factors(grid, n)
+    mx, my, cx, cy = (jnp.asarray(a, dtype) for a in (mx, my, cx, cy))
+    cz = jnp.asarray(cz, dtype)
+    acc = _ax._accum(jnp.dtype(dtype), acc_dtype)
+    inv_theta = jnp.ones((1, 1), acc)
+
+    def measure(sz: int) -> float:
+        pext = _ax.sstep_extend_field(p2, grid, sz, s)
+        rext = _ax.sstep_extend_field(r2, grid, sz, s)
+        gext = _ax.sstep_extend_field(g3, grid, sz, s)
+        mzext = _ax.sstep_extend_zfactor(jnp.asarray(mz, dtype), sz, s)
+
+        def f():
+            return _ax.nekbone_ax_powers_pallas(
+                pext, rext, D, D.T, gext, mx, my, mzext, cx, cy, cz,
+                inv_theta, n=n, grid=grid, sz=sz, s=s, interpret=False,
+                acc_dtype=acc_dtype)
+
+        jax.block_until_ready(f()[0])          # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = f()
+        jax.block_until_ready(out[0])
+        return (time.perf_counter() - t0) / 3
+
+    return measure
+
+
+def pick_slab_sz_sstep(grid: tuple[int, int, int], n: int, s: int,
+                       dtype=jnp.float32, *, acc_dtype=None,
+                       backend: str | None = None,
+                       measure: Callable[[int], float] | None = None) -> int:
+    """Best slabs-per-block for the v3 powers kernel at a given ``s``.
+
+    Same measure-on-TPU / heuristic-elsewhere policy as
+    :func:`pick_slab_sz`; the cache key gains ``s`` as a dimension — the
+    halo depth and the live basis count both scale with it, so a pick for
+    one ``s`` must never be reused for another.
+    """
+    dtype = jnp.dtype(dtype)
+    backend = backend or jax.default_backend()
+    ex, ey, ez = grid
+    acc_name = _acc_name(dtype, acc_dtype)
+    key = ("sstep", n, ex, ey, ez, s, dtype.name, acc_name, backend)
+    size_item = max(dtype.itemsize, jnp.dtype(acc_name).itemsize)
+
+    def pick() -> tuple[int, bool]:
+        cands = candidate_slab_sizes_sstep(grid, n, s, itemsize=size_item)
+        m = measure
+        if m is None and backend == "tpu":
+            m = _default_measure_sstep(grid, n, s, dtype, acc_dtype)
         if m is None:
             return cands[0], False
         return min(cands, key=m), True

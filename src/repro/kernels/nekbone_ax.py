@@ -48,7 +48,10 @@ __all__ = ["nekbone_ax_kernel", "nekbone_ax_pallas", "ax_block",
            "ax_block_diag", "nekbone_ax_dots_kernel", "nekbone_ax_dots_pallas",
            "nekbone_ax_pap_kernel", "nekbone_ax_pap_pallas",
            "nekbone_ax_slab_kernel", "nekbone_ax_slab_pallas",
-           "nekbone_cg_update_kernel", "nekbone_cg_update_pallas"]
+           "nekbone_cg_update_kernel", "nekbone_cg_update_pallas",
+           "nekbone_ax_powers_kernel", "nekbone_ax_powers_pallas",
+           "nekbone_sstep_update_kernel", "nekbone_sstep_update_pallas",
+           "sstep_extend_field", "sstep_extend_zfactor"]
 
 from repro.compat import CompilerParams as _CompilerParams
 from repro.core.geom import box_outer as _box_outer
@@ -630,3 +633,334 @@ def nekbone_cg_update_pallas(x2: jnp.ndarray, p2: jnp.ndarray,
         interpret=interpret,
         name=f"nekbone_cg_update_n{n}_sz{sz}{_acc_tag(acc_dtype)}",
     )(x2, p2, r2, w2, addb, addt, alpha, cx, cy, cz)
+
+
+# ---------------------------------------------------------------------------
+# v3 s-step pipeline: matrix-powers slab kernel + multi-axpy update
+# (DESIGN.md §8).  One kernel invocation evaluates the whole 2s+1-vector
+# Krylov basis {p, Ap, .., A^s p, r, Ar, .., A^{s-1} r} of an s-step CG
+# cycle in a single slab residency: the 3 metric diagonals, D/D^T, and the
+# per-axis mask factors are loaded once per s operator applications and the
+# chained contractions never leave VMEM.  Chaining A across block boundaries
+# needs a matrix-powers ghost region: each application pollutes one slab
+# inward from the block edge, so blocks march sz owned slabs plus s halo
+# slabs on each side (zero-padded past the domain ends — zero elements
+# contribute exactly the nothing a missing neighbour would).  The owned
+# basis slices are fully assembled (the halo supplies both neighbours'
+# direct-stiffness contributions in-block), so no plane side channel exists;
+# the redundant halo reads are the side channel instead
+# (cost.sstep_halo_streams).  The (2s+1)^2 Gram/moment block of the s-step
+# recurrence is reduced in-kernel over the owned slabs and emitted as
+# per-block partials; the s x s recurrence itself is solved in f64 on the
+# host (core/cg_sstep.py).
+# ---------------------------------------------------------------------------
+
+def sstep_extend_field(f2: jnp.ndarray, grid: tuple[int, int, int], sz: int,
+                       halo: int) -> jnp.ndarray:
+    """Gather per-block halo windows of a z-major field, zero-padded.
+
+    Args:
+      f2: (E, ...) element-major field (z-major over ``grid``); trailing
+          dims are carried through.
+    Returns (EZ//sz, (sz + 2*halo)*EY*EX, ...): block ``i`` holds slabs
+    ``[i*sz - halo, i*sz + sz + halo)`` with zeros past the domain ends —
+    the matrix-powers ghost region of the v3 powers kernel.  (A production
+    TPU lowering would express these as overlapping block windows; the
+    reference build materializes them, which the cost model charges as the
+    halo side channel.)
+    """
+    ex, ey, ez = grid
+    nblk = ez // sz
+    L = sz + 2 * halo
+    rest = f2.shape[1:]
+    f = f2.reshape((ez, ey * ex) + rest)
+    pad = jnp.zeros((halo,) + f.shape[1:], f2.dtype)
+    fp = jnp.concatenate([pad, f, pad], axis=0)
+    idx = jnp.arange(nblk)[:, None] * sz + jnp.arange(L)[None, :]
+    return fp[idx].reshape((nblk, L * ey * ex) + rest)
+
+
+def sstep_extend_zfactor(fz: jnp.ndarray, sz: int, halo: int) -> jnp.ndarray:
+    """Per-block halo windows of a per-axis z factor ``(EZ, n)``.
+
+    Out-of-domain halo rows are padded with ones: the fields there are
+    zero (``sstep_extend_field``), so the factor value is inert, and ones
+    never introduce false Dirichlet zeros.  Returns (EZ//sz, sz+2*halo, n).
+    """
+    ez, n = fz.shape
+    nblk = ez // sz
+    L = sz + 2 * halo
+    pad = jnp.ones((halo, n), fz.dtype)
+    fp = jnp.concatenate([pad, fz, pad], axis=0)
+    idx = jnp.arange(nblk)[:, None] * sz + jnp.arange(L)[None, :]
+    return fp[idx]
+
+
+def nekbone_ax_powers_kernel(pext_ref, rext_ref, d_ref, dt_ref, gext_ref,
+                             mx_ref, my_ref, mzext_ref, cx_ref, cy_ref,
+                             cz_ref, th_ref, basis_ref, gram_ref, *, n: int,
+                             ex: int, ey: int, sz: int, s: int, halo: int,
+                             acc_dtype: str | None = None):
+    """Matrix-powers front-half of one s-step CG cycle, one slab block.
+
+    In one VMEM residency over ``L = sz + 2*halo`` slabs (``halo = s``):
+
+        v_{j+1} = (1/theta) * mask * gs_block(D^T G D v_j)   chained s times
+                  from v_0 = p, and s-1 times from v_0 = r
+        G_ab    = sum_own(V_a * c * V_b)                     Gram partials
+
+    with ``V = [p, Ap', .., A'^s p, r, A'r, .., A'^{s-1} r]`` (``A' = A /
+    theta`` — the theta scaling keeps the monomial basis O(1) so the f64
+    host recurrence stays conditioned, DESIGN.md §8).  Every basis vector
+    is rounded through the *storage* dtype before it feeds the next
+    application and before the Gram reduction: the update kernel combines
+    the stored basis, so Gram and basis must describe the same (rounded)
+    vectors — identities for f32/f64, load-bearing for bf16 (the §7 rules).
+
+    The in-block direct stiffness runs over the whole extended block, so
+    owned slabs receive both neighbours' contributions (computed
+    redundantly in the halo) and the emitted basis needs no plane stitch.
+    Gram partials reduce over owned slabs only — blocks partition E.
+
+    Refs (VMEM blocks; ``Lee = L*ey*ex``, ``block_e = sz*ey*ex``):
+      pext_ref/rext_ref: (1, Lee, n^3)  halo'd p / r windows
+      d_ref/dt_ref: (n, n)
+      gext_ref:  (1, Lee, 3, n^3)       halo'd metric diagonal
+      mx_ref/my_ref: (ex|ey, n)         per-axis Dirichlet factors
+      mzext_ref: (1, L, n)              halo'd z mask factor window
+      cx_ref/cy_ref: (ex|ey, n)         per-axis c factors
+      cz_ref:    (sz, n)                owned z c-factor slice
+      th_ref:    (1, 1)                 1/theta basis scale
+      basis_ref: (block_e, 2s-1, n^3)   owned [A'p..A'^s p, A'r..A'^{s-1}r]
+      gram_ref:  (1, 2s+1, 2s+1)        Gram partial over owned slabs
+    """
+    L = sz + 2 * halo
+    Lee = L * ey * ex
+    block_e = sz * ey * ex
+    n3 = n ** 3
+    f32 = _accum(pext_ref.dtype, acc_dtype)
+    out_dtype = basis_ref.dtype
+    D = d_ref[...].astype(f32)
+    Dt = dt_ref[...].astype(f32)
+    g3 = gext_ref[0].astype(f32)
+    inv_th = th_ref[0, 0].astype(f32)
+    mask = _box_outer(mzext_ref[0].astype(f32), my_ref[...].astype(f32),
+                      mx_ref[...].astype(f32))
+
+    def apply_scaled(v):
+        """One masked, block-assembled, theta-scaled operator application."""
+        w = ax_block_diag(v, D, Dt, g3, n=n, e=Lee)
+        v6 = w.reshape(L, ey, ex, n, n, n) * mask
+        if ex > 1:
+            t = v6[:, :, :-1, :, :, -1] + v6[:, :, 1:, :, :, 0]
+            v6 = v6.at[:, :, :-1, :, :, -1].set(t)
+            v6 = v6.at[:, :, 1:, :, :, 0].set(t)
+        if ey > 1:
+            t = v6[:, :-1, :, :, -1, :] + v6[:, 1:, :, :, 0, :]
+            v6 = v6.at[:, :-1, :, :, -1, :].set(t)
+            v6 = v6.at[:, 1:, :, :, 0, :].set(t)
+        if L > 1:
+            t = v6[:-1, :, :, -1, :, :] + v6[1:, :, :, 0, :, :]
+            v6 = v6.at[:-1, :, :, -1, :, :].set(t)
+            v6 = v6.at[1:, :, :, 0, :, :].set(t)
+        return (v6.reshape(Lee, n3) * inv_th)
+
+    def chain(v0, napps):
+        vecs = [v0]
+        v = v0
+        for _ in range(napps):
+            # round through storage: the next application and the Gram must
+            # see exactly the vector the update kernel will re-read.
+            v = apply_scaled(v).astype(out_dtype).astype(f32)
+            vecs.append(v)
+        return vecs
+
+    p = pext_ref[0].astype(f32)
+    r = rext_ref[0].astype(f32)
+    V = chain(p, s) + chain(r, s - 1)          # order: p-powers, r-powers
+
+    ho = halo * ey * ex
+    own = [v[ho:ho + block_e] for v in V]
+    c6 = _box_outer(cz_ref[...].astype(f32), cy_ref[...].astype(f32),
+                    cx_ref[...].astype(f32))
+    cw = c6.reshape(1, block_e * n3)
+    Vo = jnp.stack([v.reshape(block_e * n3) for v in own])
+    gram_ref[0] = _dot(Vo * cw, Vo.T).astype(gram_ref.dtype)
+
+    # owned basis, minus p and r themselves (the update kernel re-reads
+    # those from their own streams): [A'p..A'^s p, A'r..A'^{s-1} r].
+    new = own[1:s + 1] + own[s + 2:]
+    basis_ref[...] = jnp.stack(new, axis=1).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "s",
+                                             "interpret", "acc_dtype"))
+def nekbone_ax_powers_pallas(pext: jnp.ndarray, rext: jnp.ndarray,
+                             D: jnp.ndarray, Dt: jnp.ndarray,
+                             gext: jnp.ndarray, mx: jnp.ndarray,
+                             my: jnp.ndarray, mzext: jnp.ndarray,
+                             cx: jnp.ndarray, cy: jnp.ndarray,
+                             cz: jnp.ndarray, inv_theta: jnp.ndarray, *,
+                             n: int, grid: tuple[int, int, int], sz: int,
+                             s: int, interpret: bool = False,
+                             acc_dtype: str | None = None):
+    """Multi-output pallas_call for the v3 matrix-powers kernel.
+
+    Args:
+      pext/rext: (EZ//sz, Lee, n^3) halo windows (:func:`sstep_extend_field`
+        with ``halo = s``); gext: (EZ//sz, Lee, 3, n^3); mzext:
+        (EZ//sz, L, n) (:func:`sstep_extend_zfactor`); cz: (EZ, n) —
+        blocked into owned (sz, n) slices; inv_theta: (1, 1) basis scale.
+
+    Returns ``(basis, gram_parts)``: basis ``(E, 2s-1, n^3)`` in the
+    storage dtype of ``pext``, Gram partials ``(EZ//sz, 2s+1, 2s+1)`` in
+    the accumulation dtype.
+    """
+    ex, ey, ez = grid
+    assert ez % sz == 0 and s >= 1, (grid, sz, s)
+    halo = s
+    L = sz + 2 * halo
+    Lee = L * ey * ex
+    block_e = sz * ey * ex
+    nblk = ez // sz
+    E = nblk * block_e
+    n3 = n ** 3
+    K = 2 * s + 1
+    nb = 2 * s - 1
+    assert pext.shape == (nblk, Lee, n3), (pext.shape, (nblk, Lee, n3))
+    acc = _accum(pext.dtype, acc_dtype)
+    ext = pl.BlockSpec((1, Lee, n3), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        functools.partial(nekbone_ax_powers_kernel, n=n, ex=ex, ey=ey,
+                          sz=sz, s=s, halo=halo, acc_dtype=acc_dtype),
+        grid=(nblk,),
+        in_specs=[
+            ext,                                        # p window
+            ext,                                        # r window
+            pl.BlockSpec((n, n), lambda i: (0, 0)),     # D
+            pl.BlockSpec((n, n), lambda i: (0, 0)),     # Dt
+            pl.BlockSpec((1, Lee, 3, n3), lambda i: (i, 0, 0, 0)),  # g diag
+            pl.BlockSpec((ex, n), lambda i: (0, 0)),    # mask factor x
+            pl.BlockSpec((ey, n), lambda i: (0, 0)),    # mask factor y
+            pl.BlockSpec((1, L, n), lambda i: (i, 0, 0)),  # mask z window
+            pl.BlockSpec((ex, n), lambda i: (0, 0)),    # c factor x
+            pl.BlockSpec((ey, n), lambda i: (0, 0)),    # c factor y
+            pl.BlockSpec((sz, n), lambda i: (i, 0)),    # c factor z slice
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),     # 1/theta
+        ],
+        out_specs=(pl.BlockSpec((block_e, nb, n3), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((1, K, K), lambda i: (i, 0, 0))),
+        out_shape=(
+            jax.ShapeDtypeStruct((E, nb, n3), pext.dtype),
+            jax.ShapeDtypeStruct((nblk, K, K), acc),
+        ),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+        name=f"nekbone_ax_powers_n{n}_sz{sz}_s{s}{_acc_tag(acc_dtype)}",
+    )(pext, rext, D, Dt, gext, mx, my, mzext, cx, cy, cz, inv_theta)
+
+
+def nekbone_sstep_update_kernel(x_ref, p_ref, r_ref, basis_ref, coef_ref,
+                                cx_ref, cy_ref, cz_ref, x_out, r_out, p_out,
+                                rcr_ref, *, n: int, ex: int, ey: int,
+                                sz: int, s: int,
+                                acc_dtype: str | None = None):
+    """Multi-axpy back-half of one s-step cycle (DESIGN.md §8).
+
+    Applies the whole s-step of vector updates in one pass over the basis:
+
+        x += V @ e_s,   r = V @ b_s,   p = V @ a_s,   rcr = sum(r*c*r)
+
+    with ``V = [p, basis.., r, basis..]`` in the powers kernel's column
+    order and ``(e_s, b_s, a_s)`` the f64-solved recurrence coefficients
+    (rows of ``coef_ref``).  The ``r·c·r`` partial reduces over the
+    *stored* residual — it seeds the next cycle's final-history entry and
+    must match what the next powers kernel reads from HBM (§7 rule 2).
+
+    Refs:
+      x_ref/p_ref/r_ref: (block_e, n^3)
+      basis_ref: (block_e, 2s-1, n^3)   [A'p..A'^s p, A'r..A'^{s-1} r]
+      coef_ref:  (3, 2s+1)              rows: x-, r-, p-update coefficients
+      cx_ref/cy_ref/cz_ref: per-axis c factors ((ex|ey|sz), n)
+      x_out/r_out/p_out: (block_e, n^3);  rcr_ref: (1, 1)
+    """
+    block_e = sz * ey * ex
+    n3 = n ** 3
+    f32 = _accum(x_ref.dtype, acc_dtype)
+    coef = coef_ref[...].astype(f32)
+    basis = basis_ref[...].astype(f32)
+    p = p_ref[...].astype(f32)
+    r = r_ref[...].astype(f32)
+    # V column order (powers kernel): p, A'p..A'^s p, r, A'r..A'^{s-1} r
+    terms = ([p] + [basis[:, m, :] for m in range(s)]
+             + [r] + [basis[:, s + m, :] for m in range(s - 1)])
+    xacc = x_ref[...].astype(f32)
+    racc = jnp.zeros((block_e, n3), f32)
+    pacc = jnp.zeros((block_e, n3), f32)
+    for k, v in enumerate(terms):
+        xacc = xacc + coef[0, k] * v
+        racc = racc + coef[1, k] * v
+        pacc = pacc + coef[2, k] * v
+    r_st = racc.astype(r_out.dtype)
+    c6 = _box_outer(cz_ref[...].astype(f32), cy_ref[...].astype(f32),
+                    cx_ref[...].astype(f32))
+    r6 = r_st.astype(f32).reshape(sz, ey, ex, n, n, n)
+    rcr_ref[0, 0] = jnp.sum(r6 * c6 * r6).astype(rcr_ref.dtype)
+    x_out[...] = xacc.astype(x_out.dtype)
+    r_out[...] = r_st
+    p_out[...] = pacc.astype(p_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "s",
+                                             "interpret", "acc_dtype"))
+def nekbone_sstep_update_pallas(x2: jnp.ndarray, p2: jnp.ndarray,
+                                r2: jnp.ndarray, basis: jnp.ndarray,
+                                coef: jnp.ndarray, cx: jnp.ndarray,
+                                cy: jnp.ndarray, cz: jnp.ndarray, *, n: int,
+                                grid: tuple[int, int, int], sz: int, s: int,
+                                interpret: bool = False,
+                                acc_dtype: str | None = None):
+    """Multi-output pallas_call for the s-step update kernel.
+
+    Args mirror :func:`nekbone_ax_powers_pallas`; ``coef`` is the (3, 2s+1)
+    coefficient block (x/r/p rows).  Returns
+    ``(x2_new, r2_new, p2_new, rcr_parts)``.
+    """
+    ex, ey, ez = grid
+    E = x2.shape[0]
+    assert E == ex * ey * ez and ez % sz == 0, (grid, sz, E)
+    block_e = sz * ey * ex
+    nblk = ez // sz
+    n3 = n ** 3
+    K = 2 * s + 1
+    nb = 2 * s - 1
+    acc = _accum(x2.dtype, acc_dtype)
+    field = pl.BlockSpec((block_e, n3), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(nekbone_sstep_update_kernel, n=n, ex=ex, ey=ey,
+                          sz=sz, s=s, acc_dtype=acc_dtype),
+        grid=(nblk,),
+        in_specs=[
+            field, field, field,                        # x, p, r
+            pl.BlockSpec((block_e, nb, n3), lambda i: (i, 0, 0)),  # basis
+            pl.BlockSpec((3, K), lambda i: (0, 0)),     # coefficients
+            pl.BlockSpec((ex, n), lambda i: (0, 0)),    # c factor x
+            pl.BlockSpec((ey, n), lambda i: (0, 0)),    # c factor y
+            pl.BlockSpec((sz, n), lambda i: (i, 0)),    # c factor z slice
+        ],
+        out_specs=(field, field, field,
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))),
+        out_shape=(
+            jax.ShapeDtypeStruct((E, n3), x2.dtype),    # x
+            jax.ShapeDtypeStruct((E, n3), r2.dtype),    # r
+            jax.ShapeDtypeStruct((E, n3), p2.dtype),    # p
+            jax.ShapeDtypeStruct((nblk, 1), acc),
+        ),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+        name=f"nekbone_sstep_update_n{n}_sz{sz}_s{s}{_acc_tag(acc_dtype)}",
+    )(x2, p2, r2, basis, coef, cx, cy, cz)

@@ -19,7 +19,8 @@ from repro.kernels import nekbone_ax as _ax
 from repro.kernels import wkv6 as _wkv6
 
 __all__ = ["nekbone_ax", "nekbone_ax_dots", "nekbone_ax_dots_slab",
-           "nekbone_cg_update", "slab_axis_factors", "diag_metric",
+           "nekbone_cg_update", "nekbone_ax_powers", "nekbone_sstep_update",
+           "slab_axis_factors", "diag_metric",
            "flash_attention", "wkv6", "default_interpret"]
 
 
@@ -206,6 +207,90 @@ def nekbone_ax_dots_slab(p_prev: jnp.ndarray, r: jnp.ndarray,
         vb = vb.at[:-1, -1, :, :, -1, :, :].add(bot[1:].reshape(plane))
     return (p2.reshape(p_prev.shape), vb.reshape(p_prev.shape),
             jnp.sum(pap_b))
+
+
+def nekbone_ax_powers(p: jnp.ndarray, r: jnp.ndarray, D: jnp.ndarray,
+                      g3: jnp.ndarray, grid: tuple[int, int, int], *,
+                      s: int, theta: float = 1.0, sz: int | None = None,
+                      interpret: bool | None = None,
+                      acc_dtype: str | None = None):
+    """v3 matrix-powers kernel on natural shapes (DESIGN.md §8).
+
+    Builds the halo windows (``halo = s`` slabs, zero-padded past the
+    domain) and evaluates the scaled Krylov basis of one s-step cycle —
+    ``A' = (mask gs ax_local) / theta`` chained s times from ``p`` and
+    s-1 times from ``r`` — plus the (2s+1)^2 Gram block of
+    ``V = [p, A'p.., r, A'r..]`` under the weight ``c``.
+
+    Args:
+      p, r: (E, n, n, n), z-major over ``grid``; both continuous+masked.
+      D: (n, n); g3: diagonal (E, 3, ...) or verifiably-diagonal 6-component
+         metric; theta: basis scale (``A' = A/theta``).
+      s: powers per cycle (>= 1); sz: slabs per block (default: autotuned).
+
+    Returns ``(basis, gram)``: basis ``(E, 2s-1, n, n, n)`` holding
+    ``[A'p..A'^s p, A'r..A'^{s-1} r]`` and the summed ``(2s+1, 2s+1)``
+    Gram matrix in the accumulation dtype.
+    """
+    ex, ey, ez = grid = tuple(grid)
+    E = p.shape[0]
+    n = p.shape[-1]
+    interpret = default_interpret() if interpret is None else interpret
+    if sz is None:
+        sz = _autotune.pick_slab_sz_sstep(grid, n, s, p.dtype,
+                                          acc_dtype=acc_dtype)
+    n3 = n ** 3
+    (mx, my, mz), (cx, cy, cz) = slab_axis_factors(grid, n, p.dtype)
+    D = jnp.asarray(D, p.dtype)
+    g3 = diag_metric(jnp.asarray(g3, p.dtype), E, n)
+    acc = _ax._accum(p.dtype, acc_dtype)
+    pext = _ax.sstep_extend_field(p.reshape(E, n3), grid, sz, s)
+    rext = _ax.sstep_extend_field(r.reshape(E, n3), grid, sz, s)
+    gext = _ax.sstep_extend_field(g3, grid, sz, s)
+    mzext = _ax.sstep_extend_zfactor(mz, sz, s)
+    inv_theta = jnp.full((1, 1), 1.0 / theta, acc)
+    basis, gram_b = _ax.nekbone_ax_powers_pallas(
+        pext, rext, D, D.T, gext, mx, my, mzext, cx, cy, cz, inv_theta,
+        n=n, grid=grid, sz=sz, s=s, interpret=interpret, acc_dtype=acc_dtype)
+    return (basis.reshape(E, 2 * s - 1, n, n, n), jnp.sum(gram_b, axis=0))
+
+
+def nekbone_sstep_update(x: jnp.ndarray, p: jnp.ndarray, r: jnp.ndarray,
+                         basis: jnp.ndarray, coef: jnp.ndarray,
+                         grid: tuple[int, int, int], *, s: int,
+                         sz: int | None = None,
+                         interpret: bool | None = None,
+                         acc_dtype: str | None = None):
+    """v3 multi-axpy s-step update kernel on natural shapes.
+
+    Applies the whole cycle of vector updates from the f64 recurrence
+    coefficients: ``x += V e``, ``r = V b``, ``p = V a`` with ``V`` in the
+    powers kernel's column order, plus the post-cycle weighted norm
+    ``sum(r_new * c * r_new)`` (``c`` rebuilt in-kernel).
+
+    Args:
+      x, p, r: (E, n, n, n); basis: (E, 2s-1, n, n, n) from
+      :func:`nekbone_ax_powers`; coef: (3, 2s+1) rows (e, b, a).
+
+    Returns ``(x_new, r_new, p_new, rcr)``.
+    """
+    ex, ey, ez = grid = tuple(grid)
+    E = x.shape[0]
+    n = x.shape[-1]
+    interpret = default_interpret() if interpret is None else interpret
+    if sz is None:
+        sz = _autotune.pick_slab_sz_sstep(grid, n, s, p.dtype,
+                                          acc_dtype=acc_dtype)
+    n3 = n ** 3
+    _, (cx, cy, cz) = slab_axis_factors(grid, n, x.dtype)
+    acc = _ax._accum(x.dtype, acc_dtype)
+    x2, r2, p2, rcr_b = _ax.nekbone_sstep_update_pallas(
+        x.reshape(E, n3), p.reshape(E, n3), r.reshape(E, n3),
+        basis.reshape(E, 2 * s - 1, n3), jnp.asarray(coef, acc),
+        cx, cy, cz, n=n, grid=grid, sz=sz, s=s, interpret=interpret,
+        acc_dtype=acc_dtype)
+    return (x2.reshape(x.shape), r2.reshape(x.shape), p2.reshape(x.shape),
+            jnp.sum(rcr_b))
 
 
 def nekbone_cg_update(x: jnp.ndarray, p: jnp.ndarray, r: jnp.ndarray,

@@ -212,6 +212,59 @@ def check_fused_cg_sharded():
           and float(np.abs(h[:10] - h_ref[:10]).max()) < 1e-4 * h_ref[0])
 
 
+def check_fused_cg_sharded_precision():
+    """Sharded fused CG under non-f64 precision policies (DESIGN.md §7).
+
+    The sharded path was previously only exercised wide: here each of the
+    f32 / bf16 storage policies must (a) run SPMD-uniform on the 8-device
+    mesh — the psum'd partials travel in the *accum* dtype, so alpha/beta
+    stay shard-identical even when storage rounds — and (b) reproduce the
+    single-device fused pipeline at the same policy: identical arithmetic
+    except the psum association of the inner products.
+    """
+    from repro.core.cg_fused import (cg_fused_fixed_iters,
+                                     cg_fused_sharded_fixed_iters)
+    from repro.core.nekbone import NekboneCase
+
+    mesh = mesh1d("data")
+    niter = 20
+    for policy, tol in (("f32", 1e-4), ("bf16", 2e-2)):
+        case = NekboneCase(n=4, grid=(2, 2, 8), dtype=jnp.float32)
+        _, f = case.manufactured()
+        ref = cg_fused_fixed_iters(f, D=case.D, g=case.g, mask=case.mask,
+                                   c=case.c, grid=case.grid, niter=niter,
+                                   interpret=True, precision=policy)
+        grid_l = case.shard_grid(8)
+
+        def solve(f_l, g_l, m_l, c_l, policy=policy):
+            res = cg_fused_sharded_fixed_iters(
+                f_l, D=case.D, g=g_l, mask=m_l, c=c_l, grid_local=grid_l,
+                axis_names=("data",), niter=niter, interpret=True,
+                precision=policy)
+            return res.x, res.rnorm_history
+
+        x, hist = jax.jit(shard_map(
+            solve, mesh=mesh, in_specs=(P("data"),) * 4,
+            out_specs=(P("data"), P()), check_vma=False))(
+                f, case.g, case.mask, case.c)
+        check(f"fused_cg_sharded_{policy}_dtype",
+              x.dtype == ref.x.dtype)
+        xs = np.asarray(x, np.float64)
+        rs = np.asarray(ref.x, np.float64)
+        scale = float(np.abs(rs).max()) + 1e-30
+        check(f"fused_cg_sharded_{policy}_x",
+              float(np.abs(xs - rs).max()) < tol * scale)
+        h = np.asarray(hist, np.float64)
+        h_ref = np.asarray(ref.rnorm_history, np.float64)
+        # early history must track tightly; late entries drift chaotically
+        # once round-off feeds back through alpha/beta (same budget as the
+        # wide-path check above) — finiteness + net decrease pin those.
+        check(f"fused_cg_sharded_{policy}_hist",
+              np.isfinite(h).all()
+              and float(np.abs(h[:10] - h_ref[:10]).max()) < tol * h_ref[0]
+              and h[-1] < h[0])
+
+
 def check_seq_sharded_attention():
     """Sequence-parallel chunked attention == plain chunked (odd head count)."""
     from repro.models.attention import _chunked, _seq_sharded_chunked
@@ -372,6 +425,7 @@ if __name__ == "__main__":
     check_sharded_gs_hierarchical()
     check_sharded_nekbone_cg()
     check_fused_cg_sharded()
+    check_fused_cg_sharded_precision()
     check_seq_sharded_attention()
     check_seq_sharded_decode()
     check_moe_shardmap_equals_local()

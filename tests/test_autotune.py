@@ -227,6 +227,53 @@ def test_heuristic_picks_stay_out_of_measured_disk_cache():
     assert keys == {(4, 8, "float32", "float32", "tpu")}
 
 
+def test_sstep_candidates_shrink_with_s():
+    """The joint (sz, s) working set: more powers -> deeper halo + more
+    live basis vectors -> a lower VMEM ceiling on sz."""
+    for grid in ((2, 2, 8), (4, 4, 16)):
+        for n in (4, 10):
+            prev_max = None
+            for s in (1, 2, 4, 8):
+                cands = autotune.candidate_slab_sizes_sstep(grid, n, s)
+                assert cands, (grid, n, s)
+                assert all(grid[2] % sz == 0 for sz in cands)
+                assert cands[-1] == 1
+                if prev_max is not None:
+                    assert cands[0] <= prev_max, (grid, n, s)
+                prev_max = cands[0]
+
+
+def test_pick_slab_sz_sstep_keys_carry_s():
+    """A pick for one s must never be reused for another — s changes the
+    halo depth and the live basis count."""
+    calls = []
+
+    def measure(sz):
+        calls.append(sz)
+        return float(sz)
+
+    sz_a = autotune.pick_slab_sz_sstep((2, 2, 8), 4, 2, jnp.float32,
+                                       backend="tpu", measure=measure)
+    assert sz_a == 1
+    n_calls = len(calls)
+    # same (grid, s): cached
+    autotune.pick_slab_sz_sstep((2, 2, 8), 4, 2, jnp.float32,
+                                backend="tpu", measure=measure)
+    assert len(calls) == n_calls
+    # different s: distinct key, fresh sweep
+    autotune.pick_slab_sz_sstep((2, 2, 8), 4, 4, jnp.float32,
+                                backend="tpu", measure=measure)
+    assert len(calls) > n_calls
+    info = autotune.cache_info()
+    assert ("sstep", 4, 2, 2, 8, 2, "float32", "float32", "tpu") in info
+    assert ("sstep", 4, 2, 2, 8, 4, "float32", "float32", "tpu") in info
+    # and the sstep keys never collide with the plain slab keys
+    autotune.pick_slab_sz((2, 2, 8), 4, jnp.float32, backend="tpu",
+                          measure=measure)
+    assert ("slab", 4, 2, 2, 8, "float32", "float32", "tpu") \
+        in autotune.cache_info()
+
+
 def test_corrupt_cache_file_is_tolerated():
     path = autotune.cache_path()
     path.parent.mkdir(parents=True, exist_ok=True)

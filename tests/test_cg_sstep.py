@@ -1,0 +1,369 @@
+"""v3 s-step CG: matrix-powers kernel + multi-axpy update (DESIGN.md §8).
+
+Four layers are pinned:
+
+* the matrix-powers kernel's basis against repeated applications of the
+  reference assembled operator — including the halo correctness claim:
+  blocks with s ghost slabs emit *fully assembled* owned basis vectors
+  (no plane side channel), over randomized grids and slab splits;
+* the in-kernel Gram partials against the host-side ``V^T C V``;
+* the multi-axpy update kernel against the XLA linear-combination
+  reference;
+* the whole ``cg_sstep_fixed_iters`` against ``cg_fixed_iters`` to fp64
+  round-off for s <= 4, the s=1 degeneracy, remainder cycles, precision
+  policies, and the ``NekboneCase(ax_impl='pallas_sstep_v3')`` dispatch.
+
+History caveat (tested where it bites): in-cycle residual norms are f64
+Gram quadratic forms ``b' G b`` — exact-arithmetic equal to the device
+reduction but floored near ``eps * (basis scale / |r_j|)`` relative once
+the residual has dropped many orders *within one cycle*.  Parity cases
+therefore use pre-asymptotic iteration counts, as the v2 suite does; the
+returned ``x`` is pinned independently (it re-anchors every cycle).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import cg as cg_mod
+from repro.core.ax import ax_local_fused
+from repro.core.cg_sstep import cg_sstep_fixed_iters, sstep_recurrence
+from repro.core.gs import ds_sum_local
+from repro.core.nekbone import NekboneCase
+from repro.kernels import ops
+
+
+def _continuous_field(rng, case):
+    u = jnp.asarray(rng.normal(size=case.mask.shape), case.dtype)
+    return ds_sum_local(u, case.grid) * case.mask
+
+
+def _apply_a_ref(case, v):
+    """Reference assembled masked operator (the basis ground truth)."""
+    return ds_sum_local(ax_local_fused(v, case.D, case.g), case.grid) \
+        * case.mask
+
+
+def _random_setup(seed):
+    r = np.random.default_rng(seed)
+    grid = tuple(int(v) for v in r.integers(1, 4, size=3))
+    n = int(r.integers(3, 6))
+    divisors = [d for d in range(1, grid[2] + 1) if grid[2] % d == 0]
+    sz = int(r.choice(divisors))
+    s = int(r.choice([1, 2, 3, 4]))
+    return grid, n, sz, s
+
+
+# ---------------------------------------------------------------------------
+# Matrix-powers kernel: basis + Gram vs the reference operator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_powers_basis_matches_operator_chain(rng, x64, seed):
+    grid, n, sz, s = _random_setup(seed)
+    case = NekboneCase(n=n, grid=grid, dtype=jnp.float64)
+    p = _continuous_field(rng, case)
+    r = _continuous_field(rng, case)
+    theta = 2.25          # exact binary: scaling must be exactly invertible
+
+    basis, gram = ops.nekbone_ax_powers(p, r, case.D, case.g, case.grid,
+                                        s=s, theta=theta, sz=sz,
+                                        interpret=True)
+    assert basis.shape == (case.mesh.nelt, 2 * s - 1, n, n, n)
+
+    # reference: the same scaled chain through the assembled operator;
+    # the owned outputs must be *fully* assembled (the halo replaces the
+    # v2 plane side channel — this is the matrix-powers correctness claim)
+    want = []
+    v = p
+    for _ in range(s):
+        v = _apply_a_ref(case, v) / theta
+        want.append(v)
+    v = r
+    for _ in range(s - 1):
+        v = _apply_a_ref(case, v) / theta
+        want.append(v)
+    for m, w_ref in enumerate(want):
+        scale = float(np.abs(np.asarray(w_ref)).max()) + 1e-300
+        np.testing.assert_allclose(
+            np.asarray(basis[:, m]), np.asarray(w_ref), rtol=1e-12,
+            atol=1e-12 * scale,
+            err_msg=f"{grid=} {n=} {sz=} {s=} basis[{m}]")
+
+    # Gram partials: V^T C V over [p, powers, r, r-powers]
+    V = [p] + want[:s] + [r] + want[s:]
+    K = 2 * s + 1
+    G_ref = np.zeros((K, K))
+    c = np.asarray(case.c, np.float64)
+    for a in range(K):
+        for b_ in range(K):
+            G_ref[a, b_] = float(np.sum(np.asarray(V[a], np.float64) * c
+                                        * np.asarray(V[b_], np.float64)))
+    scale = np.abs(G_ref).max()
+    np.testing.assert_allclose(np.asarray(gram), G_ref, rtol=1e-11,
+                               atol=1e-12 * scale)
+
+
+def test_powers_halo_is_invariant_to_slab_split(rng, x64):
+    """sz only changes the block decomposition (and the redundant halo
+    work) — the emitted basis must be identical."""
+    case = NekboneCase(n=4, grid=(2, 2, 4), dtype=jnp.float64)
+    p = _continuous_field(rng, case)
+    r = _continuous_field(rng, case)
+    b1, g1 = ops.nekbone_ax_powers(p, r, case.D, case.g, case.grid, s=3,
+                                   sz=1, interpret=True)
+    b4, g4 = ops.nekbone_ax_powers(p, r, case.D, case.g, case.grid, s=3,
+                                   sz=4, interpret=True)
+    scale = float(np.abs(np.asarray(b4)).max()) + 1e-300
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b4),
+                               rtol=1e-12, atol=1e-13 * scale)
+    gs = np.abs(np.asarray(g4)).max()
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g4),
+                               rtol=1e-12, atol=1e-13 * gs)
+
+
+# ---------------------------------------------------------------------------
+# Multi-axpy update kernel vs the XLA reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("grid,n,sz,s", [((2, 3, 4), 4, 2, 2),
+                                         ((1, 2, 3), 5, 1, 4),
+                                         ((2, 2, 2), 3, 2, 1)])
+def test_sstep_update_vs_xla_reference(rng, x64, grid, n, sz, s):
+    case = NekboneCase(n=n, grid=grid, dtype=jnp.float64)
+    E = case.mesh.nelt
+    shp = (E, n, n, n)
+    x, p, r = (jnp.asarray(rng.normal(size=shp), jnp.float64)
+               for _ in range(3))
+    basis = jnp.asarray(rng.normal(size=(E, 2 * s - 1, n, n, n)),
+                        jnp.float64)
+    K = 2 * s + 1
+    coef = rng.normal(size=(3, K))
+
+    x2, r2, p2, rcr = ops.nekbone_sstep_update(x, p, r, basis, coef,
+                                               grid, s=s, sz=sz,
+                                               interpret=True)
+
+    # reference: V columns in kernel order [p, A'p.., r, A'r..]
+    V = ([np.asarray(p)]
+         + [np.asarray(basis[:, m]) for m in range(s)]
+         + [np.asarray(r)]
+         + [np.asarray(basis[:, s + m]) for m in range(s - 1)])
+    x_ref = np.asarray(x) + sum(coef[0, k] * V[k] for k in range(K))
+    r_ref = sum(coef[1, k] * V[k] for k in range(K))
+    p_ref = sum(coef[2, k] * V[k] for k in range(K))
+    rcr_ref = float(np.sum(r_ref * np.asarray(case.c) * r_ref))
+
+    np.testing.assert_allclose(np.asarray(x2), x_ref, rtol=1e-13,
+                               atol=1e-13)
+    np.testing.assert_allclose(np.asarray(r2), r_ref, rtol=1e-13,
+                               atol=1e-13)
+    np.testing.assert_allclose(np.asarray(p2), p_ref, rtol=1e-13,
+                               atol=1e-13)
+    assert abs(rcr - rcr_ref) <= 1e-11 * max(abs(rcr_ref), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Host recurrence: coefficient algebra in f64
+# ---------------------------------------------------------------------------
+
+def test_recurrence_matches_explicit_cg_on_small_system(rng):
+    """On an explicit SPD matrix the coefficient recurrence reproduces
+    textbook CG exactly (same f64 arithmetic, coefficient coordinates)."""
+    N, s = 12, 4
+    A0 = rng.normal(size=(N, N))
+    A = A0 @ A0.T + N * np.eye(N)
+    b = rng.normal(size=N)
+    theta = float(np.linalg.norm(A, 2))
+
+    # explicit CG, s steps
+    x = np.zeros(N)
+    r = b.copy()
+    p = r.copy()
+    rtz_hist = []
+    for _ in range(s):
+        rtz = r @ r
+        rtz_hist.append(rtz)
+        Ap = A @ p
+        alpha = rtz / (p @ Ap)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        beta = (r @ r) / rtz
+        p = r + beta * p
+
+    # s-step coordinates: V = [p0, A'p0.., r0, A'r0..] with p0 = r0 = b
+    V = [b]
+    v = b
+    for _ in range(s):
+        v = A @ v / theta
+        V.append(v)
+    V += [b]
+    v = b
+    for _ in range(s - 1):
+        v = A @ v / theta
+        V.append(v)
+    Vm = np.stack(V, axis=1)              # (N, 2s+1)
+    G = Vm.T @ Vm                         # C = I
+    e_c, b_c, a_c, hist = sstep_recurrence(G, s, s, theta)
+    np.testing.assert_allclose(hist, rtz_hist, rtol=1e-10)
+    np.testing.assert_allclose(Vm @ e_c, x, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(Vm @ b_c, r, rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(Vm @ a_c, p, rtol=1e-8, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# Solver parity: s-step CG vs cg_fixed_iters, fp64 interpret mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,grid,niter,s", [
+    (4, (2, 2, 2), 10, 1),
+    (4, (2, 2, 4), 10, 2),
+    (5, (2, 3, 2), 8, 4),
+    (10, (2, 2, 4), 5, 4),  # the paper's degree, scaled; partial cycle
+])
+def test_cg_sstep_matches_fixed_iters_fp64(x64, n, grid, niter, s):
+    case = NekboneCase(n=n, grid=grid, dtype=jnp.float64)
+    _, f = case.manufactured()
+
+    ref = cg_mod.cg_fixed_iters(case.ax_full, f, niter=niter,
+                                dot=case.dot())
+    got = cg_sstep_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                               niter=niter, s=s, mask=case.mask, c=case.c,
+                               interpret=True)
+    h_ref = np.asarray(ref.rnorm_history)
+    h = np.asarray(got.rnorm_history)
+    assert h.shape == h_ref.shape
+    # fp64 round-off through the Gram quadratic forms; pre-asymptotic
+    # iteration counts keep the in-cycle cancellation floor (module
+    # docstring) below this budget.
+    np.testing.assert_allclose(h, h_ref, rtol=1e-9, atol=1e-11 * h_ref[0])
+    xs = np.abs(np.asarray(ref.x)).max() + 1e-300
+    np.testing.assert_allclose(np.asarray(got.x), np.asarray(ref.x),
+                               atol=1e-10 * xs)
+
+
+def test_cg_sstep_s1_matches_v2_trajectory(x64):
+    """s=1 is the degeneracy point: same per-iteration algebra as the v2
+    pipeline (and the same 13-stream budget, pinned in test_cost_model)."""
+    from repro.core.cg_fused import cg_fused_v2_fixed_iters
+
+    case = NekboneCase(n=4, grid=(2, 2, 4), dtype=jnp.float64)
+    _, f = case.manufactured()
+    v2 = cg_fused_v2_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                                 niter=8, interpret=True)
+    v3 = cg_sstep_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                              niter=8, s=1, interpret=True)
+    h2 = np.asarray(v2.rnorm_history)
+    np.testing.assert_allclose(np.asarray(v3.rnorm_history), h2,
+                               rtol=1e-10, atol=1e-12 * h2[0])
+
+
+def test_cg_sstep_remainder_cycle(x64):
+    """niter not divisible by s: the final cycle advances niter % s steps."""
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.float64)
+    _, f = case.manufactured()
+    ref = cg_mod.cg_fixed_iters(case.ax_full, f, niter=7, dot=case.dot())
+    got = cg_sstep_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                               niter=7, s=4, interpret=True)
+    assert got.rnorm_history.shape == (8,)
+    assert int(got.iters) == 7
+    h_ref = np.asarray(ref.rnorm_history)
+    np.testing.assert_allclose(np.asarray(got.rnorm_history), h_ref,
+                               rtol=1e-9, atol=1e-11 * h_ref[0])
+
+
+def test_cg_sstep_invariant_to_slab_split(x64):
+    case = NekboneCase(n=4, grid=(2, 2, 4), dtype=jnp.float64)
+    _, f = case.manufactured()
+    h = [np.asarray(cg_sstep_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=6, s=2, sz=sz,
+        interpret=True).rnorm_history) for sz in (1, 2, 4)]
+    np.testing.assert_allclose(h[1], h[0], rtol=1e-11, atol=1e-13 * h[0][0])
+    np.testing.assert_allclose(h[2], h[0], rtol=1e-11, atol=1e-13 * h[0][0])
+
+
+# ---------------------------------------------------------------------------
+# Case dispatch + precision policies
+# ---------------------------------------------------------------------------
+
+def test_cg_sstep_through_case_fp32():
+    fused_case = NekboneCase(n=6, grid=(2, 2, 2), dtype=jnp.float32,
+                             ax_impl="pallas_sstep_v3", s=4)
+    res, u_ex = fused_case.solve_manufactured(niter=40)
+    assert int(res.iters) == 40
+    hist = np.asarray(res.rnorm_history, np.float64)
+    assert np.isfinite(hist).all()
+    assert hist[-1] < hist[0] * 1e-3, "s-step CG must actually converge"
+
+    xla_case = NekboneCase(n=6, grid=(2, 2, 2), dtype=jnp.float32,
+                           ax_impl="fused")
+    ref, _ = xla_case.solve_manufactured(niter=40)
+    h_ref = np.asarray(ref.rnorm_history, np.float64)
+    # early history must track the XLA path tightly; the trajectories fork
+    # sooner than v2's do — f32-stored monomial powers amplify round-off
+    # by kappa^{s} within a cycle (DESIGN.md §8's stability budget), which
+    # is round-off *noise*, not divergence: convergence above and the
+    # solution floor below pin the asymptote.
+    np.testing.assert_allclose(hist[:12], h_ref[:12], rtol=5e-3)
+    err_f = float(fused_case.solution_error(res.x, u_ex))
+    err_x = float(xla_case.solution_error(ref.x, u_ex))
+    assert err_f <= max(10.0 * err_x, 2e-5)
+
+
+def test_cg_sstep_bf16_runs_and_converges():
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.bfloat16,
+                       ax_impl="pallas_sstep_v3", s=2)
+    res, _ = case.solve_manufactured(niter=6)
+    assert res.x.dtype == jnp.bfloat16
+    hist = np.asarray(res.rnorm_history, np.float32)
+    assert np.isfinite(hist).all()
+    assert hist[-1] < hist[0]
+
+
+def test_cg_sstep_precision_policy_dtypes():
+    """bf16 policy: storage-width basis/vectors, f32 Gram partials, and
+    the x carry in the policy's x-storage dtype."""
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.float32)
+    _, f = case.manufactured()
+    res = cg_sstep_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                               niter=4, s=2, interpret=True,
+                               precision="bf16")
+    assert res.x.dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(res.rnorm_history, np.float32)).all()
+
+
+def test_cg_sstep_ir_composition():
+    """cg_ir_fixed_iters(variant='sstep'): s-step sweeps inside iterative
+    refinement — outer residuals must compound downward."""
+    from repro.core.cg_fused import cg_ir_fixed_iters
+
+    case = NekboneCase(n=4, grid=(2, 2, 4), dtype=jnp.float32)
+    _, f = case.manufactured()
+    ir = cg_ir_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                           niter=10, precision="bf16_ir", outer_iters=2,
+                           variant="sstep", s=2, interpret=True)
+    h = np.asarray(ir.rnorm_history, np.float64)
+    assert h.shape == (3,)
+    assert h[-1] < h[0] * 1e-1
+
+
+def test_cg_sstep_rejects_bad_inputs():
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.float32)
+    _, f = case.manufactured()
+    with pytest.raises(ValueError, match="s >= 1"):
+        cg_sstep_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                             niter=2, s=0, interpret=True)
+    bad_mask = case.mask.at[0, 1, 1, 1].set(0.0)
+    with pytest.raises(ValueError, match="structured box mask"):
+        cg_sstep_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                             niter=2, s=2, mask=bad_mask, interpret=True)
+
+
+def test_cg_sstep_tol_and_precond_fall_back():
+    """tol-driven and preconditioned solves route to the generic CG."""
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.float32,
+                       ax_impl="pallas_sstep_v3")
+    res, _ = case.solve_manufactured(tol=1e-4, max_iter=100)
+    assert int(res.iters) < 100
+    res_pc, _ = case.solve_manufactured(niter=10, precond=True)
+    assert res_pc.rnorm_history.shape == (11,)

@@ -16,8 +16,10 @@ BASELINE = (pathlib.Path(__file__).parent.parent / "benchmarks" /
 
 def _payload(**overrides):
     base = {
-        "schema": "repro-bench/2",
-        "streams_per_iter": {"eq2": 30, "fused_v1": 17, "fused_v2": 13},
+        "schema": "repro-bench/3",
+        "schema_version": 3,
+        "streams_per_iter": {"eq2": 30, "fused_v1": 17, "fused_v2": 13,
+                             "sstep_v3": 6.25, "sstep_v3_s1": 13.0},
         "bytes_per_dof_iter": bench_run._precision_table(),
         "sections": [],
     }
@@ -84,6 +86,79 @@ def test_bf16_half_of_f32_invariant():
     fresh["bytes_per_dof_iter"]["fused_v2"]["bf16"]["read"] = 40
     problems = compare(fresh, _payload(), tol=0.05)
     assert any("half" in p for p in problems)
+
+
+# ---------------------------------------------------------------------------
+# forward compatibility: rows *added* by a PR warn instead of failing
+# (missing/regressed rows still fail — tested above)
+# ---------------------------------------------------------------------------
+
+def test_added_stream_rung_warns_not_fails():
+    fresh = _payload()
+    fresh["streams_per_iter"]["sstep_v4"] = 5.0
+    warnings = []
+    assert compare(fresh, _payload(), warnings=warnings) == []
+    assert any("sstep_v4" in w and "not in baseline" in w for w in warnings)
+
+
+def test_added_bytes_pipeline_warns_not_fails():
+    fresh = _payload()
+    fresh["bytes_per_dof_iter"]["sstep_v4"] = {
+        "f32": {"read": 10, "write": 5}}
+    warnings = []
+    assert compare(fresh, _payload(), warnings=warnings) == []
+    assert any("sstep_v4" in w for w in warnings)
+
+
+def test_added_policy_and_column_warn_not_fail():
+    """A new policy under an existing pipeline, or a new numeric column
+    under an existing policy, surfaces as a warning (never silent, never
+    failing)."""
+    fresh = _payload()
+    fresh["bytes_per_dof_iter"]["fused_v2"]["fp8"] = {"read": 9, "write": 4}
+    fresh["bytes_per_dof_iter"]["fused_v2"]["f32"]["read_padded"] = 40
+    warnings = []
+    assert compare(fresh, _payload(), warnings=warnings) == []
+    assert any("fused_v2/fp8" in w for w in warnings)
+    assert any("read_padded" in w for w in warnings)
+
+
+def test_schema_version_skew_warns_not_fails():
+    old_base = _payload(schema_version=2)
+    warnings = []
+    assert compare(_payload(), old_base, warnings=warnings) == []
+    assert any("schema_version" in w for w in warnings)
+
+
+def test_added_rows_warn_in_main_but_exit_zero(tmp_path, capsys):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_payload()))
+    fresh_payload = _payload()
+    fresh_payload["streams_per_iter"]["sstep_v4"] = 5.0
+    fresh = tmp_path / "BENCH_fresh.json"
+    fresh.write_text(json.dumps(fresh_payload))
+    assert main([str(fresh), "--baseline", str(base)]) == 0
+    assert "WARNING" in capsys.readouterr().err
+
+
+def test_exact_column_pinned_when_baseline_has_it():
+    """A baseline that holds the *_exact side-channel books makes them
+    load-bearing: drifting only the exact column must fail."""
+    fresh = _payload()
+    fresh["bytes_per_dof_iter"]["fused_v2"]["f32"]["read_exact"] *= 1.5
+    problems = compare(fresh, _payload(), tol=0.05)
+    assert any("read_exact" in p for p in problems)
+
+
+def test_sstep_s1_rung_equals_v2_in_committed_baseline():
+    """The committed baseline pins the s=1 == v2 degeneracy identity, and
+    it agrees with the live cost model — the gate holds it across PRs."""
+    from repro.core import cost
+
+    data = load_bench_json(BASELINE, "baseline")
+    streams = data["streams_per_iter"]
+    assert streams["sstep_v3_s1"] == streams["fused_v2"]
+    assert sum(cost.sstep_streams(1)) == streams["fused_v2"]
 
 
 # ---------------------------------------------------------------------------

@@ -63,3 +63,92 @@ def test_hlo_flops_match_cost_model():
 
 def test_ax_local_flops_formula():
     assert ax_local_flops(1, 10) == 1000 * (120 + 17)
+
+
+# ---------------------------------------------------------------------------
+# v3 s-step stream accounting (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def test_sstep_s1_degenerates_to_v2():
+    """4s+9 at s=1 is exactly the v2 budget — reads and writes separately,
+    not just the total (the ISSUE's degeneracy acceptance)."""
+    from repro.core.cost import (FUSED_V2_READ_STREAMS,
+                                 FUSED_V2_WRITE_STREAMS, sstep_streams)
+
+    r, w = sstep_streams(1)
+    assert (r, w) == (FUSED_V2_READ_STREAMS, FUSED_V2_WRITE_STREAMS)
+
+
+def test_sstep_cycle_budget():
+    """Per cycle: powers kernel 5R + (2s-1)W, update (2s+2)R + 3W."""
+    from repro.core.cost import sstep_cycle_streams, sstep_streams
+
+    for s in (1, 2, 3, 4, 8):
+        r, w = sstep_cycle_streams(s)
+        assert (r, w) == (2 * s + 7, 2 * s + 2)
+        ri, wi = sstep_streams(s)
+        assert abs(ri - r / s) < 1e-12 and abs(wi - w / s) < 1e-12
+
+
+def test_sstep_effective_streams_meets_target():
+    """The acceptance number: <= 9 effective streams/iter at (s, sz) =
+    (4, 4), halo side channel included; strictly below v2's 13."""
+    from repro.core.cost import sstep_effective_streams, sstep_streams
+
+    eff = sstep_effective_streams(4, 4)
+    assert eff <= 9.0, eff
+    assert sum(sstep_streams(4)) == 25 / 4
+    # monotone in s at fixed sz: amortization only improves
+    assert (sstep_effective_streams(4, 4) < sstep_effective_streams(2, 4)
+            < sstep_effective_streams(1, 4))
+
+
+def test_sstep_halo_streams_scaling():
+    """Halo = 10/sz stream-equivalents per iteration (5 fields, 2s ghost
+    slabs per block, amortized over s iterations — independent of s)."""
+    from repro.core.cost import sstep_halo_streams
+
+    assert abs(sstep_halo_streams(4, 4) - 2.5) < 1e-12
+    assert abs(sstep_halo_streams(2, 8) - 1.25) < 1e-12
+    assert sstep_halo_streams(2, 4) == sstep_halo_streams(8, 4)
+
+
+def test_bytes_per_dof_iter_exact_mode():
+    """exact=True folds in the side channels: v2 boundary planes (split
+    evenly read/write), v3 halo (reads only); eq2/v1 are unchanged."""
+    from repro.core.cost import (bytes_per_dof_iter, fused_v2_plane_streams,
+                                 sstep_halo_streams)
+
+    for pipeline in ("eq2", "fused_v1"):
+        assert (bytes_per_dof_iter(pipeline, "f32", exact=True)
+                == bytes_per_dof_iter(pipeline, "f32"))
+    rb, wb = bytes_per_dof_iter("fused_v2", "f32")
+    re_, we = bytes_per_dof_iter("fused_v2", "f32", exact=True, n=10, sz=4)
+    half = fused_v2_plane_streams(10, 4) / 2 * 4
+    assert abs(re_ - rb - half) < 1e-9 and abs(we - wb - half) < 1e-9
+    rb, wb = bytes_per_dof_iter("sstep_v3", "f32")
+    re_, we = bytes_per_dof_iter("sstep_v3", "f32", exact=True, sz=4)
+    assert abs(re_ - rb - sstep_halo_streams(4, 4) * 4) < 1e-9
+    assert we == wb
+
+
+def test_sstep_bytes_strictly_below_v2_for_s_above_1():
+    """The s-sweep acceptance: fewer bytes/DOF/iter than v2 at equal
+    precision for every s > 1 (headline and exact books alike)."""
+    from repro.core.cost import bytes_per_dof_iter
+
+    for pol in ("f64", "f32", "bf16"):
+        v2 = sum(bytes_per_dof_iter("fused_v2", pol))
+        v2x = sum(bytes_per_dof_iter("fused_v2", pol, exact=True))
+        for s in (2, 4, 8):
+            assert sum(bytes_per_dof_iter("sstep_v3", pol, s=s)) < v2
+            assert sum(bytes_per_dof_iter("sstep_v3", pol, s=s,
+                                          exact=True)) < v2x
+        assert sum(bytes_per_dof_iter("sstep_v3", pol, s=1)) == v2
+
+
+def test_sstep_intensity_scales():
+    from repro.core.cost import fused_v2_intensity, sstep_intensity
+
+    assert abs(sstep_intensity(10, 1) - fused_v2_intensity(10)) < 1e-12
+    assert sstep_intensity(10, 4) > 2 * fused_v2_intensity(10) * 0.95
