@@ -116,6 +116,20 @@ def run():
             rows.append((f"cg_sstep_v3_s{s}_iter_e{E}",
                          _time_cg_sstep(E, s) * 1e6,
                          _sstep_derived(s)))
+        # preconditioned rungs (DESIGN.md §9): one fused PCG iteration
+        # through the v2 pipeline — Jacobi carries the preconditioned
+        # residual (+1 stream), Chebyshev adds the halo'd polynomial-apply
+        # kernel (+5 streams, the win booked in iteration count).
+        rows.append((f"pcg_jacobi_iter_e{E}",
+                     _time_pcg(E, "jacobi") * 1e6, _pcg_derived("jacobi")))
+        rows.append((f"pcg_cheb4_iter_e{E}",
+                     _time_pcg(E, "cheb4") * 1e6, _pcg_derived("cheb")))
+    # iterations-to-tolerance (the PCG headline, DESIGN.md §9.4): solved
+    # once at the sweep's smallest point — the derived column carries the
+    # iteration counts of the plain / Jacobi / Chebyshev(4) tolerance-
+    # driven fused solves, the quantity the stream surcharge buys down.
+    rows.append((f"pcg_iters_tol_e{ELEMENT_SWEEP[0]}", 0.0,
+                 _pcg_iters_derived(ELEMENT_SWEEP[0])))
     return rows
 
 
@@ -149,6 +163,69 @@ def _sstep_derived(s: int) -> str:
     v2 = sum(bytes_per_dof_iter("fused_v2", "f32"))
     return (f"B/dof/iter_{v3:g}v{v2}={v3 / v2:.2f}x"
             f";streams_eff={sstep_effective_streams(s, 4):.2f};s={s}")
+
+
+def _pcg_derived(kind: str) -> str:
+    from repro.core.cost import (CHEB_DEFAULT_K, bytes_per_dof_iter,
+                                 cheb_effective_streams)
+
+    pipeline = "fused_v2_jacobi" if kind == "jacobi" else "fused_v2_cheb"
+    pcg = sum(bytes_per_dof_iter(pipeline, "f32"))
+    v2 = sum(bytes_per_dof_iter("fused_v2", "f32"))
+    extra = (f";eff={cheb_effective_streams(CHEB_DEFAULT_K, 4):.2f}"
+             if kind != "jacobi" else "")
+    return f"B/dof/iter_{pcg:g}v{v2:g}={pcg / v2:.2f}x{extra}"
+
+
+def _pcg_case(E: int):
+    from repro.configs.nekbone import PAPER_CASES
+    from repro.core.nekbone import NekboneCase
+
+    grid = (PAPER_CASES[E].grid if E in PAPER_CASES else (2, 2, E // 4))
+    case = NekboneCase(n=N_GLL, grid=grid, dtype=jnp.float32)
+    _, f = case.manufactured()
+    return case, f
+
+
+def _time_pcg(E: int, name: str) -> float:
+    """One fused PCG iteration (v2 pipeline + preconditioner), timed like
+    the other fused rows.  The preconditioner setup (diagonal / Lanczos
+    interval) is a one-time per-case cost and stays outside the timed
+    region."""
+    from repro.core.precond import pcg_fused_v2_fixed_iters
+
+    case, f = _pcg_case(E)
+    spec = case.precond_spec(name)
+
+    def one_iter():
+        return pcg_fused_v2_fixed_iters(f, D=case.D, g=case.g,
+                                        grid=case.grid, niter=1,
+                                        precond=spec, mask=case.mask,
+                                        c=case.c)
+
+    jax.block_until_ready(one_iter().x)       # compile / warm
+    t0 = time.perf_counter()
+    res = one_iter()
+    jax.block_until_ready(res.x)
+    return time.perf_counter() - t0
+
+
+def _pcg_iters_derived(E: int) -> str:
+    """Tolerance-driven iteration counts: plain vs Jacobi vs Chebyshev."""
+    from repro.core.precond import cg_fused_tol
+
+    case, f = _pcg_case(E)
+    r0 = float(jnp.sqrt(jnp.abs(jnp.sum(f * case.c * f))))
+    tol = 1e-6 * r0
+    counts = {}
+    for name in (None, "jacobi", "cheb4"):
+        spec = case.precond_spec(name) if name else None
+        res = cg_fused_tol(f, D=case.D, g=case.g, grid=case.grid, tol=tol,
+                           max_iter=500, precond=spec, mask=case.mask,
+                           c=case.c)
+        counts[name or "plain"] = int(res.iters)
+    return (f"iters@rtol1e-6:plain={counts['plain']}"
+            f";jacobi={counts['jacobi']};cheb4={counts['cheb4']}")
 
 
 def _time_cg_sstep(E: int, s: int) -> float:

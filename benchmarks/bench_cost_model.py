@@ -20,15 +20,19 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost import (FUSED_CG_READ_STREAMS, FUSED_CG_WRITE_STREAMS,
-                             FUSED_V2_READ_STREAMS, FUSED_V2_WRITE_STREAMS,
-                             SSTEP_DEFAULT_S, bytes_per_dof_iter,
-                             cg_iter_bytes, fused_cg_iter_bytes,
-                             fused_intensity, fused_v2_cg_iter_bytes,
-                             fused_v2_intensity, fused_v2_plane_streams,
-                             intensity, ir_overhead_streams,
-                             pipeline_intensity, sstep_effective_streams,
-                             sstep_intensity, sstep_streams)
+from repro.core.cost import (CHEB_DEFAULT_K, CHEB_V2_READ_STREAMS,
+                             CHEB_V2_WRITE_STREAMS, FUSED_CG_READ_STREAMS,
+                             FUSED_CG_WRITE_STREAMS, FUSED_V2_READ_STREAMS,
+                             FUSED_V2_WRITE_STREAMS, JACOBI_V2_READ_STREAMS,
+                             JACOBI_V2_WRITE_STREAMS, SSTEP_DEFAULT_S,
+                             bytes_per_dof_iter, cg_iter_bytes,
+                             cheb_effective_streams, cheb_flops_per_dof,
+                             fused_cg_iter_bytes, fused_intensity,
+                             fused_v2_cg_iter_bytes, fused_v2_intensity,
+                             fused_v2_plane_streams, intensity,
+                             ir_overhead_streams, pipeline_intensity,
+                             sstep_effective_streams, sstep_intensity,
+                             sstep_streams)
 from repro.core.nekbone import NekboneCase
 from repro.launch.hlo_analysis import analyze_hlo
 
@@ -142,6 +146,37 @@ def run():
         # the default 12-iteration bf16 inner sweeps, in bf16-stream units.
         rows.append((f"v2_bf16_ir_overhead_n{n}", 0.0,
                      f"+{ir_overhead_streams(12):.2f}str@inner12"))
+
+        # --- preconditioned rungs (DESIGN.md §9) --------------------------
+        # Jacobi: the z-carried PCG pipeline adds exactly one stream to v2
+        # (the fused operator diagonal).  Chebyshev(k): +5 streams for the
+        # halo'd polynomial-apply kernel, k-independent headline; the halo
+        # side channel (8k/sz) and the extra model flops are reported so
+        # the bytes-to-solution trade is auditable.
+        jac = JACOBI_V2_READ_STREAMS + JACOBI_V2_WRITE_STREAMS
+        rows.append((f"eq2_pcg_jacobi_streams_n{n}", 0.0,
+                     f"streams/iter={jac}"
+                     f";+v2={jac - v2_streams}"
+                     f";B/dof/iter_f32="
+                     f"{sum(bytes_per_dof_iter('fused_v2_jacobi', 'f32')):g}"))
+        chv = CHEB_V2_READ_STREAMS + CHEB_V2_WRITE_STREAMS
+        for k_ in (1, 2, CHEB_DEFAULT_K):
+            rows.append((f"eq2_pcg_cheb_k{k_}_streams_n{n}", 0.0,
+                         f"streams/iter={chv}"
+                         f";eff={cheb_effective_streams(k_, 4):.2f}"
+                         f";flops/dof={cheb_flops_per_dof(n, k_)}"
+                         f";k={k_}"))
+        for pol in ("f64", "f32", "bf16"):
+            rb, wb = bytes_per_dof_iter("fused_v2_jacobi", pol)
+            re_, we = bytes_per_dof_iter("fused_v2_jacobi", pol, exact=True,
+                                         n=n)
+            rows.append((f"pcg_jacobi_bytes_{pol}_n{n}", 0.0,
+                         f"B/dof/iter={rb + wb:g};exact={re_ + we:.2f}"))
+            rb, wb = bytes_per_dof_iter("fused_v2_cheb", pol)
+            re_, we = bytes_per_dof_iter("fused_v2_cheb", pol, exact=True,
+                                         n=n)
+            rows.append((f"pcg_cheb_bytes_{pol}_n{n}", 0.0,
+                         f"B/dof/iter={rb + wb:g};exact={re_ + we:.2f}"))
     return rows
 
 

@@ -1,0 +1,119 @@
+"""CI smoke for the preconditioning subsystem: interpret-mode PCG parity.
+
+  JAX_ENABLE_X64=1 PYTHONPATH=src python -m benchmarks.pcg_smoke
+
+Runs the fused v2 PCG pipelines (core/precond.py, DESIGN.md §9) on a
+small paper-shaped case and asserts fp64 parity against the reference
+``cg_fixed_iters(precond=M)`` solvers — Jacobi, and Chebyshev for
+k in {1, 2, 4} (both sides sharing one Lanczos interval, so the
+comparison isolates the kernels).  A final row checks the
+tolerance-driven driver's prefix property against the fixed-iteration
+trajectory.  Exits non-zero (naming the offending configuration) on any
+parity miss; prints one CSV-ish row per configuration so the log doubles
+as an iteration-advantage record.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+# interpret-mode parity floor: fp64 round-off through the different
+# partial-sum associations and the z-carried Jacobi form (DESIGN.md §9.2),
+# same budget as tests/test_precond.py.
+RTOL = 1e-9
+N, GRID, NITER = 5, (2, 2, 4), 10
+K_SWEEP = (1, 2, 4)
+
+
+def main() -> int:
+    from repro.core import cg as cg_mod
+    from repro.core import precond as pc
+    from repro.core.nekbone import NekboneCase
+
+    case = NekboneCase(n=N, grid=GRID, dtype=jnp.float64)
+    _, f = case.manufactured()
+
+    failures = 0
+
+    def check(label, ref, fused):
+        nonlocal failures
+        h_ref = np.asarray(ref.rnorm_history)
+        h_fus = np.asarray(fused.rnorm_history)
+        hist_rel = float(np.abs(h_fus - h_ref).max() / h_ref[0])
+        x_scale = np.abs(np.asarray(ref.x)).max() + 1e-300
+        x_rel = float(np.abs(np.asarray(fused.x)
+                             - np.asarray(ref.x)).max() / x_scale)
+        ok = hist_rel < RTOL and x_rel < RTOL
+        failures += not ok
+        drop = float(h_fus[-1] / h_fus[0])
+        print(f"pcg_smoke_{label},0.0,hist_rel={hist_rel:.2e}"
+              f";x_rel={x_rel:.2e};rnorm_drop={drop:.2e}"
+              f";{'OK' if ok else 'FAIL'}")
+        if not ok:
+            print(f"ERROR: {label} parity vs cg_fixed_iters exceeded "
+                  f"{RTOL:g} (hist {hist_rel:.2e}, x {x_rel:.2e})",
+                  file=sys.stderr)
+
+    # --- Jacobi ---------------------------------------------------------
+    diag = case.operator_diagonal()
+    ref = cg_mod.cg_fixed_iters(
+        case.ax_full, f, niter=NITER, dot=case.dot(),
+        precond=cg_mod.jacobi_preconditioner(diag))
+    fused = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=NITER,
+        precond=pc.JacobiPrecond(invdiag=1.0 / diag), mask=case.mask,
+        c=case.c, interpret=True)
+    check("jacobi", ref, fused)
+
+    # --- Chebyshev, shared Lanczos interval -----------------------------
+    lmin, lmax = pc.estimate_interval(case.D, case.g, case.grid, case.mask,
+                                      case.c)
+    for k in K_SWEEP:
+        ref = cg_mod.cg_fixed_iters(
+            case.ax_full, f, niter=NITER, dot=case.dot(),
+            precond=pc.chebyshev_preconditioner(case.ax_full, k, lmin,
+                                                lmax))
+        fused = pc.pcg_fused_v2_fixed_iters(
+            f, D=case.D, g=case.g, grid=case.grid, niter=NITER,
+            precond=pc.ChebyshevPrecond(k=k, lmin=lmin, lmax=lmax),
+            mask=case.mask, c=case.c, interpret=True)
+        check(f"cheb_k{k}", ref, fused)
+
+    # --- tolerance-driven prefix (unpreconditioned) ---------------------
+    from repro.core.cg_fused import cg_fused_v2_fixed_iters
+
+    fixed = cg_fused_v2_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                                    niter=NITER, mask=case.mask, c=case.c,
+                                    interpret=True)
+    h_fix = np.asarray(fixed.rnorm_history)
+    # the stiff SEM residual norm can *rise* before it falls (DESIGN.md
+    # §7), so target the second-to-last entry: the first crossing sits
+    # strictly inside (0, NITER) — a genuine early exit.
+    tol = float(h_fix[-2]) * (1.0 + 1e-12)
+    told = pc.cg_fused_tol(f, D=case.D, g=case.g, grid=case.grid, tol=tol,
+                           max_iter=NITER, mask=case.mask, c=case.c,
+                           interpret=True)
+    it = int(told.iters)
+    h_tol = np.asarray(told.rnorm_history)
+    prefix = float(np.abs(h_tol[:it + 1] - h_fix[:it + 1]).max()
+                   / h_fix[0])
+    padded = bool(np.isnan(h_tol[it + 1:]).all())
+    ok = 0 < it < NITER and prefix < RTOL and padded \
+        and float(h_tol[it]) <= tol
+    failures += not ok
+    print(f"pcg_smoke_tol_prefix,0.0,iters={it};prefix_rel={prefix:.2e}"
+          f";nan_padded={padded};{'OK' if ok else 'FAIL'}")
+    if not ok:
+        print(f"ERROR: tol-driven prefix check failed (iters {it}, "
+              f"prefix {prefix:.2e}, padded {padded})", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

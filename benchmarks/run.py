@@ -109,17 +109,20 @@ def main() -> None:
                          "rows": rows})
 
     payload = {
-        "schema": "repro-bench/3",
+        "schema": "repro-bench/4",
         # monotone int for forward-compat decisions (check_regression.py
         # warns on version skew instead of failing on unknown tables).
-        "schema_version": 3,
+        "schema_version": 4,
         "tag": os.environ.get("REPRO_BENCH_TAG", "local"),
         "quick": bool(os.environ.get("REPRO_BENCH_QUICK")),
         # the Eq.-2 fusion ladder this repo climbs (reads+writes per DOF
         # per CG iteration) — the cross-PR perf-trajectory headline.  The
         # s-step rung is amortized per iteration (4s+9 streams per s
         # iterations, DESIGN.md §8); its s=1 point must stay exactly the
-        # v2 number — the gate holds that identity across PRs.
+        # v2 number — the gate holds that identity across PRs.  The PCG
+        # rungs (DESIGN.md §9) are per-iteration too: Jacobi is v2 + 1
+        # (the fused diagonal stream), Chebyshev is v2 + 5 (the polynomial
+        # apply kernel) with the win booked in iteration count, not here.
         "streams_per_iter": {
             "eq2": cost.CG_READ_STREAMS + cost.CG_WRITE_STREAMS,
             "fused_v1": (cost.FUSED_CG_READ_STREAMS
@@ -128,6 +131,10 @@ def main() -> None:
                          + cost.FUSED_V2_WRITE_STREAMS),
             "sstep_v3": sum(cost.sstep_streams(cost.SSTEP_DEFAULT_S)),
             "sstep_v3_s1": sum(cost.sstep_streams(1)),
+            "fused_v2_jacobi": (cost.JACOBI_V2_READ_STREAMS
+                                + cost.JACOBI_V2_WRITE_STREAMS),
+            "fused_v2_cheb": (cost.CHEB_V2_READ_STREAMS
+                              + cost.CHEB_V2_WRITE_STREAMS),
         },
         # the second axis of the ladder (DESIGN.md §7): bytes each stream
         # carries under each precision policy, per DOF per iteration.

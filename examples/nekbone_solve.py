@@ -103,11 +103,42 @@ def main():
               f"(eff {sstep_effective_streams(s, 4):5.2f}), history drift "
               f"vs XLA CG over 8 iters: {drift:.2e}")
 
-    print("\n== beyond-paper: Jacobi preconditioning ==")
+    print("\n== beyond-paper: preconditioning + solve-to-tolerance "
+          "(DESIGN.md §9) ==")
+    # The precond subsystem (core/precond.py) is wired through the config:
+    # NekboneConfig(precond=...) -> make_case() -> case.solve(tol=...).
+    # On the v2 fused pipeline the Jacobi apply is fused into the update
+    # kernel (14 streams/iter, one more than plain v2) and the Chebyshev
+    # polynomial evaluates in one halo'd slab residency per iteration (18
+    # streams/iter); tolerance-driven solves run the same bodies under a
+    # while_loop, so each trajectory prefixes its fixed-iteration twin.
+    from repro.configs.nekbone import NekboneConfig
+    from repro.core.cost import (CHEB_V2_READ_STREAMS,
+                                 CHEB_V2_WRITE_STREAMS,
+                                 JACOBI_V2_READ_STREAMS,
+                                 JACOBI_V2_WRITE_STREAMS,
+                                 cheb_effective_streams)
+
+    pcg_cfg = NekboneConfig(name="pcg-demo", n=6, grid=(2, 2, 4),
+                            dtype="float32", ax_impl="pallas_fused_cg_v2")
+    for pc_name in (None, "jacobi", "cheb"):
+        pcase = pcg_cfg.make_case(precond=pc_name)
+        r, _ = pcase.solve_manufactured(tol=1e-5, max_iter=300)
+        streams = {"jacobi": JACOBI_V2_READ_STREAMS
+                   + JACOBI_V2_WRITE_STREAMS,
+                   "cheb": CHEB_V2_READ_STREAMS
+                   + CHEB_V2_WRITE_STREAMS}.get(
+                       pc_name, FUSED_V2_READ_STREAMS
+                       + FUSED_V2_WRITE_STREAMS)
+        eff = (f" (eff {cheb_effective_streams(pcase.cheb_k, 4):.1f} "
+               "w/ halo)" if pc_name == "cheb" else "")
+        print(f"  {pc_name or 'plain':>6}: {int(r.iters):3d} iters to "
+              f"tol @ {streams} streams/iter{eff}")
+    # the pre-subsystem spelling still works on any ax_impl:
     r_plain, _ = case.solve_manufactured(tol=1e-6, max_iter=500)
     r_pc, _ = case.solve_manufactured(tol=1e-6, max_iter=500, precond=True)
-    print(f"iterations to 1e-6: plain={int(r_plain.iters)} "
-          f"jacobi={int(r_pc.iters)}")
+    print(f"  reference path, iterations to 1e-6: "
+          f"plain={int(r_plain.iters)} jacobi={int(r_pc.iters)}")
 
     print("\n== beyond-paper: mixed-precision fused CG (DESIGN.md §7) ==")
     # bf16 storage halves every stream of the 13-stream v2 pipeline; the

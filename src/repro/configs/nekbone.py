@@ -31,6 +31,15 @@ class NekboneConfig:
     # budget exactly; s=4 is the tuned default (6.25 streams/iter, <= 9
     # effective with the halo side channel).  Ignored by other ax_impls.
     s: int = 4
+    # Preconditioner (DESIGN.md §9, core/precond.py): None (the paper's
+    # unpreconditioned protocol), "jacobi" (diagonal — fused into the v2
+    # pipeline at 14 streams/iter), or "cheb" (Chebyshev polynomial of
+    # order ``cheb_k`` — 18 streams/iter, condition-number-driven
+    # iteration reduction).  The v2 fused pipeline dispatches to the
+    # fused PCG drivers; every other ax_impl applies the reference (XLA)
+    # preconditioner through core/cg.py.
+    precond: str | None = None
+    cheb_k: int = 4
 
     @property
     def nelt(self) -> int:
@@ -48,7 +57,8 @@ class NekboneConfig:
 
         kwargs = dict(n=self.n, grid=self.grid,
                       dtype=jnp_dtype(self.dtype), ax_impl=self.ax_impl,
-                      precision=self.precision, s=self.s)
+                      precision=self.precision, s=self.s,
+                      precond=self.precond, cheb_k=self.cheb_k)
         kwargs.update(overrides)
         return NekboneCase(**kwargs)
 
@@ -76,10 +86,13 @@ PAPER_CASES = {
 }
 
 
-def paper_case(nelt: int = 1024,
-               precision: str | None = None) -> NekboneConfig:
-    """A paper-grid case, optionally re-priced under a precision policy."""
+def paper_case(nelt: int = 1024, precision: str | None = None,
+               precond: str | None = None) -> NekboneConfig:
+    """A paper-grid case, optionally re-priced under a precision policy
+    and/or preconditioned (DESIGN.md §9 — the beyond-paper PCG workload)."""
     cfg = PAPER_CASES[nelt]
     if precision != cfg.precision:
         cfg = dataclasses.replace(cfg, precision=precision)
+    if precond != cfg.precond:
+        cfg = dataclasses.replace(cfg, precond=precond)
     return cfg

@@ -210,6 +210,37 @@ def _check_box_fields(grid, n, mask, c) -> None:
                 "(per-axis factorizable); supplied field differs")
 
 
+def _v2_iter(x2, r2, p2, rtz, beta, *, D, Dt, g3, mx, my, mz, cx, cy, cz,
+             zero_plane, n: int, grid: tuple[int, int, int], sz: int,
+             interpret: bool, acc_name: str):
+    """One full v2 CG iteration (both slab kernels + the plane stitch).
+
+    Shared by the fixed-iteration driver below and the tolerance-driven
+    driver (:func:`repro.core.precond.cg_fused_tol`), so the tol-driven
+    trajectory is the fixed-iteration trajectory *by construction* — the
+    acceptance property the tests pin.  Returns
+    ``(x2, r2, p2, rtz_new, beta_new)``.
+    """
+    # front half: p = r + beta p, masked Ax, pap partial, in-block
+    # assembly; boundary planes leave as (nblk, pln) side outputs.
+    p2, w2, bot, top, pap_b = _ax.nekbone_ax_slab_pallas(
+        p2, r2, D, Dt, g3, mx, my, mz, beta.reshape(1, 1),
+        n=n, grid=grid, sz=sz, interpret=interpret, acc_dtype=acc_name)
+    pap = jnp.sum(pap_b)
+    alpha = rtz / pap
+    # cross-block stitch operands: each block receives its neighbours'
+    # boundary planes (zeros at the global ends) — O(E n^2) traffic.
+    addb = jnp.concatenate([zero_plane, top[:-1]], axis=0)
+    addt = jnp.concatenate([bot[1:], zero_plane], axis=0)
+    # back half: stitch w in VMEM, both axpys, post-update r·c·r.
+    x2, r2, rcr_b = _ax.nekbone_cg_update_pallas(
+        x2, p2, r2, w2, addb, addt, alpha.reshape(1, 1), cx, cy, cz,
+        n=n, grid=grid, sz=sz, interpret=interpret, acc_dtype=acc_name)
+    rtz_new = jnp.sum(rcr_b)
+    beta = rtz_new / rtz
+    return x2, r2, p2, rtz_new, beta
+
+
 @functools.partial(jax.jit, static_argnames=("n", "grid", "niter", "sz",
                                              "interpret", "acc_name",
                                              "x_name"))
@@ -232,23 +263,10 @@ def _cg_fused_v2(b, D, Dt, g3, mx, my, mz, cx, cy, cz, *, n: int,
     def body(k, state):
         x2, r2, p2, rtz, beta, hist = state
         hist = hist.at[k].set(jnp.sqrt(jnp.abs(rtz)))
-        # front half: p = r + beta p, masked Ax, pap partial, in-block
-        # assembly; boundary planes leave as (nblk, pln) side outputs.
-        p2, w2, bot, top, pap_b = _ax.nekbone_ax_slab_pallas(
-            p2, r2, D, Dt, g3, mx, my, mz, beta.reshape(1, 1),
-            n=n, grid=grid, sz=sz, interpret=interpret, acc_dtype=acc_name)
-        pap = jnp.sum(pap_b)
-        alpha = rtz / pap
-        # cross-block stitch operands: each block receives its neighbours'
-        # boundary planes (zeros at the global ends) — O(E n^2) traffic.
-        addb = jnp.concatenate([zero_plane, top[:-1]], axis=0)
-        addt = jnp.concatenate([bot[1:], zero_plane], axis=0)
-        # back half: stitch w in VMEM, both axpys, post-update r·c·r.
-        x2, r2, rcr_b = _ax.nekbone_cg_update_pallas(
-            x2, p2, r2, w2, addb, addt, alpha.reshape(1, 1), cx, cy, cz,
-            n=n, grid=grid, sz=sz, interpret=interpret, acc_dtype=acc_name)
-        rtz_new = jnp.sum(rcr_b)
-        beta = rtz_new / rtz
+        x2, r2, p2, rtz_new, beta = _v2_iter(
+            x2, r2, p2, rtz, beta, D=D, Dt=Dt, g3=g3, mx=mx, my=my, mz=mz,
+            cx=cx, cy=cy, cz=cz, zero_plane=zero_plane, n=n, grid=grid,
+            sz=sz, interpret=interpret, acc_name=acc_name)
         return x2, r2, p2, rtz_new, beta, hist
 
     hist0 = jnp.full((niter + 1,), jnp.nan, dtype=acc)

@@ -189,6 +189,7 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
                          mask: jnp.ndarray | None = None,
                          c: jnp.ndarray | None = None,
                          sz: int | None = None, theta: float | None = None,
+                         tol: float | None = None,
                          interpret: bool | None = None,
                          precision=None) -> CGResult:
     """Fixed-iteration s-step CG through the v3 matrix-powers pipeline.
@@ -201,12 +202,21 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
       grid:  element grid (EX, EY, EZ).
       niter: total CG iterations (any value — the final cycle runs the
              remainder ``niter % s`` recurrence steps on a full basis).
+             With ``tol`` set this is the *ceiling* (``max_iter``).
       s:     iterations per cycle (s >= 1; s=1 degenerates to the v2
              stream budget, s=4 is the tuned default — DESIGN.md §8).
       mask/c: optional structural fields, validated like the v2 path.
       sz:    slabs per block (default: joint (sz, s) autotune,
              `kernels/autotune.pick_slab_sz_sstep`).
       theta: basis scale override (default: power-iteration ||A|| estimate).
+      tol:   optional tolerance for early exit (DESIGN.md §9.4): stop, as
+             :func:`repro.core.cg.cg` does, *before* the first iteration
+             whose start-of-iteration ``rtz = r·c·r`` is ``<= tol**2``.
+             The cycle's rtz values are the f64 Gram quadratic forms, so
+             the stopping point is resolved to *iteration* granularity:
+             the recurrence is re-run for the shorter step count and the
+             update kernel applies exactly the iterations taken.  The
+             returned ``iters`` is the count actually run.
       interpret: force Pallas interpret mode (default: off-TPU detection).
       precision: policy name / policy / ``None`` (DESIGN.md §7) — basis
              and vectors stream in the storage dtype, Gram partials in the
@@ -215,7 +225,9 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
     Returns a :class:`repro.core.cg.CGResult` whose ``rnorm_history``
     matches ``cg_fixed_iters`` to round-off for small s (the in-cycle
     entries are the f64 Gram quadratic forms ``sqrt(b_j' G b_j)``; the
-    final entry is the update kernel's stored-residual reduction).
+    final entry is the update kernel's stored-residual reduction).  With
+    ``tol``, the history holds the ``iters + 1`` entries actually
+    produced — a prefix of the fixed-iteration trajectory.
     """
     from repro.core.cg_fused import _check_box_fields
     from repro.kernels import ops as kernel_ops
@@ -257,12 +269,20 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
                                jnp.asarray(mask, b.dtype))
     inv_theta = jnp.full((1, 1), 1.0 / theta, acc)
 
+    tol2 = None if tol is None else float(tol) ** 2
     x2 = jnp.zeros((E, n3), x_dtype)
     r2 = p2 = b.reshape(E, n3)
     hist: list[float] = []
     rcr_last = None
     it = 0
     while it < niter:
+        # per-cycle tolerance check on the previous update kernel's stored-
+        # residual reduction — the same quantity the next cycle's Gram
+        # would report as its start-of-iteration rtz, one powers launch
+        # earlier (DESIGN.md §9.4).
+        if tol2 is not None and rcr_last is not None \
+                and abs(float(rcr_last)) <= tol2:
+            break
         m = min(s, niter - it)
         basis, gram_b = _powers_call(
             p2, r2, D_op, D_op.T, gext, mx, my, mzext, cx, cy, cz,
@@ -271,6 +291,18 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
         # the policy's gram dtype is always float64 (PrecisionPolicy.gram)
         G = np.asarray(jnp.sum(gram_b, axis=0), np.dtype(policy.gram))
         e_c, b_c, a_c, rtzs = sstep_recurrence(G, s, m, theta)
+        if tol2 is not None:
+            # in-cycle stop: run only the iterations whose start rtz is
+            # still above tol^2 (exactly cg()'s while_loop semantics); the
+            # O(s^2) f64 recurrence is re-run for the shorter count so the
+            # update kernel applies exactly the iterations taken.
+            stop = next((j for j, v in enumerate(rtzs)
+                         if abs(v) <= tol2), None)
+            if stop is not None:
+                if stop == 0:
+                    break
+                e_c, b_c, a_c, rtzs = sstep_recurrence(G, s, stop, theta)
+                m = stop
         hist.extend(np.sqrt(np.abs(v)) for v in rtzs)
         coef = jnp.asarray(np.stack([e_c, b_c, a_c]), acc)
         x2, r2, p2, rcr_b = _ax.nekbone_sstep_update_pallas(
@@ -278,10 +310,12 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
             s=s, interpret=interpret, acc_dtype=policy.accum)
         rcr_last = jnp.sum(rcr_b)
         it += m
-    if rcr_last is None:                  # niter == 0
+        if tol2 is not None and m < s:
+            break
+    if rcr_last is None:                  # niter == 0 (or tol met at start)
         c2 = box_outer(cz, cy, cx).reshape(E, n3).astype(acc)
         rcr_last = jnp.sum(r2.astype(acc) * c2 * r2.astype(acc))
     hist.append(float(np.sqrt(abs(float(rcr_last)))))
     hist_arr = jnp.asarray(np.asarray(hist, np.float64), acc)
-    return CGResult(x=x2.reshape(b.shape), iters=jnp.asarray(niter),
+    return CGResult(x=x2.reshape(b.shape), iters=jnp.asarray(it),
                     rnorm=hist_arr[-1], rnorm_history=hist_arr)

@@ -27,7 +27,10 @@ __all__ = ["flops_per_dof", "cg_iter_flops", "cg_iter_bytes", "intensity",
            "precision_itemsize", "bytes_per_dof_iter", "pipeline_intensity",
            "ir_overhead_streams", "SSTEP_DEFAULT_S", "sstep_cycle_streams",
            "sstep_streams", "sstep_halo_streams", "sstep_effective_streams",
-           "sstep_intensity"]
+           "sstep_intensity", "JACOBI_V2_READ_STREAMS",
+           "JACOBI_V2_WRITE_STREAMS", "CHEB_V2_READ_STREAMS",
+           "CHEB_V2_WRITE_STREAMS", "CHEB_DEFAULT_K", "cheb_halo_streams",
+           "cheb_effective_streams", "cheb_flops_per_dof"]
 
 # Eq. 2's stream counts: fp64 words moved per DOF per CG iteration when the
 # operator, mask, and every inner product run as separate passes.
@@ -115,6 +118,61 @@ def sstep_intensity(n: int, s: int, itemsize: int = 8) -> float:
     return flops_per_dof(n) / ((r + w) * float(itemsize))
 
 
+# Preconditioned v2 pipelines (core/precond.py, DESIGN.md §9).
+#
+# Jacobi: the solver carries the *preconditioned* residual z = D^-1 r, so
+# the slab front-half is the v2 kernel unchanged (reads p, z, 3 metric
+# diagonals; writes p, w) and the merged PCG update kernel adds exactly one
+# stream — the assembled operator diagonal:
+#   update kernel: reads x, p, z, w, invdiag    (5)    writes x, z (2)
+# = 10R + 4W = 14 streams/iter, one more than unpreconditioned v2.
+JACOBI_V2_READ_STREAMS = 10
+JACOBI_V2_WRITE_STREAMS = 4
+
+# Chebyshev(k): one extra kernel per iteration evaluates z = q_k(A) r in a
+# single halo'd slab residency (the §8 matrix-powers machinery):
+#   cheb kernel:   reads r, 3 metric diagonals  (4)    writes z (1)
+#   slab kernel:   reads p, z, 3 metric         (5)    writes p, w (2)
+#   update kernel: reads x, p, r, w             (4)    writes x, r (2)
+# = 13R + 5W = 18 streams/iter regardless of k (the k chained operator
+# applications stay in VMEM); the matrix-powers halo — 4 fields over 2k
+# ghost slabs per block, every iteration — is the side channel
+# (:func:`cheb_halo_streams`).  The win is the *iteration count*: the
+# preconditioned solve trades 18 + 8k/sz effective streams/iter against a
+# condition-number-driven iteration reduction (§9.3's bytes-to-solution
+# accounting; the E=1024/n=10 acceptance case converges to 1e-8 in ~2x
+# fewer iterations at k=4).
+CHEB_V2_READ_STREAMS = 13
+CHEB_V2_WRITE_STREAMS = 5
+CHEB_DEFAULT_K = 4
+
+
+def cheb_halo_streams(k: int, sz: int) -> float:
+    """Stream-equivalents of the Chebyshev kernel's matrix-powers halo.
+
+    k chained applications need k ghost slabs per block side (§8.2's
+    pollution argument); the kernel redundantly reads its 4 halo'd fields
+    (r + 3 metric diagonals) over ``2k`` extra slabs per ``sz``-slab
+    block, *every* iteration: ``8k/sz`` stream-fractions — unlike the v3
+    halo there is no 1/s amortization, so a deep polynomial wants large
+    slabs.  Charged as a side channel, not the headline."""
+    return 2.0 * 4.0 * float(k) / float(sz)
+
+
+def cheb_effective_streams(k: int, sz: int) -> float:
+    """Headline + halo: total effective streams/iter of Chebyshev-PCG."""
+    return (CHEB_V2_READ_STREAMS + CHEB_V2_WRITE_STREAMS
+            + cheb_halo_streams(k, sz))
+
+
+def cheb_flops_per_dof(n: int, k: int = CHEB_DEFAULT_K) -> int:
+    """Eq.-1 flops/DOF/iter of Chebyshev-PCG: the CG iteration plus k
+    operator applications (12n + 17 each) and the 3-vector recurrence
+    axpys (6 flops per application per point).  Free in the memory-bound
+    regime (§1) — the polynomial raises intensity, not time."""
+    return flops_per_dof(n) + k * (12 * n + 17 + 6)
+
+
 def flops_per_dof(n: int) -> int:
     """Eq. 1 coefficient: flops per DOF per CG iteration."""
     return 12 * n + 34
@@ -189,6 +247,10 @@ PIPELINE_STREAMS = {
     "fused_v1": (FUSED_CG_READ_STREAMS, FUSED_CG_WRITE_STREAMS),
     "fused_v2": (FUSED_V2_READ_STREAMS, FUSED_V2_WRITE_STREAMS),
     "sstep_v3": sstep_streams(SSTEP_DEFAULT_S),
+    # preconditioned rungs (DESIGN.md §9): same per-iteration accounting,
+    # the Chebyshev one buys its extra 5 streams back in iteration count.
+    "fused_v2_jacobi": (JACOBI_V2_READ_STREAMS, JACOBI_V2_WRITE_STREAMS),
+    "fused_v2_cheb": (CHEB_V2_READ_STREAMS, CHEB_V2_WRITE_STREAMS),
 }
 
 # Storage-dtype bytes per word, per precision-policy name
@@ -209,7 +271,8 @@ def precision_itemsize(precision) -> int:
 
 def bytes_per_dof_iter(pipeline: str, precision, *, exact: bool = False,
                        n: int = 10, sz: int = 4,
-                       s: int = SSTEP_DEFAULT_S) -> tuple[float, float]:
+                       s: int = SSTEP_DEFAULT_S,
+                       k: int = CHEB_DEFAULT_K) -> tuple[float, float]:
     """(read_bytes, write_bytes) per DOF per CG iteration for a pipeline
     rung under a precision policy — the ndof-independent quantity the CI
     regression gate diffs (benchmarks/check_regression.py).
@@ -217,19 +280,24 @@ def bytes_per_dof_iter(pipeline: str, precision, *, exact: bool = False,
     ``exact=True`` stops charging the sub-stream side channels as exactly
     zero: the v2 boundary-plane channel (:func:`fused_v2_plane_streams` at
     the given ``n``/``sz`` — 2 plane writes by the dots kernel, 2 plane
-    reads by the update kernel, split evenly) and the v3 matrix-powers halo
-    (:func:`sstep_halo_streams` — redundant *reads* only) are folded in.
-    The eq2 and fused_v1 rungs have no modeled side channel (v1's uncounted
-    assembly pass follows the original §3.3 books, see DESIGN.md §6), so
-    their exact numbers equal the headline ones.
+    reads by the update kernel, split evenly; the Jacobi and Chebyshev
+    PCG rungs inherit it, they reuse those kernels), the v3 matrix-powers
+    halo (:func:`sstep_halo_streams` — redundant *reads* only), and the
+    Chebyshev apply kernel's per-iteration halo
+    (:func:`cheb_halo_streams`, also reads) are folded in.  The eq2 and
+    fused_v1 rungs have no modeled side channel (v1's uncounted assembly
+    pass follows the original §3.3 books, see DESIGN.md §6), so their
+    exact numbers equal the headline ones.
     """
     reads, writes = PIPELINE_STREAMS[pipeline]
     if pipeline == "sstep_v3" and s != SSTEP_DEFAULT_S:
         reads, writes = sstep_streams(s)
     if exact:
-        if pipeline == "fused_v2":
+        if pipeline in ("fused_v2", "fused_v2_jacobi", "fused_v2_cheb"):
             half = fused_v2_plane_streams(n, sz) / 2.0
             reads, writes = reads + half, writes + half
+            if pipeline == "fused_v2_cheb":
+                reads = reads + cheb_halo_streams(k, sz)
         elif pipeline == "sstep_v3":
             reads = reads + sstep_halo_streams(s, sz)
     itemsize = precision_itemsize(precision)

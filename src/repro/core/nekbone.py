@@ -60,6 +60,16 @@ class NekboneCase:
                as the *outer* (residual) precision and route fixed-iter
                solves through ``cg_ir_fixed_iters``.  ``None`` keeps the
                pre-policy behaviour: everything in ``dtype``.
+      precond: None | 'jacobi' | 'cheb' (optionally 'cheb<k>') — the
+               case's default preconditioner (DESIGN.md §9,
+               core/precond.py).  Solves through the v2 fused pipeline
+               dispatch to the fused PCG drivers (Jacobi: 14 streams/iter,
+               Chebyshev: 18); other ``ax_impl`` choices apply the
+               reference (XLA) preconditioner through ``core/cg.py``.
+               ``solve(precond=...)`` overrides per call (``True`` means
+               'jacobi', ``False`` forces unpreconditioned — the
+               pre-subsystem API).
+      cheb_k:  Chebyshev polynomial order for ``precond='cheb'``.
     """
 
     n: int = 10
@@ -69,6 +79,8 @@ class NekboneCase:
     ax_impl: str = "fused"
     precision: str | None = None
     s: int = 4
+    precond: str | None = None
+    cheb_k: int = 4
 
     def __post_init__(self):
         if self.precision is not None:
@@ -132,28 +144,78 @@ class NekboneCase:
     def dot(self) -> Callable:
         return cg_mod.weighted_dot(self.c)
 
+    def _precond_name(self, precond) -> str | None:
+        """Resolve a ``solve(precond=...)`` argument against the case.
+
+        ``None`` inherits the case's ``precond`` field; ``True`` is the
+        pre-subsystem spelling of 'jacobi'; ``False`` forces the solve
+        unpreconditioned; a string names a registry preconditioner.
+        """
+        if precond is None:
+            return self.precond
+        if precond is True:
+            return "jacobi"
+        if precond is False:
+            return None
+        return str(precond)
+
+    def precond_spec(self, name: str | None = None):
+        """The case's preconditioner spec (core/precond.py), cached.
+
+        The Jacobi diagonal / Chebyshev Lanczos interval depend only on
+        the case's operator — like the s-step theta, they are one-time
+        setup costs per case, not per solve.
+        """
+        from repro.core import precond as precond_mod
+
+        name = name or self.precond
+        if name is None:
+            return None
+        if name in ("cheb", "chebyshev"):
+            name = f"cheb{self.cheb_k}"
+        cache = getattr(self, "_precond_specs", None)
+        if cache is None:
+            cache = self._precond_specs = {}
+        spec = cache.get(name)
+        if spec is None:
+            spec = precond_mod.make_preconditioner(
+                name, D=self.D, g=self.g, grid=self.grid, mask=self.mask,
+                c=self.c)
+            cache[name] = spec
+        return spec
+
+    def _reference_preconditioner(self, name: str | None):
+        """The XLA-composed ``M(r)`` for the non-fused solver paths."""
+        from repro.core import precond as precond_mod
+
+        if name is None:
+            return None
+        spec = self.precond_spec(name)
+        if isinstance(spec, precond_mod.JacobiPrecond):
+            return lambda r: r * spec.invdiag
+        return precond_mod.chebyshev_preconditioner(
+            self.ax_full, spec.k, spec.lmin, spec.lmax)
+
     def solve(self, f: jnp.ndarray, *, niter: int | None = None,
               tol: float = 1e-8, max_iter: int = 1000,
-              precond: bool = False) -> cg_mod.CGResult:
-        M = None
-        if precond:
-            M = cg_mod.jacobi_preconditioner(self.operator_diagonal())
+              precond: bool | str | None = None) -> cg_mod.CGResult:
+        pc_name = self._precond_name(precond)
         fused = self.ax_impl in ("pallas_fused_cg", "pallas_fused_cg_v2",
                                  "pallas_sstep_v3")
-        if (fused and niter is not None and M is None
-                and self.precision is not None):
+        refined = False
+        if fused and self.precision is not None:
             from repro.core.precision import resolve_policy
 
-            policy = resolve_policy(self.precision)
-            if policy.refine:
-                variant = {"pallas_fused_cg_v2": "v2",
-                           "pallas_sstep_v3": "sstep"}.get(self.ax_impl,
-                                                           "v1")
-                return cg_fused_mod.cg_ir_fixed_iters(
-                    f, D=self.D, g=self.g, grid=self.grid, niter=niter,
-                    precision=policy, mask=self.mask, c=self.c,
-                    variant=variant, s=self.s)
-        if self.ax_impl == "pallas_sstep_v3" and niter is not None and M is None:
+            refined = resolve_policy(self.precision).refine
+        if refined and niter is not None and pc_name is None:
+            variant = {"pallas_fused_cg_v2": "v2",
+                       "pallas_sstep_v3": "sstep"}.get(self.ax_impl, "v1")
+            return cg_fused_mod.cg_ir_fixed_iters(
+                f, D=self.D, g=self.g, grid=self.grid, niter=niter,
+                precision=self.precision, mask=self.mask, c=self.c,
+                variant=variant, s=self.s)
+        if self.ax_impl == "pallas_sstep_v3" and pc_name is None \
+                and not refined:
             from repro.core.cg_sstep import cg_sstep_fixed_iters, \
                 estimate_theta
 
@@ -164,18 +226,45 @@ class NekboneCase:
                 theta = estimate_theta(self.D, self.g, self.grid,
                                        self.mask)
                 self._sstep_theta = theta
+            if niter is not None:
+                return cg_sstep_fixed_iters(
+                    f, D=self.D, g=self.g, grid=self.grid, niter=niter,
+                    s=self.s, mask=self.mask, c=self.c, theta=theta,
+                    precision=self.precision)
+            # tolerance-driven: the per-cycle host sync checks the stored-
+            # residual reduction and the f64 Gram recurrence resolves the
+            # stopping point to iteration granularity (DESIGN.md §9.4).
             return cg_sstep_fixed_iters(
-                f, D=self.D, g=self.g, grid=self.grid, niter=niter,
-                s=self.s, mask=self.mask, c=self.c, theta=theta,
+                f, D=self.D, g=self.g, grid=self.grid, niter=max_iter,
+                s=self.s, mask=self.mask, c=self.c, theta=theta, tol=tol,
                 precision=self.precision)
-        if self.ax_impl == "pallas_fused_cg_v2" and niter is not None and M is None:
-            return cg_fused_mod.cg_fused_v2_fixed_iters(
-                f, D=self.D, g=self.g, grid=self.grid, niter=niter,
-                mask=self.mask, c=self.c, precision=self.precision)
-        if self.ax_impl == "pallas_fused_cg" and niter is not None and M is None:
+        if self.ax_impl == "pallas_fused_cg_v2" and not refined:
+            from repro.core import precond as precond_mod
+
+            # pc_name is already resolved against the case default, so a
+            # None here means "explicitly unpreconditioned" — don't let
+            # precond_spec re-apply the case field.
+            spec = self.precond_spec(pc_name) if pc_name else None
+            if niter is not None:
+                if spec is None:
+                    return cg_fused_mod.cg_fused_v2_fixed_iters(
+                        f, D=self.D, g=self.g, grid=self.grid, niter=niter,
+                        mask=self.mask, c=self.c, precision=self.precision)
+                return precond_mod.pcg_fused_v2_fixed_iters(
+                    f, D=self.D, g=self.g, grid=self.grid, niter=niter,
+                    precond=spec, mask=self.mask, c=self.c,
+                    precision=self.precision)
+            # tolerance-driven fused solve (DESIGN.md §9.4), plain or PCG.
+            return precond_mod.cg_fused_tol(
+                f, D=self.D, g=self.g, grid=self.grid, tol=tol,
+                max_iter=max_iter, precond=spec, mask=self.mask, c=self.c,
+                precision=self.precision)
+        if self.ax_impl == "pallas_fused_cg" and niter is not None \
+                and pc_name is None and not refined:
             return cg_fused_mod.cg_fused_fixed_iters(
                 f, D=self.D, g=self.g, mask=self.mask, c=self.c,
                 grid=self.grid, niter=niter, precision=self.precision)
+        M = self._reference_preconditioner(pc_name)
         if niter is not None:
             return cg_mod.cg_fixed_iters(self.ax_full, f, niter=niter,
                                          dot=self.dot(), precond=M)
@@ -183,7 +272,8 @@ class NekboneCase:
                          dot=self.dot(), precond=M)
 
     def solve_manufactured(self, *, niter: int | None = None, tol: float = 1e-8,
-                           max_iter: int = 1000, precond: bool = False):
+                           max_iter: int = 1000,
+                           precond: bool | str | None = None):
         u_ex, f = self.manufactured()
         res = self.solve(f, niter=niter, tol=tol, max_iter=max_iter,
                          precond=precond)
@@ -197,21 +287,15 @@ class NekboneCase:
     def operator_diagonal(self) -> jnp.ndarray:
         """diag(A) for the Jacobi preconditioner, computed structurally.
 
-        diag over the element-local operator then assembled:  for the SEM
-        Poisson operator, diag_local[p] = sum_l D[l,i]^2 G_rr[..l..] + ...;
-        we compute it exactly with three small einsums.
+        Delegates to :func:`repro.core.precond.operator_diagonal` (the
+        preconditioning subsystem owns the algebra, DESIGN.md §9.2):
+        element-local diagonal from three small ``D∘D`` einsums, then
+        assembled; masked rows are 1 to keep the inverse finite.
         """
-        grr = self.g[:, 0]
-        gss = self.g[:, 3]
-        gtt = self.g[:, 5]
-        D2 = self.D * self.D  # (a, b): D[a,b]^2
-        dr = jnp.einsum("li,ekjl->ekji", D2, grr)
-        ds = jnp.einsum("lj,ekli->ekji", D2, gss)
-        dt = jnp.einsum("lk,elji->ekji", D2, gtt)
-        diag = dr + ds + dt
-        diag = gs_mod.ds_sum_local(diag, self.grid)
-        # masked rows: identity-like; keep 1 to avoid division by zero
-        return jnp.where(self.mask > 0, diag, 1.0).astype(self.dtype)
+        from repro.core.precond import operator_diagonal
+
+        return operator_diagonal(self.D, self.g, self.grid,
+                                 self.mask).astype(self.dtype)
 
     # ------------------------------------------------------------------
     # Distributed (shard_map) operator set

@@ -45,7 +45,8 @@ import jax.numpy as jnp
 
 __all__ = ["vmem_block_e", "pick_block_e", "candidate_blocks",
            "candidate_slab_sizes", "pick_slab_sz",
-           "candidate_slab_sizes_sstep", "pick_slab_sz_sstep", "clear_cache",
+           "candidate_slab_sizes_sstep", "pick_slab_sz_sstep",
+           "candidate_slab_sizes_cheb", "pick_slab_sz_cheb", "clear_cache",
            "cache_info", "cache_path"]
 
 _CACHE: dict[tuple, int] = {}
@@ -311,19 +312,27 @@ def _default_measure_slab(grid: tuple[int, int, int], n: int, dtype,
 
 def pick_slab_sz(grid: tuple[int, int, int], n: int, dtype=jnp.float32, *,
                  acc_dtype=None, backend: str | None = None,
+                 precond: str | None = None,
                  measure: Callable[[int], float] | None = None) -> int:
     """Best slabs-per-block for the v2 pipeline on ``grid``, memoized.
 
     Same measure-on-TPU / heuristic-elsewhere policy as
     :func:`pick_block_e`; cache keys carry the full element grid because
     the slab layout (and the plane side-output sizes) depend on it, plus
-    the resolved (storage, accum) dtype pair.
+    the resolved (storage, accum) dtype pair.  ``precond`` adds a cache-key
+    dimension for the PCG update kernels (DESIGN.md §9): the Jacobi update
+    holds one extra block array (the operator diagonal) live, so a
+    measured pick for the plain pipeline must never be reused for the
+    preconditioned one.  ``None`` keeps the pre-precond key shape so
+    existing disk caches stay valid.
     """
     dtype = jnp.dtype(dtype)
     backend = backend or jax.default_backend()
     ex, ey, ez = grid
     acc_name = _acc_name(dtype, acc_dtype)
     key = ("slab", n, ex, ey, ez, dtype.name, acc_name, backend)
+    if precond is not None:
+        key = key + (f"pc:{precond}",)
     # as in pick_block_e: VMEM residency is in the accumulation dtype
     size_item = max(dtype.itemsize, jnp.dtype(acc_name).itemsize)
 
@@ -433,6 +442,106 @@ def pick_slab_sz_sstep(grid: tuple[int, int, int], n: int, s: int,
         m = measure
         if m is None and backend == "tpu":
             m = _default_measure_sstep(grid, n, s, dtype, acc_dtype)
+        if m is None:
+            return cands[0], False
+        return min(cands, key=m), True
+
+    return _cached_pick(key, pick)
+
+
+# ---------------------------------------------------------------------------
+# Chebyshev-apply slab blocks (precond pipeline): halo'd like the v3 powers
+# kernel, but the live set is the recurrence vectors (r, d, res, z) plus the
+# operator temporaries — no 2s+1 basis, so the VMEM ceiling is looser
+# ---------------------------------------------------------------------------
+
+def candidate_slab_sizes_cheb(grid: tuple[int, int, int], n: int, k: int,
+                              itemsize: int = 4) -> list[int]:
+    """Slabs-per-block candidates for the Chebyshev-apply kernel, per ``k``.
+
+    The block marches ``sz + 2k`` slabs (owned + the matrix-powers halo of
+    the k chained applications, DESIGN.md §9.3) and keeps ~12 slab-sized
+    arrays live (r, d, res, z + the operator gradients/temporaries), so
+    the ceiling on ``sz`` shrinks with ``k`` like the v3 kernel's does
+    with ``s``.  ``sz = 1`` stays always viable.
+    """
+    ex, ey, ez = grid
+    n3_padded = -(-(n ** 3) // 128) * 128
+    live = 12
+    per_slab = live * ex * ey * n3_padded * max(itemsize, 4)
+    max_slabs = max(1, VMEM_BUDGET_BYTES // per_slab)
+    sz_max = max(1, max_slabs - 2 * k)
+    cands = [c for c in range(ez, 0, -1) if ez % c == 0 and c <= sz_max]
+    return cands or [1]
+
+
+def _default_measure_cheb(grid: tuple[int, int, int], n: int, k: int,
+                          dtype, acc_dtype=None) -> Callable[[int], float]:
+    """Times the Chebyshev-apply kernel on synthetic data per slab count."""
+    import time
+
+    import numpy as np
+
+    from repro.core.geom import box_axis_factors
+    from repro.core.sem import derivative_matrix
+    from repro.kernels import nekbone_ax as _ax
+
+    ex, ey, ez = grid
+    E = ex * ey * ez
+    rng = np.random.default_rng(0)
+    r2 = jnp.asarray(rng.normal(size=(E, n ** 3)), dtype)
+    g3 = jnp.asarray(rng.normal(size=(E, 3, n ** 3)), dtype)
+    D = jnp.asarray(derivative_matrix(n), dtype)
+    (mx, my, mz), (cx, cy, cz) = box_axis_factors(grid, n)
+    mx, my, cx, cy = (jnp.asarray(a, dtype) for a in (mx, my, cx, cy))
+    cz = jnp.asarray(cz, dtype)
+    acc = _ax._accum(jnp.dtype(dtype), acc_dtype)
+    coef = jnp.ones((k + 1, 2), acc)
+
+    def measure(sz: int) -> float:
+        rext = _ax.sstep_extend_field(r2, grid, sz, k)
+        gext = _ax.sstep_extend_field(g3, grid, sz, k)
+        mzext = _ax.sstep_extend_zfactor(jnp.asarray(mz, dtype), sz, k)
+
+        def f():
+            return _ax.nekbone_cheb_apply_pallas(
+                rext, D, D.T, gext, mx, my, mzext, cx, cy, cz, coef,
+                n=n, grid=grid, sz=sz, k=k, interpret=False,
+                acc_dtype=acc_dtype)
+
+        jax.block_until_ready(f()[0])          # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = f()
+        jax.block_until_ready(out[0])
+        return (time.perf_counter() - t0) / 3
+
+    return measure
+
+
+def pick_slab_sz_cheb(grid: tuple[int, int, int], n: int, k: int,
+                      dtype=jnp.float32, *, acc_dtype=None,
+                      backend: str | None = None,
+                      measure: Callable[[int], float] | None = None) -> int:
+    """Best slabs-per-block for the Chebyshev-apply kernel at order ``k``.
+
+    Same measure-on-TPU / heuristic-elsewhere policy as
+    :func:`pick_slab_sz_sstep`; the cache key carries ``k`` (the precond
+    dimension) — halo depth scales with it, so a pick for one order must
+    never be reused for another.
+    """
+    dtype = jnp.dtype(dtype)
+    backend = backend or jax.default_backend()
+    ex, ey, ez = grid
+    acc_name = _acc_name(dtype, acc_dtype)
+    key = ("cheb", n, ex, ey, ez, k, dtype.name, acc_name, backend)
+    size_item = max(dtype.itemsize, jnp.dtype(acc_name).itemsize)
+
+    def pick() -> tuple[int, bool]:
+        cands = candidate_slab_sizes_cheb(grid, n, k, itemsize=size_item)
+        m = measure
+        if m is None and backend == "tpu":
+            m = _default_measure_cheb(grid, n, k, dtype, acc_dtype)
         if m is None:
             return cands[0], False
         return min(cands, key=m), True

@@ -51,7 +51,9 @@ __all__ = ["nekbone_ax_kernel", "nekbone_ax_pallas", "ax_block",
            "nekbone_cg_update_kernel", "nekbone_cg_update_pallas",
            "nekbone_ax_powers_kernel", "nekbone_ax_powers_pallas",
            "nekbone_sstep_update_kernel", "nekbone_sstep_update_pallas",
-           "sstep_extend_field", "sstep_extend_zfactor"]
+           "sstep_extend_field", "sstep_extend_zfactor",
+           "nekbone_pcg_update_kernel", "nekbone_pcg_update_pallas",
+           "nekbone_cheb_apply_kernel", "nekbone_cheb_apply_pallas"]
 
 from repro.compat import CompilerParams as _CompilerParams
 from repro.core.geom import box_outer as _box_outer
@@ -964,3 +966,291 @@ def nekbone_sstep_update_pallas(x2: jnp.ndarray, p2: jnp.ndarray,
         interpret=interpret,
         name=f"nekbone_sstep_update_n{n}_sz{sz}_s{s}{_acc_tag(acc_dtype)}",
     )(x2, p2, r2, basis, coef, cx, cy, cz)
+
+
+# ---------------------------------------------------------------------------
+# Preconditioning kernels (DESIGN.md §9).  Two PCG pipelines share the v2
+# slab front-half (nekbone_ax_slab_kernel applied with z = M^-1 r in the
+# residual slot — the direction update p = z + beta p and the p·c·Ap partial
+# are already exactly what PCG needs):
+#
+# * Jacobi: the solver carries the *preconditioned* residual z = D^-1 r
+#   instead of r, so the only new stream is the operator diagonal — the
+#   merged update kernel below applies D^-1 to the stitched operator output
+#   (z -= alpha D^-1 w), reconstructs r = D z in VMEM, and emits both the
+#   r·c·z (beta numerator) and r·c·r (history) partials.  10R + 4W = 14
+#   streams/iter, one more than unpreconditioned v2.
+# * Chebyshev: z = q_k(A) r for the degree-k Chebyshev approximation of
+#   A^-1 on an interval [lmin, lmax] ⊇ spec(A).  One application is k
+#   chained assembled operator applications — exactly the v3 matrix-powers
+#   structure, so the kernel reuses its halo machinery (k ghost slabs per
+#   block side, sstep_extend_field windows) to evaluate the whole
+#   polynomial in one slab residency: r + 3 metric diagonals in, z out.
+# ---------------------------------------------------------------------------
+
+def nekbone_pcg_update_kernel(x_ref, p_ref, z_ref, w_ref, addb_ref, addt_ref,
+                              alpha_ref, invd_ref, cx_ref, cy_ref, cz_ref,
+                              x_out, z_out, rtz_ref, rcr_ref, *, n: int,
+                              ex: int, ey: int, sz: int,
+                              acc_dtype: str | None = None):
+    """Merged Jacobi-PCG back-half on one slab block (DESIGN.md §9.2).
+
+    The solver carries z = D^-1 r (D = diag(A)); r itself never streams.
+    In one VMEM residency: stitch the cross-block z-interface planes into
+    ``w``, apply both axpys in z-coordinates, and emit the two weighted
+    partials of the *updated*, *stored* residual:
+
+        w   += neighbour boundary planes          (the v2 stitch)
+        x   += alpha * p
+        z   -= alpha * invdiag * w                (z-coordinate r-update)
+        rtz  = sum(r * c * z) = sum(z * c * z / invdiag)
+        rcr  = sum(r * c * r) = sum(z * c * z / invdiag^2)
+
+    with ``r = z / invdiag`` reconstructed in VMEM (invdiag is 1 at masked
+    rows, where z is identically 0, so the reconstruction is exact there).
+    ``rtz`` is next iteration's beta numerator; ``rcr`` is the residual-
+    norm history entry, directly comparable to unpreconditioned CG's.
+
+    Refs as :func:`nekbone_cg_update_kernel` with ``z`` in place of ``r``
+    plus ``invd_ref``: (block_e, n^3) assembled 1/diag(A), and the two
+    (1, 1) partial outputs.
+    """
+    block_e = sz * ey * ex
+    n3 = n ** 3
+    f32 = _accum(x_ref.dtype, acc_dtype)
+    alpha = alpha_ref[0, 0].astype(f32)
+    v = w_ref[...].astype(f32).reshape(sz, ey, ex, n, n, n)
+    v = v.at[0, :, :, 0, :, :].add(
+        addb_ref[...].astype(f32).reshape(ey, ex, n, n))
+    v = v.at[-1, :, :, -1, :, :].add(
+        addt_ref[...].astype(f32).reshape(ey, ex, n, n))
+
+    invd = invd_ref[...].astype(f32)
+    x = x_ref[...].astype(f32) + alpha * p_ref[...].astype(f32)
+    z = z_ref[...].astype(f32) - alpha * (invd * v.reshape(block_e, n3))
+    # both partials must see the *stored* z (§7 rule 2): rtz is the beta
+    # numerator of the iteration that re-reads z from HBM.
+    z = z.astype(z_out.dtype)
+
+    diag = 1.0 / invd                      # exact where invd == 1 (masked)
+    c = _box_outer(cz_ref[...].astype(f32), cy_ref[...].astype(f32),
+                   cx_ref[...].astype(f32))
+    z6 = z.astype(f32).reshape(sz, ey, ex, n, n, n)
+    d6 = diag.reshape(sz, ey, ex, n, n, n)
+    rtz_ref[0, 0] = jnp.sum(z6 * c * z6 * d6).astype(rtz_ref.dtype)
+    rcr_ref[0, 0] = jnp.sum(z6 * c * z6 * d6 * d6).astype(rcr_ref.dtype)
+    x_out[...] = x.astype(x_out.dtype)
+    z_out[...] = z
+
+
+@functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "interpret",
+                                             "acc_dtype"))
+def nekbone_pcg_update_pallas(x2: jnp.ndarray, p2: jnp.ndarray,
+                              z2: jnp.ndarray, w2: jnp.ndarray,
+                              addb: jnp.ndarray, addt: jnp.ndarray,
+                              alpha: jnp.ndarray, invd2: jnp.ndarray,
+                              cx: jnp.ndarray, cy: jnp.ndarray,
+                              cz: jnp.ndarray, *, n: int,
+                              grid: tuple[int, int, int], sz: int,
+                              interpret: bool = False,
+                              acc_dtype: str | None = None):
+    """Multi-output pallas_call for the Jacobi-PCG update kernel.
+
+    Args mirror :func:`nekbone_cg_update_pallas` with the carried
+    preconditioned residual ``z2`` in the residual slot plus ``invd2``:
+    (E, n^3) assembled 1/diag(A) in the operator-storage dtype.  Returns
+    ``(x2_new, z2_new, rtz_parts, rcr_parts)``.
+    """
+    ex, ey, ez = grid
+    E = x2.shape[0]
+    assert E == ex * ey * ez and ez % sz == 0, (grid, sz, E)
+    block_e = sz * ey * ex
+    nblk = ez // sz
+    n3 = n ** 3
+    pln = ey * ex * n * n
+    acc = _accum(x2.dtype, acc_dtype)
+    field = pl.BlockSpec((block_e, n3), lambda i: (i, 0))
+    plane = pl.BlockSpec((1, pln), lambda i: (i, 0))
+    part = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(nekbone_pcg_update_kernel, n=n, ex=ex, ey=ey,
+                          sz=sz, acc_dtype=acc_dtype),
+        grid=(nblk,),
+        in_specs=[
+            field, field, field, field,                 # x, p, z, w
+            plane, plane,                               # addb, addt
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),     # alpha
+            field,                                      # invdiag
+            pl.BlockSpec((ex, n), lambda i: (0, 0)),    # c factor x
+            pl.BlockSpec((ey, n), lambda i: (0, 0)),    # c factor y
+            pl.BlockSpec((sz, n), lambda i: (i, 0)),    # c factor z slice
+        ],
+        out_specs=(field, field, part, part),
+        out_shape=(
+            jax.ShapeDtypeStruct((E, n3), x2.dtype),    # x
+            jax.ShapeDtypeStruct((E, n3), z2.dtype),    # z
+            jax.ShapeDtypeStruct((nblk, 1), acc),       # rtz partials
+            jax.ShapeDtypeStruct((nblk, 1), acc),       # rcr partials
+        ),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+        name=f"nekbone_pcg_update_n{n}_sz{sz}{_acc_tag(acc_dtype)}",
+    )(x2, p2, z2, w2, addb, addt, alpha, invd2, cx, cy, cz)
+
+
+def nekbone_cheb_apply_kernel(rext_ref, d_ref, dt_ref, gext_ref, mx_ref,
+                              my_ref, mzext_ref, cx_ref, cy_ref, cz_ref,
+                              coef_ref, z_ref, rtz_ref, *, n: int, ex: int,
+                              ey: int, sz: int, k: int, halo: int,
+                              acc_dtype: str | None = None):
+    """Chebyshev preconditioner application, one slab block (DESIGN.md §9.3).
+
+    Evaluates ``z = q_k(A) r`` — the degree-k Chebyshev-semi-iteration
+    approximation of ``A^-1`` on ``[lmin, lmax]`` — in one VMEM residency
+    over ``L = sz + 2*halo`` slabs (``halo = k``), by the incremental-
+    residual Chebyshev recurrence (the scalars are precomputed host-side
+    in f64 from the interval, ``core/precond.cheb_scalars``):
+
+        d   = coef[0,0] * r;   z = d;   res = r
+        for i in 1..k:
+            res -= A d                      (masked, block-assembled)
+            d    = coef[i,0] * d + coef[i,1] * res
+            z   += d
+        rtz = sum_own(r * c * z)            (the PCG beta numerator)
+
+    Each application of A pollutes one slab inward from the block edge
+    (the matrix-powers ghost-region argument of §8.2), so k chained
+    applications need exactly the v3 halo: owned slabs of ``z`` leave
+    fully assembled, no plane side channel.  ``z`` is rounded through the
+    storage dtype before the rtz reduction (§7 rule 2 — the v2 slab
+    kernel re-reads the stored z as its direction-update operand).
+
+    Refs (``Lee = L*ey*ex``, ``block_e = sz*ey*ex``):
+      rext_ref:  (1, Lee, n^3)   halo'd residual window
+      d_ref/dt_ref: (n, n)
+      gext_ref:  (1, Lee, 3, n^3) halo'd metric diagonal
+      mx_ref/my_ref: (ex|ey, n)  per-axis Dirichlet factors
+      mzext_ref: (1, L, n)       halo'd z mask-factor window
+      cx_ref/cy_ref: (ex|ey, n); cz_ref: (sz, n) owned z c-factor slice
+      coef_ref:  (k+1, 2)        Chebyshev recurrence scalars
+      z_ref:     (block_e, n^3)  owned q_k(A) r
+      rtz_ref:   (1, 1)          partial  sum(r * c * z)
+    """
+    L = sz + 2 * halo
+    Lee = L * ey * ex
+    block_e = sz * ey * ex
+    n3 = n ** 3
+    f32 = _accum(rext_ref.dtype, acc_dtype)
+    out_dtype = z_ref.dtype
+    D = d_ref[...].astype(f32)
+    Dt = dt_ref[...].astype(f32)
+    g3 = gext_ref[0].astype(f32)
+    mask = _box_outer(mzext_ref[0].astype(f32), my_ref[...].astype(f32),
+                      mx_ref[...].astype(f32))
+    coef = coef_ref[...].astype(f32)
+
+    def apply_a(v):
+        """One masked, block-assembled operator application (unscaled)."""
+        w = ax_block_diag(v, D, Dt, g3, n=n, e=Lee)
+        v6 = w.reshape(L, ey, ex, n, n, n) * mask
+        if ex > 1:
+            t = v6[:, :, :-1, :, :, -1] + v6[:, :, 1:, :, :, 0]
+            v6 = v6.at[:, :, :-1, :, :, -1].set(t)
+            v6 = v6.at[:, :, 1:, :, :, 0].set(t)
+        if ey > 1:
+            t = v6[:, :-1, :, :, -1, :] + v6[:, 1:, :, :, 0, :]
+            v6 = v6.at[:, :-1, :, :, -1, :].set(t)
+            v6 = v6.at[:, 1:, :, :, 0, :].set(t)
+        if L > 1:
+            t = v6[:-1, :, :, -1, :, :] + v6[1:, :, :, 0, :, :]
+            v6 = v6.at[:-1, :, :, -1, :, :].set(t)
+            v6 = v6.at[1:, :, :, 0, :, :].set(t)
+        return v6.reshape(Lee, n3)
+
+    r = rext_ref[0].astype(f32)
+    d = coef[0, 0] * r
+    z = d
+    res = r
+    for i in range(1, k + 1):
+        res = res - apply_a(d)
+        d = coef[i, 0] * d + coef[i, 1] * res
+        z = z + d
+
+    ho = halo * ey * ex
+    z_own = z[ho:ho + block_e].astype(out_dtype)
+    r_own = r[ho:ho + block_e]
+    c6 = _box_outer(cz_ref[...].astype(f32), cy_ref[...].astype(f32),
+                    cx_ref[...].astype(f32))
+    z6 = z_own.astype(f32).reshape(sz, ey, ex, n, n, n)
+    r6 = r_own.reshape(sz, ey, ex, n, n, n)
+    rtz_ref[0, 0] = jnp.sum(r6 * c6 * z6).astype(rtz_ref.dtype)
+    z_ref[...] = z_own
+
+
+@functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "k",
+                                             "interpret", "acc_dtype"))
+def nekbone_cheb_apply_pallas(rext: jnp.ndarray, D: jnp.ndarray,
+                              Dt: jnp.ndarray, gext: jnp.ndarray,
+                              mx: jnp.ndarray, my: jnp.ndarray,
+                              mzext: jnp.ndarray, cx: jnp.ndarray,
+                              cy: jnp.ndarray, cz: jnp.ndarray,
+                              coef: jnp.ndarray, *, n: int,
+                              grid: tuple[int, int, int], sz: int, k: int,
+                              interpret: bool = False,
+                              acc_dtype: str | None = None):
+    """Multi-output pallas_call for the Chebyshev-apply kernel.
+
+    Args:
+      rext: (EZ//sz, Lee, n^3) halo'd residual windows
+        (:func:`sstep_extend_field` with ``halo = k``); gext:
+        (EZ//sz, Lee, 3, n^3); mzext: (EZ//sz, L, n)
+        (:func:`sstep_extend_zfactor`); cz: (EZ, n) — blocked into owned
+        (sz, n) slices; coef: (k+1, 2) Chebyshev recurrence scalars.
+
+    Returns ``(z, rtz_parts)``: z ``(E, n^3)`` in the storage dtype of
+    ``rext``, rtz partials ``(EZ//sz, 1)`` in the accumulation dtype.
+    """
+    ex, ey, ez = grid
+    assert ez % sz == 0 and k >= 1, (grid, sz, k)
+    halo = k
+    L = sz + 2 * halo
+    Lee = L * ey * ex
+    block_e = sz * ey * ex
+    nblk = ez // sz
+    E = nblk * block_e
+    n3 = n ** 3
+    assert rext.shape == (nblk, Lee, n3), (rext.shape, (nblk, Lee, n3))
+    assert coef.shape == (k + 1, 2), coef.shape
+    acc = _accum(rext.dtype, acc_dtype)
+    ext = pl.BlockSpec((1, Lee, n3), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        functools.partial(nekbone_cheb_apply_kernel, n=n, ex=ex, ey=ey,
+                          sz=sz, k=k, halo=halo, acc_dtype=acc_dtype),
+        grid=(nblk,),
+        in_specs=[
+            ext,                                        # r window
+            pl.BlockSpec((n, n), lambda i: (0, 0)),     # D
+            pl.BlockSpec((n, n), lambda i: (0, 0)),     # Dt
+            pl.BlockSpec((1, Lee, 3, n3), lambda i: (i, 0, 0, 0)),  # g diag
+            pl.BlockSpec((ex, n), lambda i: (0, 0)),    # mask factor x
+            pl.BlockSpec((ey, n), lambda i: (0, 0)),    # mask factor y
+            pl.BlockSpec((1, L, n), lambda i: (i, 0, 0)),  # mask z window
+            pl.BlockSpec((ex, n), lambda i: (0, 0)),    # c factor x
+            pl.BlockSpec((ey, n), lambda i: (0, 0)),    # c factor y
+            pl.BlockSpec((sz, n), lambda i: (i, 0)),    # c factor z slice
+            pl.BlockSpec((k + 1, 2), lambda i: (0, 0)),  # cheb scalars
+        ],
+        out_specs=(pl.BlockSpec((block_e, n3), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))),
+        out_shape=(
+            jax.ShapeDtypeStruct((E, n3), rext.dtype),
+            jax.ShapeDtypeStruct((nblk, 1), acc),
+        ),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+        name=f"nekbone_cheb_apply_n{n}_sz{sz}_k{k}{_acc_tag(acc_dtype)}",
+    )(rext, D, Dt, gext, mx, my, mzext, cx, cy, cz, coef)

@@ -20,6 +20,7 @@ from repro.kernels import wkv6 as _wkv6
 
 __all__ = ["nekbone_ax", "nekbone_ax_dots", "nekbone_ax_dots_slab",
            "nekbone_cg_update", "nekbone_ax_powers", "nekbone_sstep_update",
+           "nekbone_pcg_update", "nekbone_cheb_precond",
            "slab_axis_factors", "diag_metric",
            "flash_attention", "wkv6", "default_interpret"]
 
@@ -336,6 +337,101 @@ def nekbone_cg_update(x: jnp.ndarray, p: jnp.ndarray, r: jnp.ndarray,
         alpha_arr, cx, cy, cz, n=n, grid=grid, sz=sz, interpret=interpret,
         acc_dtype=acc_dtype)
     return x2.reshape(x.shape), r2.reshape(x.shape), jnp.sum(rcr_b)
+
+
+def nekbone_pcg_update(x: jnp.ndarray, p: jnp.ndarray, z: jnp.ndarray,
+                       w: jnp.ndarray, alpha: float, invdiag: jnp.ndarray,
+                       grid: tuple[int, int, int], *,
+                       addb: jnp.ndarray | None = None,
+                       addt: jnp.ndarray | None = None,
+                       sz: int | None = None,
+                       interpret: bool | None = None,
+                       acc_dtype: str | None = None):
+    """Merged Jacobi-PCG vector-update kernel on natural shapes.
+
+    The solver carries ``z = invdiag * r`` (the preconditioned residual,
+    DESIGN.md §9.2); this computes ``x + alpha p``,
+    ``z - alpha invdiag (w + planes)`` and the two weighted partials of
+    the reconstructed residual ``r = z / invdiag``:
+    ``rtz = r·c·z`` (the PCG beta numerator) and ``rcr = r·c·r`` (the
+    history entry), with ``c`` rebuilt in-kernel.
+
+    Args:
+      x, p, z, w: (E, n, n, n); invdiag: (E, n, n, n) assembled 1/diag(A)
+      (1 at masked rows); grid/alpha/addb/addt as
+      :func:`nekbone_cg_update`.
+
+    Returns ``(x_new, z_new, rtz, rcr)``.
+    """
+    ex, ey, ez = grid = tuple(grid)
+    E = x.shape[0]
+    n = x.shape[-1]
+    interpret = default_interpret() if interpret is None else interpret
+    if sz is None:
+        sz = _autotune.pick_slab_sz(grid, n, x.dtype, acc_dtype=acc_dtype,
+                                    precond="jacobi")
+    n3 = n ** 3
+    nblk = ez // sz
+    pln = ey * ex * n * n
+    _, (cx, cy, cz) = slab_axis_factors(grid, n, x.dtype)
+    acc = _ax._accum(x.dtype, acc_dtype)
+    if addb is None:
+        addb = jnp.zeros((nblk, pln), x.dtype)
+    if addt is None:
+        addt = jnp.zeros((nblk, pln), x.dtype)
+    alpha_arr = jnp.full((1, 1), alpha, acc)
+    x2, z2, rtz_b, rcr_b = _ax.nekbone_pcg_update_pallas(
+        x.reshape(E, n3), p.reshape(E, n3), z.reshape(E, n3),
+        w.reshape(E, n3), addb.reshape(nblk, pln), addt.reshape(nblk, pln),
+        alpha_arr, invdiag.reshape(E, n3), cx, cy, cz, n=n, grid=grid,
+        sz=sz, interpret=interpret, acc_dtype=acc_dtype)
+    return (x2.reshape(x.shape), z2.reshape(x.shape), jnp.sum(rtz_b),
+            jnp.sum(rcr_b))
+
+
+def nekbone_cheb_precond(r: jnp.ndarray, D: jnp.ndarray, g3: jnp.ndarray,
+                         coef: jnp.ndarray, grid: tuple[int, int, int], *,
+                         k: int, sz: int | None = None,
+                         interpret: bool | None = None,
+                         acc_dtype: str | None = None):
+    """Chebyshev preconditioner application on natural shapes.
+
+    Builds the halo windows (``halo = k`` slabs, like
+    :func:`nekbone_ax_powers`) and evaluates ``z = q_k(A) r`` — k chained
+    masked, assembled operator applications combined by the Chebyshev
+    recurrence scalars (DESIGN.md §9.3) — plus the weighted partial
+    ``rtz = r·c·z``.
+
+    Args:
+      r: (E, n, n, n), continuous + masked, z-major over ``grid``.
+      D: (n, n); g3: diagonal (E, 3, ...) or verifiably-diagonal
+         6-component metric; coef: (k+1, 2) recurrence scalars
+         (:func:`repro.core.precond.cheb_scalars`).
+      k: polynomial degree (>= 1); sz: slabs per block (default:
+         autotuned, :func:`repro.kernels.autotune.pick_slab_sz_cheb`).
+
+    Returns ``(z, rtz)``.
+    """
+    ex, ey, ez = grid = tuple(grid)
+    E = r.shape[0]
+    n = r.shape[-1]
+    interpret = default_interpret() if interpret is None else interpret
+    if sz is None:
+        sz = _autotune.pick_slab_sz_cheb(grid, n, k, r.dtype,
+                                         acc_dtype=acc_dtype)
+    n3 = n ** 3
+    (mx, my, mz), (cx, cy, cz) = slab_axis_factors(grid, n, r.dtype)
+    D = jnp.asarray(D, r.dtype)
+    g3 = diag_metric(jnp.asarray(g3, r.dtype), E, n)
+    acc = _ax._accum(r.dtype, acc_dtype)
+    rext = _ax.sstep_extend_field(r.reshape(E, n3), grid, sz, k)
+    gext = _ax.sstep_extend_field(g3, grid, sz, k)
+    mzext = _ax.sstep_extend_zfactor(mz, sz, k)
+    z2, rtz_b = _ax.nekbone_cheb_apply_pallas(
+        rext, D, D.T, gext, mx, my, mzext, cx, cy, cz,
+        jnp.asarray(coef, acc), n=n, grid=grid, sz=sz, k=k,
+        interpret=interpret, acc_dtype=acc_dtype)
+    return z2.reshape(r.shape), jnp.sum(rtz_b)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,

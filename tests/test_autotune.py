@@ -274,6 +274,67 @@ def test_pick_slab_sz_sstep_keys_carry_s():
         in autotune.cache_info()
 
 
+def test_cheb_candidates_shrink_with_k():
+    """The Chebyshev-apply working set: deeper polynomial -> deeper halo
+    -> a lower VMEM ceiling on sz (DESIGN.md §9.3)."""
+    for grid in ((2, 2, 8), (4, 4, 16)):
+        for n in (4, 10):
+            prev_max = None
+            for k in (1, 2, 4, 8):
+                cands = autotune.candidate_slab_sizes_cheb(grid, n, k)
+                assert cands, (grid, n, k)
+                assert all(grid[2] % sz == 0 for sz in cands)
+                assert cands[-1] == 1
+                if prev_max is not None:
+                    assert cands[0] <= prev_max, (grid, n, k)
+                prev_max = cands[0]
+
+
+def test_pick_slab_sz_cheb_keys_carry_k():
+    """A pick for one Chebyshev order must never serve another — k sets
+    the halo depth (the precond cache-key dimension)."""
+    calls = []
+
+    def measure(sz):
+        calls.append(sz)
+        return float(sz)
+
+    sz_a = autotune.pick_slab_sz_cheb((2, 2, 8), 4, 2, jnp.float32,
+                                      backend="tpu", measure=measure)
+    assert sz_a == 1
+    n_calls = len(calls)
+    autotune.pick_slab_sz_cheb((2, 2, 8), 4, 2, jnp.float32,
+                               backend="tpu", measure=measure)
+    assert len(calls) == n_calls       # same (grid, k): cached
+    autotune.pick_slab_sz_cheb((2, 2, 8), 4, 4, jnp.float32,
+                               backend="tpu", measure=measure)
+    assert len(calls) > n_calls        # different k: fresh sweep
+    info = autotune.cache_info()
+    assert ("cheb", 4, 2, 2, 8, 2, "float32", "float32", "tpu") in info
+    assert ("cheb", 4, 2, 2, 8, 4, "float32", "float32", "tpu") in info
+
+
+def test_pick_slab_sz_precond_key_dimension():
+    """The PCG update kernel's pick is keyed apart from the plain v2 one
+    (one extra live block array), and None keeps the pre-precond key."""
+    calls = []
+
+    def measure(sz):
+        calls.append(sz)
+        return float(sz)
+
+    autotune.pick_slab_sz((2, 2, 8), 4, jnp.float32, backend="tpu",
+                          measure=measure)
+    n_plain = len(calls)
+    autotune.pick_slab_sz((2, 2, 8), 4, jnp.float32, backend="tpu",
+                          precond="jacobi", measure=measure)
+    assert len(calls) > n_plain        # distinct key -> re-measured
+    info = autotune.cache_info()
+    assert ("slab", 4, 2, 2, 8, "float32", "float32", "tpu") in info
+    assert ("slab", 4, 2, 2, 8, "float32", "float32", "tpu",
+            "pc:jacobi") in info
+
+
 def test_corrupt_cache_file_is_tolerated():
     path = autotune.cache_path()
     path.parent.mkdir(parents=True, exist_ok=True)

@@ -229,11 +229,16 @@ def test_cg_fused_v2_rejects_nondiagonal_metric(rng):
                                 niter=2, interpret=True)
 
 
-def test_cg_fused_v2_tol_and_precond_fall_back():
-    """tol-driven and preconditioned solves route to the generic CG."""
+def test_cg_fused_v2_tol_and_precond_stay_fused():
+    """tol-driven and preconditioned v2 solves route to the fused drivers
+    (core/precond.py, DESIGN.md §9) — no fall-back to the XLA path."""
     case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.float32,
                        ax_impl="pallas_fused_cg_v2")
     res, _ = case.solve_manufactured(tol=1e-4, max_iter=100)
     assert int(res.iters) < 100
+    assert float(res.rnorm) <= 1e-4
+    assert res.rnorm_history.shape == (101,)      # padded to max_iter + 1
     res_pc, _ = case.solve_manufactured(niter=10, precond=True)
     assert res_pc.rnorm_history.shape == (11,)
+    assert np.isfinite(np.asarray(res_pc.rnorm_history,
+                                  np.float64)).all()

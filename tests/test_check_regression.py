@@ -16,10 +16,11 @@ BASELINE = (pathlib.Path(__file__).parent.parent / "benchmarks" /
 
 def _payload(**overrides):
     base = {
-        "schema": "repro-bench/3",
-        "schema_version": 3,
+        "schema": "repro-bench/4",
+        "schema_version": 4,
         "streams_per_iter": {"eq2": 30, "fused_v1": 17, "fused_v2": 13,
-                             "sstep_v3": 6.25, "sstep_v3_s1": 13.0},
+                             "sstep_v3": 6.25, "sstep_v3_s1": 13.0,
+                             "fused_v2_jacobi": 14, "fused_v2_cheb": 18},
         "bytes_per_dof_iter": bench_run._precision_table(),
         "sections": [],
     }

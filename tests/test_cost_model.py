@@ -113,6 +113,62 @@ def test_sstep_halo_streams_scaling():
     assert sstep_halo_streams(2, 4) == sstep_halo_streams(8, 4)
 
 
+def test_pcg_stream_budgets():
+    """DESIGN.md §9: Jacobi = v2 + 1 (the fused diagonal stream);
+    Chebyshev = v2 + 5 (the polynomial-apply kernel), k-independent."""
+    from repro.core.cost import (CHEB_V2_READ_STREAMS,
+                                 CHEB_V2_WRITE_STREAMS,
+                                 FUSED_V2_READ_STREAMS,
+                                 FUSED_V2_WRITE_STREAMS,
+                                 JACOBI_V2_READ_STREAMS,
+                                 JACOBI_V2_WRITE_STREAMS, PIPELINE_STREAMS)
+
+    v2 = FUSED_V2_READ_STREAMS + FUSED_V2_WRITE_STREAMS
+    jac = JACOBI_V2_READ_STREAMS + JACOBI_V2_WRITE_STREAMS
+    chb = CHEB_V2_READ_STREAMS + CHEB_V2_WRITE_STREAMS
+    assert jac == v2 + 1 == 14
+    assert chb == v2 + 5 == 18
+    assert PIPELINE_STREAMS["fused_v2_jacobi"] == (10, 4)
+    assert PIPELINE_STREAMS["fused_v2_cheb"] == (13, 5)
+
+
+def test_cheb_halo_and_flops_scaling():
+    from repro.core.cost import (cheb_effective_streams, cheb_flops_per_dof,
+                                 cheb_halo_streams)
+
+    # 4 halo'd fields over 2k ghost slabs per sz-slab block, per iteration
+    assert cheb_halo_streams(4, 4) == 8.0
+    assert cheb_halo_streams(2, 4) == 4.0          # linear in k
+    assert cheb_halo_streams(4, 8) == 4.0          # inverse in sz
+    assert cheb_effective_streams(4, 4) == 18 + 8.0
+    # each polynomial order adds one operator application's flops
+    assert (cheb_flops_per_dof(10, 2) - cheb_flops_per_dof(10, 1)
+            == 12 * 10 + 17 + 6)
+
+
+def test_pcg_bytes_per_dof_iter():
+    from repro.core.cost import bytes_per_dof_iter, fused_v2_plane_streams
+
+    for pol, itemsize in (("f64", 8), ("f32", 4), ("bf16", 2)):
+        assert bytes_per_dof_iter("fused_v2_jacobi", pol) == \
+            (10 * itemsize, 4 * itemsize)
+        assert bytes_per_dof_iter("fused_v2_cheb", pol) == \
+            (13 * itemsize, 5 * itemsize)
+    # bf16 is exactly half of f32 on both rungs (the gate's invariant)
+    for pipe in ("fused_v2_jacobi", "fused_v2_cheb"):
+        assert (sum(bytes_per_dof_iter(pipe, "bf16")) * 2
+                == sum(bytes_per_dof_iter(pipe, "f32")))
+    # exact books: both PCG rungs inherit the v2 plane channel; cheb adds
+    # its per-iteration halo reads (8k/sz at the defaults)
+    half = fused_v2_plane_streams(10, 4) / 2.0
+    rj, wj = bytes_per_dof_iter("fused_v2_jacobi", "f32", exact=True)
+    assert abs(rj - (10 + half) * 4) < 1e-9
+    assert abs(wj - (4 + half) * 4) < 1e-9
+    rc, wc = bytes_per_dof_iter("fused_v2_cheb", "f32", exact=True)
+    assert abs(rc - (13 + half + 8.0) * 4) < 1e-9
+    assert abs(wc - (5 + half) * 4) < 1e-9
+
+
 def test_bytes_per_dof_iter_exact_mode():
     """exact=True folds in the side channels: v2 boundary planes (split
     evenly read/write), v3 halo (reads only); eq2/v1 are unchanged."""

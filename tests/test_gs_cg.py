@@ -70,6 +70,67 @@ def test_cg_fixed_iters_matches_paper_protocol():
     assert res.rnorm_history.shape == (101,)
 
 
+def test_cg_tol_early_exit_and_history_padding(x64):
+    """The while_loop path: iters < max_iter, NaN padding past the exit."""
+    case = NekboneCase(n=6, grid=(2, 2, 2), dtype=jnp.float64)
+    _, f = case.manufactured()
+    max_iter = 200
+    res = cg(case.ax_full, f, tol=1e-6, max_iter=max_iter, dot=case.dot())
+    it = int(res.iters)
+    hist = np.asarray(res.rnorm_history)
+    assert 0 < it < max_iter
+    assert hist.shape == (max_iter + 1,)
+    assert np.isfinite(hist[:it + 1]).all()
+    assert np.isnan(hist[it + 1:]).all()
+    # unpreconditioned: the stopping rtz IS r·c·r, so the recorded final
+    # norm satisfies the tolerance
+    assert float(res.rnorm) <= 1e-6
+    assert float(res.rnorm) == hist[it]
+
+
+@pytest.mark.parametrize("dtype,tol,hist_rtol", [
+    # the restart recomputes b - A x0, so its r0 differs from the first
+    # stage's recursively-updated residual by the true-vs-recursive gap —
+    # O(eps * kappa) of the working dtype
+    (jnp.float32, 1e-4, 1e-3),
+    (jnp.float64, 1e-9, 1e-10),
+])
+def test_cg_restart_from_x0(dtype, tol, hist_rtol, x64):
+    """x0 != 0 restarts: a split solve continues where the first left off."""
+    case = NekboneCase(n=6, grid=(2, 2, 2), dtype=dtype)
+    _, f = case.manufactured()
+    stage1 = cg(case.ax_full, f, tol=tol, max_iter=15, dot=case.dot())
+    assert int(stage1.iters) == 15          # capped, not converged
+    stage2 = cg(case.ax_full, f, x0=stage1.x, tol=tol, max_iter=400,
+                dot=case.dot())
+    assert float(stage2.rnorm) <= tol
+    # the restart's initial residual is the first stage's final one
+    h1, h2 = np.asarray(stage1.rnorm_history), np.asarray(stage2.rnorm_history)
+    np.testing.assert_allclose(h2[0], h1[15], rtol=hist_rtol)
+    # restarting from the converged solution exits before iterating
+    stage3 = cg(case.ax_full, f, x0=stage2.x, tol=tol, max_iter=400,
+                dot=case.dot())
+    assert int(stage3.iters) == 0
+    assert np.isnan(np.asarray(stage3.rnorm_history)[1:]).all()
+
+
+def test_cg_fixed_iters_x0_restart_matches_protocol(x64):
+    """cg_fixed_iters with x0: runs exactly niter more, residual drops."""
+    case = NekboneCase(n=6, grid=(2, 2, 2), dtype=jnp.float64)
+    _, f = case.manufactured()
+    from repro.core.cg import cg_fixed_iters
+
+    first = cg_fixed_iters(case.ax_full, f, niter=10, dot=case.dot())
+    second = cg_fixed_iters(case.ax_full, f, niter=10, x0=first.x,
+                            dot=case.dot())
+    assert int(second.iters) == 10
+    assert float(second.rnorm) < float(first.rnorm)
+    straight = cg_fixed_iters(case.ax_full, f, niter=20, dot=case.dot())
+    # a restart discards the Krylov space, so it trails the straight run —
+    # but not by orders of magnitude on a well-conditioned case
+    assert float(second.rnorm) < float(straight.rnorm) * 1e3
+
+
 def test_mixed_precision_iterative_refinement(x64):
     """IR with an f32 inner CG reaches f64-grade residuals (DESIGN.md §5)."""
     case64 = NekboneCase(n=6, grid=(2, 2, 2), dtype=jnp.float64)

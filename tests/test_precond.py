@@ -1,0 +1,462 @@
+"""Preconditioning subsystem (core/precond.py, DESIGN.md §9).
+
+fp64 interpret-mode parity of the fused Jacobi / Chebyshev PCG pipelines
+against the reference preconditioned solvers, the tolerance-driven
+drivers' prefix/padding semantics, the Lanczos interval estimator, the
+Chebyshev scalar algebra, and the case/config wiring — plus the ISSUE-5
+acceptance case (Chebyshev-PCG(4) reaches 1e-8 on the paper's
+E=1024/n=10 grid inside the 100-iteration protocol the unpreconditioned
+pipeline cannot).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core.cg as cg_mod
+import repro.core.gs as gs_mod
+from repro.core import precond as pc
+from repro.core.cg_fused import cg_fused_v2_fixed_iters
+from repro.core.nekbone import NekboneCase
+
+# fp64 parity budget: round-off through the different partial-sum
+# associations plus (Jacobi) the z-carried reformulation's reciprocal
+# reconstruction — both eps-level per iteration (DESIGN.md §9.2).
+RTOL = 1e-10
+
+
+def _random_rhs(case, seed=0):
+    """A random assembled ("continuous") masked right-hand side."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=case.mask.shape), case.dtype)
+    return gs_mod.ds_sum_local(u, case.grid) * case.mask
+
+
+def _assert_parity(ref, fused, rtol=RTOL):
+    h_ref = np.asarray(ref.rnorm_history)
+    h_fus = np.asarray(fused.rnorm_history)
+    assert h_fus.shape == h_ref.shape
+    np.testing.assert_allclose(h_fus, h_ref, rtol=0, atol=rtol * h_ref[0])
+    xs = np.abs(np.asarray(ref.x)).max() + 1e-300
+    np.testing.assert_allclose(np.asarray(fused.x), np.asarray(ref.x),
+                               atol=rtol * xs)
+
+
+# ---------------------------------------------------------------------------
+# operator diagonal
+# ---------------------------------------------------------------------------
+
+def test_operator_diagonal_matches_assembled_operator(x64):
+    """diag entries equal (A e_u)|_u for continuous unit indicators e_u."""
+    case = NekboneCase(n=3, grid=(2, 2, 2), dtype=jnp.float64)
+    diag = np.asarray(case.operator_diagonal())
+    mask = np.asarray(case.mask)
+    mult = np.asarray(case.mult)
+    rng = np.random.default_rng(3)
+    flat_idx = rng.choice(mask.size, size=12, replace=False)
+    for fi in flat_idx:
+        idx = np.unravel_index(fi, mask.shape)
+        if mask[idx] == 0:
+            assert diag[idx] == 1.0       # masked rows: identity-like
+            continue
+        # continuous indicator: 1 on every coincident copy of the node —
+        # assembling a single-copy impulse marks exactly those copies.
+        e = np.zeros(mask.shape)
+        e[idx] = 1.0
+        spread = np.asarray(gs_mod.ds_sum_local(jnp.asarray(e), case.grid))
+        e = (spread != 0).astype(np.float64)
+        got = float(np.asarray(case.ax_full(jnp.asarray(e)))[idx])
+        np.testing.assert_allclose(got, diag[idx], rtol=1e-12)
+    assert mult.min() >= 1.0              # sanity: mesh fields loaded
+
+
+# ---------------------------------------------------------------------------
+# Chebyshev scalars
+# ---------------------------------------------------------------------------
+
+def test_cheb_scalars_error_polynomial_bound():
+    """The recurrence realizes the Chebyshev minimax error on [a, b].
+
+    Emulating the kernel recurrence on scalars (A = lambda) must give
+    ``z = q_k(lambda)`` with ``|1 - lambda q_k|`` <= 1/T_k(sigma1) on the
+    interval and ``q_k > 0`` there (the SPD property PCG rests on).
+    """
+    a, b = 0.03, 2.7
+    for k in (1, 2, 4, 6):
+        coef = pc.cheb_scalars(k, a, b)
+        sigma1 = (b + a) / (b - a)
+        bound = 1.0 / np.cosh(k * np.arccosh(sigma1))
+        lam = np.linspace(a, b, 101)
+        d = coef[0, 0] * np.ones_like(lam)
+        z = d.copy()
+        res = np.ones_like(lam)
+        for i in range(1, k + 1):
+            res = res - lam * d
+            d = coef[i, 0] * d + coef[i, 1] * res
+            z = z + d
+        err = np.abs(1.0 - lam * z)
+        assert err.max() <= bound * (1 + 1e-9), (k, err.max(), bound)
+        assert z.min() > 0.0, f"q_{k} not positive on the interval"
+
+
+def test_cheb_scalars_rejects_bad_interval():
+    with pytest.raises(ValueError, match="lmin < lmax"):
+        pc.cheb_scalars(2, 1.0, 0.5)
+    with pytest.raises(ValueError, match="order"):
+        pc.cheb_scalars(0, 0.1, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Lanczos interval estimate
+# ---------------------------------------------------------------------------
+
+def test_estimate_interval_brackets_rayleigh_quotients(x64):
+    case = NekboneCase(n=4, grid=(2, 2, 3), dtype=jnp.float64)
+    lmin, lmax = pc.estimate_interval(case.D, case.g, case.grid, case.mask,
+                                      case.c)
+    assert 0.0 < lmin < lmax
+    rng = np.random.default_rng(7)
+    dot = case.dot()
+    for seed in range(5):
+        v = _random_rhs(case, seed=rng.integers(1 << 30))
+        num = float(dot(v, case.ax_full(v)))
+        den = float(dot(v, v))
+        rayleigh = num / den
+        # lmax is inflated 5% above the top Ritz value (the SPD-critical
+        # end), lmin deflated 10% below the bottom one — any Rayleigh
+        # quotient of a continuous masked vector must fall inside.
+        assert lmin * 0.999 <= rayleigh <= lmax * 1.001, (
+            rayleigh, lmin, lmax)
+    # consistency with the one-sided power-iteration estimate theta ~ ||A||
+    from repro.core.cg_sstep import estimate_theta
+
+    theta = estimate_theta(case.D, case.g, case.grid, case.mask)
+    assert lmax >= 0.8 * theta
+
+
+# ---------------------------------------------------------------------------
+# fused Jacobi-PCG parity (the ISSUE-5 'randomized grids' acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,grid,seed", [
+    (4, (2, 2, 2), 0),
+    (5, (2, 3, 4), 1),
+    (3, (1, 2, 4), 2),
+    (6, (3, 1, 2), 3),
+])
+def test_pcg_jacobi_fused_matches_reference_fp64(x64, n, grid, seed):
+    case = NekboneCase(n=n, grid=grid, dtype=jnp.float64)
+    f = _random_rhs(case, seed=seed)
+    diag = case.operator_diagonal()
+    ref = cg_mod.cg_fixed_iters(
+        case.ax_full, f, niter=10, dot=case.dot(),
+        precond=cg_mod.jacobi_preconditioner(diag))
+    fused = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=10,
+        precond=pc.JacobiPrecond(invdiag=1.0 / diag), mask=case.mask,
+        c=case.c, interpret=True)
+    _assert_parity(ref, fused)
+
+
+@pytest.mark.parametrize("sz", [1, 2, 4])
+def test_pcg_jacobi_invariant_to_slab_split(x64, sz):
+    case = NekboneCase(n=4, grid=(2, 2, 4), dtype=jnp.float64)
+    f = _random_rhs(case, seed=4)
+    diag = case.operator_diagonal()
+    ref = cg_mod.cg_fixed_iters(
+        case.ax_full, f, niter=6, dot=case.dot(),
+        precond=cg_mod.jacobi_preconditioner(diag))
+    fused = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=6,
+        precond=pc.JacobiPrecond(invdiag=1.0 / diag), sz=sz,
+        interpret=True)
+    _assert_parity(ref, fused)
+
+
+# ---------------------------------------------------------------------------
+# fused Chebyshev-PCG parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_pcg_cheb_fused_matches_reference_fp64(x64, k):
+    case = NekboneCase(n=5, grid=(2, 3, 4), dtype=jnp.float64)
+    f = _random_rhs(case, seed=5)
+    lmin, lmax = pc.estimate_interval(case.D, case.g, case.grid, case.mask,
+                                      case.c)
+    ref = cg_mod.cg_fixed_iters(
+        case.ax_full, f, niter=10, dot=case.dot(),
+        precond=pc.chebyshev_preconditioner(case.ax_full, k, lmin, lmax))
+    fused = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=10,
+        precond=pc.ChebyshevPrecond(k=k, lmin=lmin, lmax=lmax),
+        mask=case.mask, c=case.c, interpret=True)
+    _assert_parity(ref, fused)
+
+
+@pytest.mark.parametrize("cheb_sz", [1, 2, 4])
+def test_pcg_cheb_invariant_to_slab_split(x64, cheb_sz):
+    """The cheb kernel's halo'd slab split changes only associations."""
+    case = NekboneCase(n=4, grid=(2, 2, 4), dtype=jnp.float64)
+    f = _random_rhs(case, seed=6)
+    spec = pc.ChebyshevPrecond(k=2, lmin=0.05, lmax=3.0)
+    base = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=6, precond=spec,
+        cheb_sz=4, interpret=True)
+    other = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=6, precond=spec,
+        cheb_sz=cheb_sz, interpret=True)
+    _assert_parity(base, other, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# tolerance-driven fused solves
+# ---------------------------------------------------------------------------
+
+def test_cg_fused_tol_prefix_padding_and_early_exit(x64):
+    case = NekboneCase(n=5, grid=(2, 3, 4), dtype=jnp.float64)
+    _, f = case.manufactured()
+    fixed = cg_fused_v2_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                                    niter=20, mask=case.mask, c=case.c,
+                                    interpret=True)
+    h_fix = np.asarray(fixed.rnorm_history)
+    # target the second-to-last entry: the first crossing is guaranteed
+    # to sit strictly inside (0, 20), so the while_loop genuinely exits
+    # early (tol at the history *minimum* would run the full budget).
+    tol = float(h_fix[-2]) * (1.0 + 1e-12)
+    res = pc.cg_fused_tol(f, D=case.D, g=case.g, grid=case.grid, tol=tol,
+                          max_iter=20, mask=case.mask, c=case.c,
+                          interpret=True)
+    it = int(res.iters)
+    h = np.asarray(res.rnorm_history)
+    assert 0 < it < 20                            # a real early exit
+    assert h.shape == (21,)                       # padded to max_iter + 1
+    # the trajectory is the fixed-iteration one's prefix, by construction
+    np.testing.assert_array_equal(h[:it + 1], h_fix[:it + 1])
+    assert np.isnan(h[it + 1:]).all()             # untouched entries: NaN
+    assert float(res.rnorm) <= tol
+    assert float(res.rnorm) == h[it]
+
+
+def test_cg_fused_tol_max_iter_cap(x64):
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.float64)
+    _, f = case.manufactured()
+    res = pc.cg_fused_tol(f, D=case.D, g=case.g, grid=case.grid, tol=0.0,
+                          max_iter=7, mask=case.mask, c=case.c,
+                          interpret=True)
+    assert int(res.iters) == 7
+    assert np.isfinite(np.asarray(res.rnorm_history)).all()
+
+
+@pytest.mark.parametrize("precond", ["jacobi", "cheb"])
+def test_cg_fused_tol_pcg_prefix_of_fixed(x64, precond):
+    """The PCG tol drivers share their bodies with the fixed-iter ones."""
+    case = NekboneCase(n=4, grid=(2, 2, 4), dtype=jnp.float64)
+    _, f = case.manufactured()
+    spec = (pc.JacobiPrecond(invdiag=1.0 / case.operator_diagonal())
+            if precond == "jacobi"
+            else pc.ChebyshevPrecond(k=2, lmin=0.05, lmax=3.0))
+    fixed = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=15, precond=spec,
+        mask=case.mask, c=case.c, interpret=True)
+    h_fix = np.asarray(fixed.rnorm_history)
+    # stop on the rtz measure mid-trajectory: pick an rcr level the run
+    # is known to pass through (rtz and rcr track each other within the
+    # preconditioner's spectral scale, so the stop lands inside the run)
+    res = pc.cg_fused_tol(f, D=case.D, g=case.g, grid=case.grid,
+                          tol=float(h_fix[-2]), max_iter=15, precond=spec,
+                          mask=case.mask, c=case.c, interpret=True)
+    it = int(res.iters)
+    h = np.asarray(res.rnorm_history)
+    assert 0 < it <= 15
+    np.testing.assert_array_equal(h[:it + 1], h_fix[:it + 1])
+    if it < 15:
+        assert np.isnan(h[it + 1:]).all()
+
+
+def test_pcg_reduces_iterations_to_threshold(x64):
+    """Jacobi and Chebyshev cross a residual threshold before plain CG."""
+    case = NekboneCase(n=5, grid=(2, 3, 4), dtype=jnp.float64)
+    _, f = case.manufactured()
+    niter = 40
+    plain = cg_fused_v2_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                                    niter=niter, mask=case.mask, c=case.c,
+                                    interpret=True)
+    h0 = float(plain.rnorm_history[0])
+    thresh = 1e-6 * h0
+
+    def crossing(res):
+        h = np.asarray(res.rnorm_history)
+        idx = np.nonzero(h <= thresh)[0]
+        return int(idx[0]) if idx.size else niter + 1
+
+    jac = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=niter,
+        precond=pc.JacobiPrecond(invdiag=1.0 / case.operator_diagonal()),
+        mask=case.mask, c=case.c, interpret=True)
+    lmin, lmax = pc.estimate_interval(case.D, case.g, case.grid, case.mask,
+                                      case.c)
+    chb = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=niter,
+        precond=pc.ChebyshevPrecond(k=4, lmin=lmin, lmax=lmax),
+        mask=case.mask, c=case.c, interpret=True)
+    assert crossing(jac) < crossing(plain)
+    assert crossing(chb) < crossing(jac)
+
+
+# ---------------------------------------------------------------------------
+# s-step tolerance stopping (DESIGN.md §9.4)
+# ---------------------------------------------------------------------------
+
+def test_cg_sstep_tol_prefix_and_iteration_granularity(x64):
+    from repro.core.cg_sstep import cg_sstep_fixed_iters, estimate_theta
+
+    case = NekboneCase(n=5, grid=(2, 2, 4), dtype=jnp.float64)
+    _, f = case.manufactured()
+    theta = estimate_theta(case.D, case.g, case.grid, case.mask)
+    fixed = cg_sstep_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                                 niter=20, s=4, mask=case.mask, c=case.c,
+                                 theta=theta, interpret=True)
+    h_fix = np.asarray(fixed.rnorm_history)
+    # a mid-cycle target (index 10 of s=4 cycles) exercises the
+    # recurrence re-run: the driver must stop at iteration granularity,
+    # not cycle granularity.
+    tol = float(h_fix[10]) * (1.0 + 1e-9)
+    res = cg_sstep_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                               niter=20, s=4, mask=case.mask, c=case.c,
+                               theta=theta, tol=tol, interpret=True)
+    it = int(res.iters)
+    h = np.asarray(res.rnorm_history)
+    assert it == 10
+    assert h.shape == (it + 1,)
+    np.testing.assert_allclose(h[:it], h_fix[:it], rtol=1e-12)
+    assert float(res.rnorm) <= tol
+
+
+def test_cg_sstep_tol_through_case(x64):
+    cfg_case = NekboneCase(n=4, grid=(2, 2, 4), dtype=jnp.float64,
+                           ax_impl="pallas_sstep_v3")
+    res, _ = cfg_case.solve_manufactured(tol=1e-6, max_iter=100)
+    assert 0 < int(res.iters) < 100
+    assert float(res.rnorm) <= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# precision policies compose
+# ---------------------------------------------------------------------------
+
+def test_pcg_jacobi_f32_converges():
+    case = NekboneCase(n=5, grid=(2, 2, 4), dtype=jnp.float32)
+    _, f = case.manufactured()
+    res = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=30,
+        precond=pc.JacobiPrecond(invdiag=1.0 / case.operator_diagonal()),
+        mask=case.mask, c=case.c, interpret=True, precision="f32")
+    h = np.asarray(res.rnorm_history)
+    assert np.isfinite(h).all()
+    assert h[-1] < h[0] * 1e-3
+
+
+def test_pcg_jacobi_bf16_runs(x64):
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.float64)
+    _, f = case.manufactured()
+    res = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=5,
+        precond=pc.JacobiPrecond(invdiag=1.0 / case.operator_diagonal()),
+        mask=case.mask, c=case.c, interpret=True, precision="bf16")
+    assert res.x.dtype == jnp.bfloat16
+    h = np.asarray(res.rnorm_history, np.float64)
+    assert np.isfinite(h).all()
+    assert h[-1] < h[0]
+
+
+# ---------------------------------------------------------------------------
+# case / config wiring
+# ---------------------------------------------------------------------------
+
+def test_case_and_config_precond_wiring(x64):
+    from repro.configs.nekbone import NekboneConfig
+
+    cfg = NekboneConfig(name="t", n=4, grid=(2, 2, 4), dtype="float64",
+                        ax_impl="pallas_fused_cg_v2", precond="jacobi")
+    case = cfg.make_case()
+    assert case.precond == "jacobi"
+    res, _ = case.solve_manufactured(niter=8)
+    ref = cg_mod.cg_fixed_iters(
+        case.ax_full, case.manufactured()[1], niter=8, dot=case.dot(),
+        precond=cg_mod.jacobi_preconditioner(case.operator_diagonal()))
+    _assert_parity(ref, res)
+    # per-solve override: False forces the plain pipeline
+    plain, _ = case.solve_manufactured(niter=8, precond=False)
+    ref_plain = cg_mod.cg_fixed_iters(case.ax_full, case.manufactured()[1],
+                                      niter=8, dot=case.dot())
+    _assert_parity(ref_plain, plain)
+    # cheb_k flows from the config into the spec
+    cfg_c = NekboneConfig(name="t2", n=4, grid=(2, 2, 4), dtype="float64",
+                          ax_impl="pallas_fused_cg_v2", precond="cheb",
+                          cheb_k=2)
+    case_c = cfg_c.make_case()
+    assert case_c.precond_spec().k == 2
+
+
+def test_case_solve_precond_true_backcompat(x64):
+    """solve(precond=True) keeps meaning Jacobi, on every ax_impl."""
+    case = NekboneCase(n=5, grid=(2, 2, 2), dtype=jnp.float64)
+    r_pc, _ = case.solve_manufactured(tol=1e-8, max_iter=400, precond=True)
+    r_pl, _ = case.solve_manufactured(tol=1e-8, max_iter=400, precond=False)
+    assert int(r_pc.iters) < int(r_pl.iters)
+
+
+def test_case_tol_solve_routes_to_fused_v2(x64):
+    """niter=None v2 solves run the fused while_loop driver, not XLA cg."""
+    case = NekboneCase(n=4, grid=(2, 2, 4), dtype=jnp.float64,
+                       ax_impl="pallas_fused_cg_v2")
+    res, _ = case.solve_manufactured(tol=1e-6, max_iter=100)
+    assert 0 < int(res.iters) < 100
+    assert float(res.rnorm) <= 1e-6
+    assert res.rnorm_history.shape == (101,)
+
+
+def test_make_preconditioner_names():
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.float32)
+    jac = pc.make_preconditioner("jacobi", D=case.D, g=case.g,
+                                 grid=case.grid, mask=case.mask, c=case.c)
+    assert isinstance(jac, pc.JacobiPrecond)
+    chb = pc.make_preconditioner("cheb2", D=case.D, g=case.g,
+                                 grid=case.grid, mask=case.mask, c=case.c)
+    assert isinstance(chb, pc.ChebyshevPrecond) and chb.k == 2
+    with pytest.raises(ValueError, match="unknown preconditioner"):
+        pc.make_preconditioner("ilu", D=case.D, g=case.g, grid=case.grid,
+                               mask=case.mask)
+
+
+# ---------------------------------------------------------------------------
+# the ISSUE-5 acceptance case: paper grid, solve-to-1e-8
+# ---------------------------------------------------------------------------
+
+def test_cheb_pcg_paper_case_beats_unpreconditioned(x64):
+    """Chebyshev-PCG(4) reaches rnorm <= 1e-8 on the paper's E=1024/n=10
+    case in measurably fewer iterations than unpreconditioned v2 — which
+    cannot reach it within the paper's 100-iteration protocol at all
+    (it stalls ~2.4e-6 absolute; ISSUE-5 acceptance).
+    """
+    case = NekboneCase(n=10, grid=(8, 8, 16), dtype=jnp.float64)
+    _, f = case.manufactured()
+    plain = cg_fused_v2_fixed_iters(f, D=case.D, g=case.g, grid=case.grid,
+                                    niter=100, mask=case.mask, c=case.c,
+                                    interpret=True)
+    h_plain = np.asarray(plain.rnorm_history)
+    assert h_plain.min() > 1e-8, "plain v2 unexpectedly reached 1e-8"
+
+    lmin, lmax = pc.estimate_interval(case.D, case.g, case.grid, case.mask,
+                                      case.c)
+    # cheb_sz=16 (one z-block): interpret-mode halo redundancy is the
+    # dominant wall-clock cost, and the split only changes associations
+    # (pinned by test_pcg_cheb_invariant_to_slab_split).
+    chb = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=34,
+        precond=pc.ChebyshevPrecond(k=4, lmin=lmin, lmax=lmax),
+        mask=case.mask, c=case.c, cheb_sz=16, interpret=True)
+    h_chb = np.asarray(chb.rnorm_history)
+    crossed = np.nonzero(h_chb <= 1e-8)[0]
+    assert crossed.size, "Chebyshev-PCG(4) did not reach 1e-8 in 34 iters"
+    assert int(crossed[0]) < 100, "not fewer iterations than plain's >100"
