@@ -177,6 +177,35 @@ def run():
                                          n=n)
             rows.append((f"pcg_cheb_bytes_{pol}_n{n}", 0.0,
                          f"B/dof/iter={rb + wb:g};exact={re_ + we:.2f}"))
+
+        # --- sharded scaling ladder (DESIGN.md §10) -----------------------
+        # Per-device effective streams of the z-sharded drivers, from the
+        # collective cost model (no multi-device execution here — the
+        # parity and collective-count facts behind these numbers are
+        # carried by tests/distributed_checks.py).  Strong scaling holds
+        # the paper grid's EZ=32 and splits it d ways: the collective
+        # channel (8/ez_local for s-step) grows as local slabs shrink.
+        # Weak scaling holds ez_local=8: per-device traffic is flat in d —
+        # the flat rows *are* the claim, pinned by the gate.
+        for d in (1, 2, 4, 8):
+            eff = sstep_effective_streams(SSTEP_DEFAULT_S, 4, ndev=d, ez=32)
+            rows.append((f"sstep_v3_sharded_strong_d{d}_n{n}", 0.0,
+                         f"eff={eff:g};ez_local={32 // d}"))
+        for d in (1, 2, 4, 8):
+            eff = sstep_effective_streams(SSTEP_DEFAULT_S, 4, ndev=d,
+                                          ez=8 * d)
+            rows.append((f"sstep_v3_sharded_weak_d{d}_n{n}", 0.0,
+                         f"eff={eff:g};ez_local=8"))
+        for pol in ("f64", "f32", "bf16"):
+            rj, wj = bytes_per_dof_iter("fused_v2_jacobi", pol, exact=True,
+                                        n=n, ndev=8, ez=32)
+            rows.append((f"pcg_jacobi_sharded_d8_{pol}_n{n}", 0.0,
+                         f"exactB/dof/iter={rj + wj:g}"))
+            rc, wc = bytes_per_dof_iter("fused_v2_cheb", pol, exact=True,
+                                        n=n, ndev=8, ez=32)
+            rows.append((f"pcg_cheb_sharded_d8_{pol}_n{n}", 0.0,
+                         f"exactB/dof/iter={rc + wc:g}"
+                         f";eff={cheb_effective_streams(CHEB_DEFAULT_K, 4, ndev=8, ez=32, n=n):g}"))
     return rows
 
 

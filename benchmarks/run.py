@@ -75,6 +75,15 @@ def _precision_table() -> dict:
     in the modeled side channels (v2 boundary planes, v3 matrix-powers
     halo — ``cost.bytes_per_dof_iter(exact=True)`` at the paper's n=10
     with the default slab split).
+
+    The ``<pipeline>_d8`` rows (schema v5, DESIGN.md §10) price the
+    *sharded* pipelines at the 8-device strong-scaling point of the paper
+    grid (EZ=32, ez_local=4): exact books only — ``read``/``write`` are
+    ``bytes_per_dof_iter(exact=True, ndev=8, ez=32)``, the per-device
+    collective channel folded in and split evenly — since a headline
+    column that ignores the network would be meaningless for a
+    distributed rung.  The bf16 == f32/2 invariant holds there too (every
+    channel scales with the storage itemsize).
     """
     from repro.core import cost
 
@@ -87,12 +96,56 @@ def _precision_table() -> dict:
             table[pipeline][pol] = {"read": rb, "write": wb,
                                     "read_exact": round(re_, 4),
                                     "write_exact": round(we, 4)}
+    for pipeline in ("fused_v2", "fused_v2_jacobi", "fused_v2_cheb",
+                     "sstep_v3"):
+        entry = {}
+        for pol in ("f64", "f32", "bf16"):
+            re_, we = cost.bytes_per_dof_iter(pipeline, pol, exact=True,
+                                              ndev=8, ez=32)
+            entry[pol] = {"read": round(re_, 4), "write": round(we, 4)}
+        table[pipeline + "_d8"] = entry
     return table
+
+
+def _streams_ladder() -> dict:
+    """The Eq.-2 fusion ladder (reads+writes per DOF per CG iteration) —
+    the cross-PR perf-trajectory headline the gate matches *exactly*.
+
+    The s-step rung is amortized per iteration (4s+9 streams per s
+    iterations, DESIGN.md §8); its s=1 point must stay exactly the v2
+    number.  The PCG rungs (DESIGN.md §9) are per-iteration too: Jacobi is
+    v2 + 1 (the fused diagonal stream), Chebyshev is v2 + 5 (the
+    polynomial apply kernel) with the win booked in iteration count.  The
+    ``*_sharded_d8`` rungs (DESIGN.md §10) are *effective* per-device
+    streams of the z-sharded drivers at the 8-device strong-scaling point
+    (EZ=32): headline + halo + the per-device collective channel.
+    """
+    from repro.core import cost
+
+    return {
+        "eq2": cost.CG_READ_STREAMS + cost.CG_WRITE_STREAMS,
+        "fused_v1": (cost.FUSED_CG_READ_STREAMS
+                     + cost.FUSED_CG_WRITE_STREAMS),
+        "fused_v2": (cost.FUSED_V2_READ_STREAMS
+                     + cost.FUSED_V2_WRITE_STREAMS),
+        "sstep_v3": sum(cost.sstep_streams(cost.SSTEP_DEFAULT_S)),
+        "sstep_v3_s1": sum(cost.sstep_streams(1)),
+        "fused_v2_jacobi": (cost.JACOBI_V2_READ_STREAMS
+                            + cost.JACOBI_V2_WRITE_STREAMS),
+        "fused_v2_cheb": (cost.CHEB_V2_READ_STREAMS
+                          + cost.CHEB_V2_WRITE_STREAMS),
+        "sstep_v3_sharded_d8": cost.sstep_effective_streams(
+            cost.SSTEP_DEFAULT_S, 4, ndev=8, ez=32),
+        "fused_v2_jacobi_sharded_d8": (
+            cost.JACOBI_V2_READ_STREAMS + cost.JACOBI_V2_WRITE_STREAMS
+            + cost.v2_plane_collective_streams(10, 32 // 8)),
+        "fused_v2_cheb_sharded_d8": cost.cheb_effective_streams(
+            cost.CHEB_DEFAULT_K, 4, ndev=8, ez=32, n=10),
+    }
 
 
 def main() -> None:
     from benchmarks import bench_ax_versions, bench_cost_model, bench_roofline
-    from repro.core import cost
 
     sections = []
     print("name,us_per_call,derived")
@@ -109,33 +162,15 @@ def main() -> None:
                          "rows": rows})
 
     payload = {
-        "schema": "repro-bench/4",
+        "schema": "repro-bench/5",
         # monotone int for forward-compat decisions (check_regression.py
         # warns on version skew instead of failing on unknown tables).
-        "schema_version": 4,
+        # v5: sharded rungs — *_sharded_d8 ladder entries and the
+        # <pipeline>_d8 per-device byte rows (DESIGN.md §10).
+        "schema_version": 5,
         "tag": os.environ.get("REPRO_BENCH_TAG", "local"),
         "quick": bool(os.environ.get("REPRO_BENCH_QUICK")),
-        # the Eq.-2 fusion ladder this repo climbs (reads+writes per DOF
-        # per CG iteration) — the cross-PR perf-trajectory headline.  The
-        # s-step rung is amortized per iteration (4s+9 streams per s
-        # iterations, DESIGN.md §8); its s=1 point must stay exactly the
-        # v2 number — the gate holds that identity across PRs.  The PCG
-        # rungs (DESIGN.md §9) are per-iteration too: Jacobi is v2 + 1
-        # (the fused diagonal stream), Chebyshev is v2 + 5 (the polynomial
-        # apply kernel) with the win booked in iteration count, not here.
-        "streams_per_iter": {
-            "eq2": cost.CG_READ_STREAMS + cost.CG_WRITE_STREAMS,
-            "fused_v1": (cost.FUSED_CG_READ_STREAMS
-                         + cost.FUSED_CG_WRITE_STREAMS),
-            "fused_v2": (cost.FUSED_V2_READ_STREAMS
-                         + cost.FUSED_V2_WRITE_STREAMS),
-            "sstep_v3": sum(cost.sstep_streams(cost.SSTEP_DEFAULT_S)),
-            "sstep_v3_s1": sum(cost.sstep_streams(1)),
-            "fused_v2_jacobi": (cost.JACOBI_V2_READ_STREAMS
-                                + cost.JACOBI_V2_WRITE_STREAMS),
-            "fused_v2_cheb": (cost.CHEB_V2_READ_STREAMS
-                              + cost.CHEB_V2_WRITE_STREAMS),
-        },
+        "streams_per_iter": _streams_ladder(),
         # the second axis of the ladder (DESIGN.md §7): bytes each stream
         # carries under each precision policy, per DOF per iteration.
         "bytes_per_dof_iter": _precision_table(),

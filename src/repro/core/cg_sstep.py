@@ -62,7 +62,8 @@ from repro.core.precision import resolve_policy
 from repro.kernels import autotune as _autotune
 from repro.kernels import nekbone_ax as _ax
 
-__all__ = ["cg_sstep_fixed_iters", "sstep_recurrence", "estimate_theta"]
+__all__ = ["cg_sstep_fixed_iters", "sstep_recurrence", "cycle_coefficients",
+           "estimate_theta"]
 
 
 def sstep_recurrence(G: np.ndarray, s: int, m: int, theta: float):
@@ -118,6 +119,36 @@ def sstep_recurrence(G: np.ndarray, s: int, m: int, theta: float):
         a = b + beta * a
         rtz = rtz_new
     return e, b, a, rtz_hist
+
+
+def cycle_coefficients(G: np.ndarray, s: int, m: int, theta: float,
+                       tol2: float | None = None):
+    """One cycle's recurrence + in-cycle tolerance resolution, shared by the
+    single-device driver below and the sharded one
+    (:func:`repro.distributed.sstep.cg_sstep_sharded_fixed_iters`).
+
+    Runs :func:`sstep_recurrence` for ``m`` steps; with ``tol2`` set,
+    applies :func:`repro.core.cg.cg`'s stopping rule at *iteration*
+    granularity — stop before the first iteration whose start-of-iteration
+    ``rtz`` is ``<= tol2`` — by re-running the O(s^2) f64 recurrence for
+    the shorter count, so the update kernel applies exactly the iterations
+    taken.
+
+    Returns ``(coef, rtzs, m)``: the stacked f64 ``(3, 2s+1)`` coefficient
+    block (x/r/p rows — the update kernel's layout), the ``m``
+    start-of-iteration rtz values actually run, and the resolved step
+    count (``m == 0`` means the tolerance was already met at cycle start
+    and nothing should be applied).
+    """
+    e_c, b_c, a_c, rtzs = sstep_recurrence(G, s, m, theta)
+    if tol2 is not None:
+        stop = next((j for j, v in enumerate(rtzs) if abs(v) <= tol2), None)
+        if stop is not None:
+            if stop == 0:
+                return None, [], 0
+            e_c, b_c, a_c, rtzs = sstep_recurrence(G, s, stop, theta)
+            m = stop
+    return np.stack([e_c, b_c, a_c]), rtzs, m
 
 
 @functools.partial(jax.jit, static_argnames=("grid", "iters"))
@@ -288,23 +319,16 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
             p2, r2, D_op, D_op.T, gext, mx, my, mzext, cx, cy, cz,
             inv_theta, n=n, grid=grid, sz=sz, s=s, interpret=interpret,
             acc_name=policy.accum)
-        # the policy's gram dtype is always float64 (PrecisionPolicy.gram)
+        # the policy's gram dtype is always float64 (PrecisionPolicy.gram);
+        # cycle_coefficients resolves the in-cycle stop (run only the
+        # iterations whose start rtz is still above tol^2 — exactly cg()'s
+        # while_loop semantics).
         G = np.asarray(jnp.sum(gram_b, axis=0), np.dtype(policy.gram))
-        e_c, b_c, a_c, rtzs = sstep_recurrence(G, s, m, theta)
-        if tol2 is not None:
-            # in-cycle stop: run only the iterations whose start rtz is
-            # still above tol^2 (exactly cg()'s while_loop semantics); the
-            # O(s^2) f64 recurrence is re-run for the shorter count so the
-            # update kernel applies exactly the iterations taken.
-            stop = next((j for j, v in enumerate(rtzs)
-                         if abs(v) <= tol2), None)
-            if stop is not None:
-                if stop == 0:
-                    break
-                e_c, b_c, a_c, rtzs = sstep_recurrence(G, s, stop, theta)
-                m = stop
+        coef_np, rtzs, m = cycle_coefficients(G, s, m, theta, tol2)
+        if m == 0:
+            break
         hist.extend(np.sqrt(np.abs(v)) for v in rtzs)
-        coef = jnp.asarray(np.stack([e_c, b_c, a_c]), acc)
+        coef = jnp.asarray(coef_np, acc)
         x2, r2, p2, rcr_b = _ax.nekbone_sstep_update_pallas(
             x2, p2, r2, basis, coef, cx, cy, cz, n=n, grid=grid, sz=sz,
             s=s, interpret=interpret, acc_dtype=policy.accum)

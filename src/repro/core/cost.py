@@ -30,7 +30,9 @@ __all__ = ["flops_per_dof", "cg_iter_flops", "cg_iter_bytes", "intensity",
            "sstep_intensity", "JACOBI_V2_READ_STREAMS",
            "JACOBI_V2_WRITE_STREAMS", "CHEB_V2_READ_STREAMS",
            "CHEB_V2_WRITE_STREAMS", "CHEB_DEFAULT_K", "cheb_halo_streams",
-           "cheb_effective_streams", "cheb_flops_per_dof"]
+           "cheb_effective_streams", "cheb_flops_per_dof",
+           "sstep_collective_streams", "cheb_collective_streams",
+           "v2_plane_collective_streams"]
 
 # Eq. 2's stream counts: fp64 words moved per DOF per CG iteration when the
 # operator, mask, and every inner product run as separate passes.
@@ -105,11 +107,66 @@ def sstep_halo_streams(s: int, sz: int) -> float:
     return 2.0 * 5.0 * float(s) / (float(sz) * float(s))
 
 
-def sstep_effective_streams(s: int, sz: int) -> float:
-    """Headline + halo side channel: total effective streams/iteration of
-    the v3 pipeline.  <= 9 at the default (s, sz) = (4, 4): 6.25 + 2.5."""
+def sstep_collective_streams(s: int, ez_local: int) -> float:
+    """Per-device stream-equivalents of the sharded s-step halo exchange
+    (DESIGN.md §10), per iteration.
+
+    Per cycle each device sends its s top and s bottom slabs of *two*
+    fields (p and r, stacked into one exchange) and receives the same from
+    its neighbours: ``2 fields * s slabs * 2 directions`` slab transfers
+    each way.  A slab is ``1/ez_local`` of a device-local field, and every
+    transfer both reads the send buffer and writes the receive buffer, so
+    the cycle costs ``2 * 2*2*s / ez_local`` stream-fractions —
+    ``8/ez_local`` per iteration after the 1/s amortization (the two s
+    factors cancel, exactly as in :func:`sstep_halo_streams`; the depth
+    scales with s, the per-iteration cost does not).  This is the network
+    side channel the single-device accounting has no slot for; compare
+    one exchange *per iteration* (``8s/ez_local``-equivalent) to see the
+    communication-avoiding win."""
+    return 2.0 * 2.0 * 2.0 * float(s) / (float(ez_local) * float(s))
+
+
+def cheb_collective_streams(k: int, ez_local: int) -> float:
+    """Per-device stream-equivalents of the sharded Chebyshev apply's
+    k-deep residual ghost exchange, per iteration: 1 field * k slabs * 2
+    directions, sent and received, every iteration — ``4k/ez_local``
+    (no 1/s amortization, like :func:`cheb_halo_streams`)."""
+    return 2.0 * 2.0 * float(k) / float(ez_local)
+
+
+def v2_plane_collective_streams(n: int, ez_local: int) -> float:
+    """Per-device stream-equivalents of the sharded v2-family plane stitch
+    (one boundary plane per direction per iteration, sent and received):
+    ``4 / (n * ez_local)`` — the cross-shard slice of
+    :func:`fused_v2_plane_streams`."""
+    return 2.0 * 2.0 / (float(n) * float(ez_local))
+
+
+def _local_ez(ndev: int, ez: int | None) -> int:
+    if ndev == 1:
+        return 0                      # unused: collective terms are zero
+    if ez is None:
+        raise ValueError("ndev > 1 needs the global EZ (ez=) to size the "
+                         "per-device halo")
+    if ez % ndev:
+        raise ValueError(f"EZ {ez} not divisible by ndev {ndev}")
+    return ez // ndev
+
+
+def sstep_effective_streams(s: int, sz: int, ndev: int = 1,
+                            ez: int | None = None) -> float:
+    """Headline + halo side channel (+ the per-device collective channel
+    when ``ndev > 1``): total effective streams/iteration of the v3
+    pipeline.  <= 9 at the default (s, sz) = (4, 4): 6.25 + 2.5.
+    ``ndev=1`` is the exact single-device identity (no collective term);
+    ``ndev > 1`` needs the global ``ez`` and adds
+    :func:`sstep_collective_streams` at ``ez_local = ez/ndev``."""
     r, w = sstep_streams(s)
-    return r + w + sstep_halo_streams(s, sz)
+    total = r + w + sstep_halo_streams(s, sz)
+    ez_l = _local_ez(ndev, ez)
+    if ndev > 1:
+        total += sstep_collective_streams(s, ez_l)
+    return total
 
 
 def sstep_intensity(n: int, s: int, itemsize: int = 8) -> float:
@@ -159,10 +216,19 @@ def cheb_halo_streams(k: int, sz: int) -> float:
     return 2.0 * 4.0 * float(k) / float(sz)
 
 
-def cheb_effective_streams(k: int, sz: int) -> float:
-    """Headline + halo: total effective streams/iter of Chebyshev-PCG."""
-    return (CHEB_V2_READ_STREAMS + CHEB_V2_WRITE_STREAMS
-            + cheb_halo_streams(k, sz))
+def cheb_effective_streams(k: int, sz: int, ndev: int = 1,
+                           ez: int | None = None, n: int = 10) -> float:
+    """Headline + halo: total effective streams/iter of Chebyshev-PCG.
+    ``ndev > 1`` adds the per-device collective channel (residual ghosts
+    + the v2 plane stitch at the given ``n``) at ``ez_local = ez/ndev``;
+    ``ndev=1`` is the exact single-device identity."""
+    total = (CHEB_V2_READ_STREAMS + CHEB_V2_WRITE_STREAMS
+             + cheb_halo_streams(k, sz))
+    ez_l = _local_ez(ndev, ez)
+    if ndev > 1:
+        total += cheb_collective_streams(k, ez_l)
+        total += v2_plane_collective_streams(n, ez_l)
+    return total
 
 
 def cheb_flops_per_dof(n: int, k: int = CHEB_DEFAULT_K) -> int:
@@ -272,7 +338,8 @@ def precision_itemsize(precision) -> int:
 def bytes_per_dof_iter(pipeline: str, precision, *, exact: bool = False,
                        n: int = 10, sz: int = 4,
                        s: int = SSTEP_DEFAULT_S,
-                       k: int = CHEB_DEFAULT_K) -> tuple[float, float]:
+                       k: int = CHEB_DEFAULT_K, ndev: int = 1,
+                       ez: int | None = None) -> tuple[float, float]:
     """(read_bytes, write_bytes) per DOF per CG iteration for a pipeline
     rung under a precision policy — the ndof-independent quantity the CI
     regression gate diffs (benchmarks/check_regression.py).
@@ -288,18 +355,46 @@ def bytes_per_dof_iter(pipeline: str, precision, *, exact: bool = False,
     fused_v1 rungs have no modeled side channel (v1's uncounted assembly
     pass follows the original §3.3 books, see DESIGN.md §6), so their
     exact numbers equal the headline ones.
+
+    ``ndev > 1`` (needs the global ``ez`` and ``exact=True``) adds the
+    per-device collective channel of the *sharded* pipelines (DESIGN.md
+    §10): the s-step ghost-slab exchange
+    (:func:`sstep_collective_streams`), the Chebyshev residual ghosts
+    (:func:`cheb_collective_streams`), and the v2-family plane stitch
+    (:func:`v2_plane_collective_streams`), each split evenly into the
+    send-buffer read and the receive-buffer write.  ``ndev=1`` is the
+    exact single-device identity; pipelines without a sharded variant
+    (eq2, fused_v1) reject ``ndev > 1`` rather than silently reporting
+    single-device traffic.
     """
     reads, writes = PIPELINE_STREAMS[pipeline]
     if pipeline == "sstep_v3" and s != SSTEP_DEFAULT_S:
         reads, writes = sstep_streams(s)
+    if ndev > 1 and pipeline not in ("sstep_v3", "fused_v2",
+                                     "fused_v2_jacobi", "fused_v2_cheb"):
+        raise ValueError(f"pipeline {pipeline!r} has no sharded variant; "
+                         "ndev > 1 is not meaningful for it")
+    if ndev > 1 and not exact:
+        raise ValueError("ndev > 1 only affects the exact accounting; "
+                         "pass exact=True")
     if exact:
+        ez_l = _local_ez(ndev, ez)
         if pipeline in ("fused_v2", "fused_v2_jacobi", "fused_v2_cheb"):
             half = fused_v2_plane_streams(n, sz) / 2.0
             reads, writes = reads + half, writes + half
             if pipeline == "fused_v2_cheb":
                 reads = reads + cheb_halo_streams(k, sz)
+            if ndev > 1:
+                half_c = v2_plane_collective_streams(n, ez_l) / 2.0
+                reads, writes = reads + half_c, writes + half_c
+                if pipeline == "fused_v2_cheb":
+                    half_k = cheb_collective_streams(k, ez_l) / 2.0
+                    reads, writes = reads + half_k, writes + half_k
         elif pipeline == "sstep_v3":
             reads = reads + sstep_halo_streams(s, sz)
+            if ndev > 1:
+                half_s = sstep_collective_streams(s, ez_l) / 2.0
+                reads, writes = reads + half_s, writes + half_s
     itemsize = precision_itemsize(precision)
     return reads * itemsize, writes * itemsize
 

@@ -1,7 +1,8 @@
-"""Distributed substrate: sharding rules, compression, overlap, CP attention."""
+"""Distributed substrate: sharding rules, compression, overlap, CP attention,
+and the sharded Nekbone solvers (s-step CG + PCG, DESIGN.md §10)."""
 from repro.distributed import (compression, context_parallel, overlap,  # noqa: F401
-                               sharding)
+                               pcg, sharding, sstep)
 from repro.distributed.sharding import RULES, AxisRules, constrain
 
-__all__ = ["compression", "context_parallel", "overlap", "sharding",
-           "RULES", "AxisRules", "constrain"]
+__all__ = ["compression", "context_parallel", "overlap", "pcg", "sharding",
+           "sstep", "RULES", "AxisRules", "constrain"]

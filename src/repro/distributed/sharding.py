@@ -21,7 +21,50 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["AxisRules", "constrain", "current_mesh", "RULES", "set_rules"]
+__all__ = ["AxisRules", "constrain", "current_mesh", "RULES", "set_rules",
+           "solver_mesh", "shard_leading", "replicate"]
+
+
+# ---------------------------------------------------------------------------
+# solver mesh helpers (distributed/sstep.py, distributed/pcg.py): the sharded
+# Nekbone drivers run on a 1-D mesh whose single axis carries the z element
+# slabs — a much simpler world than the pod/data/model production mesh above.
+# ---------------------------------------------------------------------------
+
+def solver_mesh(ndev: int | None = None, axis_name: str = "z",
+                devices=None):
+    """A 1-D mesh over ``ndev`` devices for the sharded solver drivers.
+
+    Defaults to every visible device.  Falls back to the plain ``Mesh``
+    constructor where ``jax.make_mesh`` predates the ``devices`` argument,
+    so sub-meshes (shard-count sweeps in the tests) work across the jax
+    span this repo supports.
+    """
+    import numpy as np
+    from repro import compat
+
+    if devices is None:
+        devices = jax.devices()
+    if ndev is None:
+        ndev = len(devices)
+    devs = np.asarray(devices[:ndev])
+    if ndev == len(jax.devices()) and devices is jax.devices():
+        return compat.make_mesh((ndev,), (axis_name,))
+    try:
+        return compat.make_mesh((ndev,), (axis_name,), devices=devs)
+    except TypeError:
+        return jax.sharding.Mesh(devs.reshape(ndev), (axis_name,))
+
+
+def shard_leading(x: jnp.ndarray, mesh, axis_name: str) -> jnp.ndarray:
+    """``device_put`` with the leading axis split over ``axis_name``."""
+    return jax.device_put(
+        x, jax.sharding.NamedSharding(mesh, P(axis_name)))
+
+
+def replicate(x: jnp.ndarray, mesh) -> jnp.ndarray:
+    """``device_put`` fully replicated on ``mesh``."""
+    return jax.device_put(x, jax.sharding.NamedSharding(mesh, P()))
 
 
 def current_mesh():

@@ -658,12 +658,21 @@ def nekbone_cg_update_pallas(x2: jnp.ndarray, p2: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def sstep_extend_field(f2: jnp.ndarray, grid: tuple[int, int, int], sz: int,
-                       halo: int) -> jnp.ndarray:
+                       halo: int, below: jnp.ndarray | None = None,
+                       above: jnp.ndarray | None = None) -> jnp.ndarray:
     """Gather per-block halo windows of a z-major field, zero-padded.
 
     Args:
       f2: (E, ...) element-major field (z-major over ``grid``); trailing
           dims are carried through.
+      below/above: optional ``halo``-deep ghost slabs replacing the zero
+          padding at the low/high z end — ``(halo, EY*EX, ...)`` (any
+          layout reshapeable to it).  This is the distributed halo hook
+          (distributed/sstep.py): when ``grid`` is a *shard-local* grid,
+          the neighbour shards' boundary slabs go here and the resulting
+          windows are exactly the single-device ones (zeros remain the
+          correct padding at the global domain ends, where
+          ``gs.halo_exchange_z`` delivers zeros).
     Returns (EZ//sz, (sz + 2*halo)*EY*EX, ...): block ``i`` holds slabs
     ``[i*sz - halo, i*sz + sz + halo)`` with zeros past the domain ends —
     the matrix-powers ghost region of the v3 powers kernel.  (A production
@@ -676,24 +685,36 @@ def sstep_extend_field(f2: jnp.ndarray, grid: tuple[int, int, int], sz: int,
     L = sz + 2 * halo
     rest = f2.shape[1:]
     f = f2.reshape((ez, ey * ex) + rest)
-    pad = jnp.zeros((halo,) + f.shape[1:], f2.dtype)
-    fp = jnp.concatenate([pad, f, pad], axis=0)
+    pad_shape = (halo,) + f.shape[1:]
+    pb = (jnp.zeros(pad_shape, f2.dtype) if below is None
+          else below.reshape(pad_shape).astype(f2.dtype))
+    pa = (jnp.zeros(pad_shape, f2.dtype) if above is None
+          else above.reshape(pad_shape).astype(f2.dtype))
+    fp = jnp.concatenate([pb, f, pa], axis=0)
     idx = jnp.arange(nblk)[:, None] * sz + jnp.arange(L)[None, :]
     return fp[idx].reshape((nblk, L * ey * ex) + rest)
 
 
-def sstep_extend_zfactor(fz: jnp.ndarray, sz: int, halo: int) -> jnp.ndarray:
+def sstep_extend_zfactor(fz: jnp.ndarray, sz: int, halo: int,
+                         below: jnp.ndarray | None = None,
+                         above: jnp.ndarray | None = None) -> jnp.ndarray:
     """Per-block halo windows of a per-axis z factor ``(EZ, n)``.
 
     Out-of-domain halo rows are padded with ones: the fields there are
     zero (``sstep_extend_field``), so the factor value is inert, and ones
-    never introduce false Dirichlet zeros.  Returns (EZ//sz, sz+2*halo, n).
+    never introduce false Dirichlet zeros.  ``below``/``above`` replace
+    the pad with neighbour-shard factor rows ``(halo, n)`` when ``fz`` is
+    a shard-local slice (the distributed hook, as in
+    :func:`sstep_extend_field`).  Returns (EZ//sz, sz+2*halo, n).
     """
     ez, n = fz.shape
     nblk = ez // sz
     L = sz + 2 * halo
-    pad = jnp.ones((halo, n), fz.dtype)
-    fp = jnp.concatenate([pad, fz, pad], axis=0)
+    pb = (jnp.ones((halo, n), fz.dtype) if below is None
+          else below.reshape(halo, n).astype(fz.dtype))
+    pa = (jnp.ones((halo, n), fz.dtype) if above is None
+          else above.reshape(halo, n).astype(fz.dtype))
+    fp = jnp.concatenate([pb, fz, pa], axis=0)
     idx = jnp.arange(nblk)[:, None] * sz + jnp.arange(L)[None, :]
     return fp[idx]
 

@@ -3,7 +3,16 @@
 Invoked by tests/test_distributed.py (the device-count flag must be set
 before jax initializes, so it cannot run in the main pytest process).
 Prints one ``OK <name>`` line per passing check; exits non-zero on failure.
+
+Usage:
+    python tests/distributed_checks.py            # run every check
+    python tests/distributed_checks.py NAME ...   # run named checks only
+    python tests/distributed_checks.py --list     # print check names
+
+Check names live in the ``CHECKS`` registry; ``test_distributed.py``
+parametrizes one subprocess per name so a failure pinpoints its check.
 """
+import contextlib
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -21,6 +30,17 @@ def check(name, cond):
     if not cond:
         raise SystemExit(f"FAIL {name}")
     print(f"OK {name}", flush=True)
+
+
+@contextlib.contextmanager
+def _x64():
+    """Enable f64 for the fp64-round-off parity checks, restore after."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", old)
 
 
 def mesh2d():
@@ -416,19 +436,284 @@ def check_elastic_checkpoint_reshard():
               back["x"].sharding.spec == P(None, "data"))
 
 
-if __name__ == "__main__":
-    check("device_count", jax.device_count() == 8)
-    check_compressed_psum()
-    check_collective_matmul()
-    check_cp_decode_attention()
-    check_sharded_gather_scatter()
-    check_sharded_gs_hierarchical()
-    check_sharded_nekbone_cg()
-    check_fused_cg_sharded()
-    check_fused_cg_sharded_precision()
-    check_seq_sharded_attention()
-    check_seq_sharded_decode()
-    check_moe_shardmap_equals_local()
-    check_pipeline_parallel()
-    check_elastic_checkpoint_reshard()
+def check_collective_matmul_colsharded():
+    """Collective matmul, column-sharded weight layout: each shard holds a
+    column slice of w and produces its column slice of all_gather(x) @ w —
+    the ring body is layout-agnostic, only the specs change."""
+    from repro.distributed.overlap import collective_matmul_allgather
+
+    mesh = mesh1d("model")
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 24)), jnp.float32)
+
+    def f(x_shard, w_cols):
+        return collective_matmul_allgather(x_shard, w_cols, "model")
+
+    y = jax.jit(shard_map(
+        f, mesh=mesh, in_specs=(P("model"), P(None, "model")),
+        out_specs=P(None, "model"), check_vma=False))(x, w)
+    err = float(jnp.abs(y - x @ w).max())
+    check("collective_matmul_colsharded", err < 1e-4)
+
+
+def check_collective_matmul_sweep():
+    """Collective matmul over 1/2/4/8-device sub-meshes (solver_mesh)."""
+    from repro.distributed.overlap import collective_matmul_allgather
+    from repro.distributed.sharding import solver_mesh
+
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    want = x @ w
+
+    def f(x_shard, w_rep):
+        return collective_matmul_allgather(x_shard, w_rep, "model")
+
+    for p in (1, 2, 4, 8):
+        mesh = solver_mesh(p, axis_name="model")
+        y = jax.jit(shard_map(
+            f, mesh=mesh, in_specs=(P("model"), P()), out_specs=P(),
+            check_vma=False))(x, w)
+        err = float(jnp.abs(y - want).max())
+        check(f"collective_matmul_p{p}", err < 1e-4)
+
+
+# -- sharded Nekbone solvers (DESIGN.md §10) --------------------------------
+
+def _sstep_sharded_parity(s, grid, sz, niter, label):
+    """Sharded s-step CG == single-device trajectory to fp64 round-off.
+
+    ``niter`` stays pre-asymptotic (the in-cycle history floor caveat of
+    tests/test_cg_sstep.py: once the residual collapses many orders within
+    one cycle, late history entries sit at the f64-Gram round-off floor in
+    *both* drivers but need not agree bitwise)."""
+    with _x64():
+        from repro.core.cg_sstep import cg_sstep_fixed_iters
+        from repro.core.nekbone import NekboneCase
+        from repro.distributed.sstep import cg_sstep_sharded_fixed_iters
+
+        case = NekboneCase(n=4, grid=grid, dtype=jnp.float64)
+        _, f = case.manufactured()
+        kw = dict(D=case.D, g=case.g, grid=grid, niter=niter, s=s,
+                  mask=case.mask, c=case.c, sz=sz, theta=2.25,
+                  interpret=True)
+        ref = cg_sstep_fixed_iters(f, **kw)
+        got = cg_sstep_sharded_fixed_iters(f, ndev=8, **kw)
+        h_ref = np.asarray(ref.rnorm_history, np.float64)
+        h = np.asarray(got.rnorm_history, np.float64)
+        check(f"{label}_hist",
+              h.shape == h_ref.shape
+              and float(np.abs(h - h_ref).max()) < 1e-9 * h_ref[0])
+        xs = np.asarray(got.x, np.float64)
+        rs = np.asarray(ref.x, np.float64)
+        scale = float(np.abs(rs).max()) + 1e-30
+        check(f"{label}_x", float(np.abs(xs - rs).max()) < 1e-8 * scale)
+
+
+def check_sstep_sharded_s1():
+    _sstep_sharded_parity(1, (2, 2, 16), 2, 10, "sstep_sharded_s1")
+
+
+def check_sstep_sharded_s2():
+    _sstep_sharded_parity(2, (2, 2, 16), 2, 10, "sstep_sharded_s2")
+
+
+def check_sstep_sharded_s4():
+    # EZ=32 over 8 shards: ez_local=4 >= s=4 (single-neighbour halo)
+    _sstep_sharded_parity(4, (1, 2, 32), 2, 8, "sstep_sharded_s4")
+
+
+def check_sstep_collective_counts():
+    """The acceptance contract: exactly one stacked halo exchange
+    (2 ppermutes) and one Gram psum per cycle; collective-free update.
+    Covers both cycle paths: thin shards (single powers call) and the
+    interior/boundary overlap split."""
+    from repro.distributed.sstep import cycle_collective_counts
+
+    cases = (
+        (1, 1, (2, 2, 16)),   # thin: 2*nb >= nblk, single powers call
+        (2, 2, (2, 2, 16)),
+        (4, 2, (1, 2, 32)),
+        (1, 1, (1, 1, 32)),   # ez_local=4, nblk=4: interior/boundary split
+    )
+    for s, sz, grid in cases:
+        counts = cycle_collective_counts(grid=grid, n=4, s=s, sz=sz, ndev=8)
+        check(f"sstep_counts_s{s}_sz{sz}_ez{grid[2]}",
+              counts["cycle"] == {"ppermute": 2, "psum": 1}
+              and counts["update"] == {})
+
+
+def check_pcg_jacobi_sharded():
+    """Sharded Jacobi PCG == single-device fused-v2 trajectory (f64)."""
+    with _x64():
+        from repro.core.nekbone import NekboneCase
+        from repro.core.precond import pcg_fused_v2_fixed_iters
+        from repro.distributed.pcg import pcg_sharded_fixed_iters
+
+        grid = (2, 2, 16)
+        case = NekboneCase(n=4, grid=grid, dtype=jnp.float64)
+        _, f = case.manufactured()
+        kw = dict(D=case.D, g=case.g, grid=grid, niter=12,
+                  precond="jacobi", mask=case.mask, c=case.c, sz=2,
+                  interpret=True)
+        ref = pcg_fused_v2_fixed_iters(f, **kw)
+        got = pcg_sharded_fixed_iters(f, ndev=8, **kw)
+        h_ref = np.asarray(ref.rnorm_history, np.float64)
+        h = np.asarray(got.rnorm_history, np.float64)
+        ok = np.isfinite(h_ref)
+        check("pcg_jacobi_sharded_hist",
+              float(np.abs(h[ok] - h_ref[ok]).max()) < 1e-10 * h_ref[0])
+        xs = np.asarray(got.x, np.float64)
+        rs = np.asarray(ref.x, np.float64)
+        scale = float(np.abs(rs).max()) + 1e-30
+        check("pcg_jacobi_sharded_x",
+              float(np.abs(xs - rs).max()) < 1e-9 * scale)
+
+
+def check_pcg_cheb_sharded():
+    """Sharded Chebyshev PCG == single-device fused-v2 trajectory (f64).
+
+    ``cheb2``: k=2 ghost slabs <= ez_local=2 on the 8-way split of EZ=16.
+    """
+    with _x64():
+        from repro.core.nekbone import NekboneCase
+        from repro.core.precond import pcg_fused_v2_fixed_iters
+        from repro.distributed.pcg import pcg_sharded_fixed_iters
+
+        grid = (2, 2, 16)
+        case = NekboneCase(n=4, grid=grid, dtype=jnp.float64)
+        _, f = case.manufactured()
+        kw = dict(D=case.D, g=case.g, grid=grid, niter=12,
+                  precond="cheb2", mask=case.mask, c=case.c, sz=2,
+                  cheb_sz=2, interpret=True)
+        ref = pcg_fused_v2_fixed_iters(f, **kw)
+        got = pcg_sharded_fixed_iters(f, ndev=8, **kw)
+        h_ref = np.asarray(ref.rnorm_history, np.float64)
+        h = np.asarray(got.rnorm_history, np.float64)
+        ok = np.isfinite(h_ref)
+        check("pcg_cheb_sharded_hist",
+              float(np.abs(h[ok] - h_ref[ok]).max()) < 1e-10 * h_ref[0])
+        xs = np.asarray(got.x, np.float64)
+        rs = np.asarray(ref.x, np.float64)
+        scale = float(np.abs(rs).max()) + 1e-30
+        check("pcg_cheb_sharded_x",
+              float(np.abs(xs - rs).max()) < 1e-9 * scale)
+
+
+def check_pcg_sharded_precision():
+    """Sharded PCG under the f32/bf16 storage policies (DESIGN.md §7):
+    SPMD-uniform on 8 devices and within policy round-off of the
+    single-device pipeline at the same policy."""
+    from repro.core.nekbone import NekboneCase
+    from repro.core.precond import pcg_fused_v2_fixed_iters
+    from repro.distributed.pcg import pcg_sharded_fixed_iters
+
+    grid = (2, 2, 16)
+    for precond, policy, tol in (("jacobi", "f32", 1e-4),
+                                 ("jacobi", "bf16", 2e-2),
+                                 ("cheb2", "f32", 1e-4)):
+        case = NekboneCase(n=4, grid=grid, dtype=jnp.float32)
+        _, f = case.manufactured()
+        kw = dict(D=case.D, g=case.g, grid=grid, niter=12, precond=precond,
+                  mask=case.mask, c=case.c, sz=2, cheb_sz=2,
+                  interpret=True, precision=policy)
+        ref = pcg_fused_v2_fixed_iters(f, **kw)
+        got = pcg_sharded_fixed_iters(f, ndev=8, **kw)
+        check(f"pcg_sharded_{precond}_{policy}_dtype",
+              got.x.dtype == ref.x.dtype)
+        xs = np.asarray(got.x, np.float64)
+        rs = np.asarray(ref.x, np.float64)
+        scale = float(np.abs(rs).max()) + 1e-30
+        check(f"pcg_sharded_{precond}_{policy}_x",
+              float(np.abs(xs - rs).max()) < tol * scale)
+        h = np.asarray(got.rnorm_history, np.float64)
+        h_ref = np.asarray(ref.rnorm_history, np.float64)
+        # early history tracks tightly; late entries drift chaotically once
+        # storage round-off feeds back through alpha/beta (same budget as
+        # check_fused_cg_sharded_precision) — finiteness + net decrease pin
+        # the tail.
+        check(f"pcg_sharded_{precond}_{policy}_hist",
+              np.isfinite(h).all()
+              and float(np.abs(h[:8] - h_ref[:8]).max()) < tol * h_ref[0]
+              and h[-1] < h[0])
+
+
+def check_pcg_sharded_tol_prefix():
+    """Tol-driven sharded PCG is a bitwise prefix of the fixed-iteration
+    trajectory (the tol2 = -1 sentinel contract of core/precond.py)."""
+    with _x64():
+        from repro.core.nekbone import NekboneCase
+        from repro.distributed.pcg import (pcg_sharded_fixed_iters,
+                                           pcg_sharded_tol)
+
+        grid = (2, 2, 16)
+        case = NekboneCase(n=4, grid=grid, dtype=jnp.float64)
+        _, f = case.manufactured()
+        kw = dict(D=case.D, g=case.g, grid=grid, precond="jacobi",
+                  mask=case.mask, c=case.c, sz=2, interpret=True)
+        full = pcg_sharded_fixed_iters(f, niter=20, ndev=8, **kw)
+        tol = float(np.asarray(full.rnorm_history, np.float64)[12]) * 1.01
+        got = pcg_sharded_tol(f, tol=tol, max_iter=20, ndev=8, **kw)
+        kk = int(got.iters)
+        check("pcg_sharded_tol_stops", 0 < kk < 20)
+        h = np.asarray(got.rnorm_history, np.float64)
+        h_full = np.asarray(full.rnorm_history, np.float64)
+        check("pcg_sharded_tol_prefix",
+              np.array_equal(h[:kk + 1], h_full[:kk + 1]))
+        check("pcg_sharded_tol_nan_tail",
+              np.isnan(h[kk + 1:]).all())
+
+
+# ---------------------------------------------------------------------------
+# registry + CLI
+# ---------------------------------------------------------------------------
+
+CHECKS = {
+    "device_count": lambda: check("device_count", jax.device_count() == 8),
+    "compressed_psum": check_compressed_psum,
+    "collective_matmul": check_collective_matmul,
+    "collective_matmul_colsharded": check_collective_matmul_colsharded,
+    "collective_matmul_sweep": check_collective_matmul_sweep,
+    "cp_decode_attention": check_cp_decode_attention,
+    "sharded_gather_scatter": check_sharded_gather_scatter,
+    "sharded_gs_hierarchical": check_sharded_gs_hierarchical,
+    "sharded_nekbone_cg": check_sharded_nekbone_cg,
+    "fused_cg_sharded": check_fused_cg_sharded,
+    "fused_cg_sharded_precision": check_fused_cg_sharded_precision,
+    "sstep_sharded_s1": check_sstep_sharded_s1,
+    "sstep_sharded_s2": check_sstep_sharded_s2,
+    "sstep_sharded_s4": check_sstep_sharded_s4,
+    "sstep_collective_counts": check_sstep_collective_counts,
+    "pcg_jacobi_sharded": check_pcg_jacobi_sharded,
+    "pcg_cheb_sharded": check_pcg_cheb_sharded,
+    "pcg_sharded_precision": check_pcg_sharded_precision,
+    "pcg_sharded_tol_prefix": check_pcg_sharded_tol_prefix,
+    "seq_sharded_attention": check_seq_sharded_attention,
+    "seq_sharded_decode": check_seq_sharded_decode,
+    "moe_shardmap_equals_local": check_moe_shardmap_equals_local,
+    "pipeline_parallel": check_pipeline_parallel,
+    "elastic_checkpoint_reshard": check_elastic_checkpoint_reshard,
+}
+
+
+def main(argv=None):
+    import sys
+
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--list" in argv:
+        for name in CHECKS:
+            print(name)
+        return
+    names = argv or list(CHECKS)
+    unknown = [a for a in names if a not in CHECKS]
+    if unknown:
+        raise SystemExit(
+            f"unknown checks {unknown}; see --list for valid names")
+    for name in names:
+        CHECKS[name]()
     print("ALL-DISTRIBUTED-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,16 +16,32 @@ BASELINE = (pathlib.Path(__file__).parent.parent / "benchmarks" /
 
 def _payload(**overrides):
     base = {
-        "schema": "repro-bench/4",
-        "schema_version": 4,
-        "streams_per_iter": {"eq2": 30, "fused_v1": 17, "fused_v2": 13,
-                             "sstep_v3": 6.25, "sstep_v3_s1": 13.0,
-                             "fused_v2_jacobi": 14, "fused_v2_cheb": 18},
+        "schema": "repro-bench/5",
+        "schema_version": 5,
+        "streams_per_iter": bench_run._streams_ladder(),
         "bytes_per_dof_iter": bench_run._precision_table(),
         "sections": [],
     }
     base.update(overrides)
     return base
+
+
+def test_streams_ladder_values():
+    """The ladder run.py publishes: the 30 -> 17 -> 13 -> 6.25 fusion
+    story plus the §10 sharded rungs at the 8-device EZ=32 point."""
+    ladder = bench_run._streams_ladder()
+    assert ladder["eq2"] == 30
+    assert ladder["fused_v1"] == 17
+    assert ladder["fused_v2"] == 13
+    assert ladder["sstep_v3"] == 6.25
+    assert ladder["sstep_v3_s1"] == 13.0
+    assert ladder["fused_v2_jacobi"] == 14
+    assert ladder["fused_v2_cheb"] == 18
+    # sharded: headline + halo + the per-device collective channel
+    assert ladder["sstep_v3_sharded_d8"] == 6.25 + 2.5 + 2.0
+    assert abs(ladder["fused_v2_jacobi_sharded_d8"] - 14.1) < 1e-12
+    assert abs(ladder["fused_v2_cheb_sharded_d8"] - (18 + 8 + 4 + 0.1)) \
+        < 1e-12
 
 
 # ---------------------------------------------------------------------------

@@ -208,3 +208,86 @@ def test_sstep_intensity_scales():
 
     assert abs(sstep_intensity(10, 1) - fused_v2_intensity(10)) < 1e-12
     assert sstep_intensity(10, 4) > 2 * fused_v2_intensity(10) * 0.95
+
+
+# ---------------------------------------------------------------------------
+# sharded collective accounting (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def test_collective_stream_values():
+    """s-step: 8/ez_local per iteration, s-independent (the two s factors
+    cancel — communication-avoidance shows up against a per-iteration
+    exchange, not in this number); cheb: 4k/ez_local; v2 plane stitch:
+    4/(n*ez_local)."""
+    from repro.core.cost import (cheb_collective_streams,
+                                 sstep_collective_streams,
+                                 v2_plane_collective_streams)
+
+    assert sstep_collective_streams(4, 4) == 2.0
+    assert sstep_collective_streams(1, 4) == 2.0      # s-independent
+    assert sstep_collective_streams(4, 8) == 1.0      # inverse in ez_local
+    assert cheb_collective_streams(4, 4) == 4.0
+    assert cheb_collective_streams(2, 4) == 2.0       # linear in k
+    assert abs(v2_plane_collective_streams(10, 4) - 0.1) < 1e-12
+
+
+def test_effective_streams_ndev1_identity():
+    """ndev=1 is the exact single-device identity — with or without ez —
+    and ndev>1 adds exactly the collective channel."""
+    from repro.core.cost import (cheb_collective_streams,
+                                 cheb_effective_streams,
+                                 sstep_effective_streams,
+                                 v2_plane_collective_streams)
+
+    base = sstep_effective_streams(4, 4)
+    assert sstep_effective_streams(4, 4, ndev=1) == base
+    assert sstep_effective_streams(4, 4, ndev=1, ez=32) == base
+    assert (sstep_effective_streams(4, 4, ndev=8, ez=32)
+            == base + 2.0)                            # + 8/ez_local
+    cbase = cheb_effective_streams(4, 4)
+    assert cheb_effective_streams(4, 4, ndev=1, ez=32) == cbase
+    assert (cheb_effective_streams(4, 4, ndev=8, ez=32, n=10)
+            == cbase + cheb_collective_streams(4, 4)
+            + v2_plane_collective_streams(10, 4))
+
+
+def test_effective_streams_ndev_validation():
+    import pytest
+
+    from repro.core.cost import sstep_effective_streams
+
+    with pytest.raises(ValueError, match="needs the global EZ"):
+        sstep_effective_streams(4, 4, ndev=8)
+    with pytest.raises(ValueError, match="not divisible"):
+        sstep_effective_streams(4, 4, ndev=8, ez=30)
+
+
+def test_bytes_per_dof_iter_ndev():
+    """ndev threads through the exact books: the collective channel is
+    split evenly read/write; ndev=1 stays the identity; eq2/fused_v1 and
+    non-exact calls reject ndev>1 instead of lying."""
+    import pytest
+
+    from repro.core.cost import (bytes_per_dof_iter, cheb_collective_streams,
+                                 sstep_collective_streams,
+                                 v2_plane_collective_streams)
+
+    assert (bytes_per_dof_iter("sstep_v3", "f32", exact=True, ndev=1, ez=32)
+            == bytes_per_dof_iter("sstep_v3", "f32", exact=True))
+    r1, w1 = bytes_per_dof_iter("sstep_v3", "f32", exact=True, sz=4)
+    r8, w8 = bytes_per_dof_iter("sstep_v3", "f32", exact=True, sz=4,
+                                ndev=8, ez=32)
+    half = sstep_collective_streams(4, 32 // 8) / 2.0 * 4
+    assert abs(r8 - r1 - half) < 1e-9 and abs(w8 - w1 - half) < 1e-9
+    rc1, wc1 = bytes_per_dof_iter("fused_v2_cheb", "f32", exact=True)
+    rc8, wc8 = bytes_per_dof_iter("fused_v2_cheb", "f32", exact=True,
+                                  ndev=8, ez=32)
+    halfc = (cheb_collective_streams(4, 4)
+             + v2_plane_collective_streams(10, 4)) / 2.0 * 4
+    assert abs(rc8 - rc1 - halfc) < 1e-9 and abs(wc8 - wc1 - halfc) < 1e-9
+    with pytest.raises(ValueError, match="no sharded variant"):
+        bytes_per_dof_iter("eq2", "f32", exact=True, ndev=8, ez=32)
+    with pytest.raises(ValueError, match="no sharded variant"):
+        bytes_per_dof_iter("fused_v1", "f32", exact=True, ndev=8, ez=32)
+    with pytest.raises(ValueError, match="exact=True"):
+        bytes_per_dof_iter("sstep_v3", "f32", ndev=8, ez=32)

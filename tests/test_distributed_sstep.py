@@ -1,0 +1,107 @@
+"""Single-device (tier-1) coverage of the sharded solver drivers.
+
+The multi-device behaviour lives in tests/distributed_checks.py (8 fake
+host devices, subprocess).  Everything here runs on the 1-device mesh the
+main pytest process has: at ndev=1 the collectives are identities, so the
+sharded drivers must reproduce the single-device trajectories — s=4 even
+bitwise, since a 1-shard cycle takes the same single-powers-call path and
+the psum/host-sum reassociation degenerates.  The collective-count
+contract (one stacked halo exchange + one Gram psum per cycle,
+collective-free update) is traced, not executed, so it is asserted here
+at full strength.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cg_sstep import cg_sstep_fixed_iters
+from repro.core.nekbone import NekboneCase
+from repro.core.precond import pcg_fused_v2_fixed_iters
+from repro.distributed.pcg import pcg_sharded_fixed_iters, pcg_sharded_tol
+from repro.distributed.sstep import (cg_sstep_sharded_fixed_iters,
+                                     cycle_collective_counts)
+
+GRID = (2, 2, 8)
+
+
+def _case():
+    case = NekboneCase(n=4, grid=GRID, dtype=jnp.float64)
+    _, f = case.manufactured()
+    return case, f
+
+
+@pytest.mark.parametrize("s,sz", [(1, 2), (2, 2), (4, 2)])
+def test_sstep_sharded_matches_single_device(x64, s, sz):
+    case, f = _case()
+    kw = dict(D=case.D, g=case.g, grid=GRID, niter=10, s=s, mask=case.mask,
+              c=case.c, sz=sz, theta=2.25, interpret=True)
+    ref = cg_sstep_fixed_iters(f, **kw)
+    got = cg_sstep_sharded_fixed_iters(f, ndev=1, **kw)
+    h_ref = np.asarray(ref.rnorm_history, np.float64)
+    h = np.asarray(got.rnorm_history, np.float64)
+    assert h.shape == h_ref.shape
+    np.testing.assert_allclose(h, h_ref, rtol=0, atol=1e-12 * h_ref[0])
+    xs = np.asarray(got.x, np.float64)
+    rs = np.asarray(ref.x, np.float64)
+    scale = float(np.abs(rs).max()) + 1e-30
+    assert float(np.abs(xs - rs).max()) < 1e-12 * scale
+
+
+@pytest.mark.parametrize("s,sz,grid", [(1, 1, (2, 2, 8)), (2, 2, (2, 2, 8)),
+                                       (4, 2, (2, 2, 8)),
+                                       (1, 1, (1, 1, 8))])
+def test_cycle_collective_counts_contract(s, sz, grid):
+    counts = cycle_collective_counts(grid=grid, n=4, s=s, sz=sz, ndev=1)
+    assert counts["cycle"] == {"ppermute": 2, "psum": 1}
+    assert counts["update"] == {}
+
+
+@pytest.mark.parametrize("precond", ["jacobi", "cheb2"])
+def test_pcg_sharded_matches_single_device(x64, precond):
+    case, f = _case()
+    kw = dict(D=case.D, g=case.g, grid=GRID, niter=10, precond=precond,
+              mask=case.mask, c=case.c, sz=2, cheb_sz=2, interpret=True)
+    ref = pcg_fused_v2_fixed_iters(f, **kw)
+    got = pcg_sharded_fixed_iters(f, ndev=1, **kw)
+    h_ref = np.asarray(ref.rnorm_history, np.float64)
+    h = np.asarray(got.rnorm_history, np.float64)
+    np.testing.assert_allclose(h, h_ref, rtol=0, atol=1e-13 * h_ref[0])
+    xs = np.asarray(got.x, np.float64)
+    rs = np.asarray(ref.x, np.float64)
+    scale = float(np.abs(rs).max()) + 1e-30
+    assert float(np.abs(xs - rs).max()) < 1e-13 * scale
+
+
+def test_pcg_sharded_tol_is_prefix(x64):
+    case, f = _case()
+    kw = dict(D=case.D, g=case.g, grid=GRID, precond="jacobi",
+              mask=case.mask, c=case.c, sz=2, interpret=True)
+    full = pcg_sharded_fixed_iters(f, niter=16, ndev=1, **kw)
+    h_full = np.asarray(full.rnorm_history, np.float64)
+    tol = float(h_full[8]) * 1.01
+    got = pcg_sharded_tol(f, tol=tol, max_iter=16, ndev=1, **kw)
+    kk = int(got.iters)
+    assert 0 < kk < 16
+    h = np.asarray(got.rnorm_history, np.float64)
+    assert np.array_equal(h[:kk + 1], h_full[:kk + 1])
+    assert np.isnan(h[kk + 1:]).all()
+
+
+def test_sstep_sharded_validation_errors():
+    case, f = _case()
+    kw = dict(D=case.D, g=case.g, grid=GRID, niter=2, mask=case.mask,
+              c=case.c, interpret=True)
+    with pytest.raises(ValueError, match="halo depth"):
+        cg_sstep_sharded_fixed_iters(f, s=16, sz=1, ndev=1, **kw)
+    with pytest.raises(ValueError, match="not divisible by sz"):
+        cg_sstep_sharded_fixed_iters(f, s=2, sz=3, ndev=1, **kw)
+    with pytest.raises(ValueError, match="needs s >= 1"):
+        cg_sstep_sharded_fixed_iters(f, s=0, ndev=1, **kw)
+
+
+def test_pcg_sharded_requires_preconditioner():
+    case, f = _case()
+    with pytest.raises(ValueError, match="needs a preconditioner"):
+        pcg_sharded_fixed_iters(f, D=case.D, g=case.g, grid=GRID, niter=2,
+                                precond=None, mask=case.mask, c=case.c,
+                                ndev=1, interpret=True)
