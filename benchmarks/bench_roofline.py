@@ -11,16 +11,23 @@ CSV rows:
   roofline_bound_eNNN   — BW * I(n): attainable GFLOP/s
   cg_achieved_eNNN      — achieved GFLOP/s of a full CG iteration (fused)
   cg_fraction_eNNN      — achieved / bound (the paper reports 77-92%)
+  roofline_fraction_<pipeline>_eNNN — the same measured-roofline fraction
+      per *Pallas pipeline* (fused_v2 / jacobi / cheb / sstep_v3): one
+      iteration of the real driver against BW * pipeline_intensity — the
+      per-pipeline report DESIGN.md §11 specifies.  On CPU the drivers
+      run in Pallas interpret mode, so the fractions are emulator-time
+      demonstrations of the methodology; on a TPU backend they are the
+      paper-grade measurement.
 """
 from __future__ import annotations
 
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost import cg_iter_flops, intensity, pipeline_intensity
+from repro.core.cost import (cg_iter_flops, intensity,
+                             pipeline_flops_per_dof, pipeline_intensity)
 from repro.core.nekbone import NekboneCase
 
 QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
@@ -29,12 +36,11 @@ ELEMENT_SWEEP = (64,) if QUICK else (64, 256, 1024)
 
 
 def _time(fn, *args, reps=5):
-    jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+    # shared methodology (benchmarks/timing.py): warmup-discard +
+    # median-of-reps, each rep synced and timed individually.
+    from benchmarks.timing import measure
+
+    return measure(fn, *args, reps=reps, warmup=1)
 
 
 def run():
@@ -93,5 +99,66 @@ def run():
         rows.append((f"cg_achieved_e{E}", t_it * 1e6,
                      f"{achieved / 1e9:.2f}GF/s"))
         rows.append((f"cg_fraction_e{E}", 0.0,
+                     f"{achieved / bound:.1%}_of_measured_roofline"))
+    rows.extend(_pipeline_fraction_rows())
+    return rows
+
+
+# per-pipeline measured-roofline fractions (DESIGN.md §11).  QUICK shrinks
+# the case to (n=6, E=8): the pipelines run in interpret mode on CPU, and
+# a paper-size case would dominate the CI smoke budget; the full sweep
+# uses the paper's (n=10, E=64) point.
+_FRACTION_PIPELINES = (("fused_v2", "fused_v2"), ("jacobi", "fused_v2_jacobi"),
+                       ("cheb", "fused_v2_cheb"), ("sstep_v3", "sstep_v3"))
+
+
+def _pipeline_fraction_rows():
+    from repro.core.cg_fused import cg_fused_v2_fixed_iters
+    from repro.core.cg_sstep import cg_sstep_fixed_iters, estimate_theta
+    from repro.core.precond import pcg_fused_v2_fixed_iters
+
+    n, grid = ((6, (2, 2, 2)) if QUICK else (10, (4, 4, 4)))
+    E = grid[0] * grid[1] * grid[2]
+    case = NekboneCase(n=n, grid=grid, dtype=jnp.float32)
+    ndof = case.mesh.ndof
+    _, f = case.manufactured()
+
+    # bandwidth probe on this case's 30-stream working set (same probe as
+    # the headline rows, re-measured at this size).
+    words = 30 * ndof
+    buf = jnp.arange(words, dtype=jnp.float32)
+    copy = jax.jit(lambda b: b + 0.0)
+    bw = 2 * words * 4 / _time(copy, buf)
+
+    s = 4
+    theta = estimate_theta(case.D, case.g, case.grid, case.mask)
+
+    def t_v2():
+        return _time(lambda: cg_fused_v2_fixed_iters(
+            f, D=case.D, g=case.g, grid=case.grid, niter=1, mask=case.mask,
+            c=case.c).x, reps=1)
+
+    def t_pcg(name):
+        spec = case.precond_spec(name)
+        return _time(lambda: pcg_fused_v2_fixed_iters(
+            f, D=case.D, g=case.g, grid=case.grid, niter=1, precond=spec,
+            mask=case.mask, c=case.c).x, reps=1)
+
+    def t_sstep():
+        # one full cycle = s iterations; report the amortized per-iteration
+        # time (the quantity pipeline_intensity prices).
+        return _time(lambda: cg_sstep_fixed_iters(
+            f, D=case.D, g=case.g, grid=case.grid, niter=s, s=s,
+            mask=case.mask, c=case.c, theta=theta).x, reps=1) / s
+
+    timers = {"fused_v2": t_v2, "fused_v2_jacobi": lambda: t_pcg("jacobi"),
+              "fused_v2_cheb": lambda: t_pcg("cheb4"),
+              "sstep_v3": t_sstep}
+    rows = []
+    for name, pipeline in _FRACTION_PIPELINES:
+        t_iter = timers[pipeline]()
+        achieved = pipeline_flops_per_dof(n, pipeline) * ndof / t_iter
+        bound = bw * pipeline_intensity(n, pipeline, "f32")
+        rows.append((f"roofline_fraction_{name}_e{E}", t_iter * 1e6,
                      f"{achieved / bound:.1%}_of_measured_roofline"))
     return rows

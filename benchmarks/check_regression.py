@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m benchmarks.check_regression [FRESH.json]
       [--baseline benchmarks/baseline/BENCH_baseline.json] [--tol 0.05]
+      [--timing-tol 0.10] [--timing-warn-only]
 
 Diffs a fresh ``BENCH_<tag>.json`` (default: the newest one under
 ``$REPRO_BENCH_DIR`` / ``benchmarks/out``) against the committed baseline
@@ -15,8 +16,19 @@ and fails (exit 1) on:
   (DESIGN.md §7) must match within ``--tol`` relative tolerance, and the
   bf16 column must stay ≈ half of f32 on every rung (the mixed-precision
   headline).
-* **schema presence** — a fresh file missing either table fails: the gate
-  exists precisely so these numbers cannot silently disappear.
+* **us/iter wall clock** — each measured per-iteration row the baseline
+  pins (schema v6, DESIGN.md §11) must stay within ``--timing-tol``
+  (+10% default) of the baseline.  Wall time is only comparable on the
+  same backend kind, so a ``reference_backend`` mismatch between fresh
+  and baseline downgrades every timing row to a warning; and because
+  shared CI runners are noisy, ``--timing-warn-only`` routes timing
+  violations to ``::warning::`` annotations (exit 0) while the
+  stream-ladder and byte rows stay hard.
+* **schema presence** — a fresh file missing either analytic table fails:
+  the gate exists precisely so these numbers cannot silently disappear.
+  A fresh file missing the ``us_per_iter`` table the baseline holds is a
+  *timing* violation (hard by default, warning under
+  ``--timing-warn-only``).
 
 Forward compatibility: rungs / pipelines / policy columns present in the
 *fresh* file but absent from the baseline are **warnings**, not failures —
@@ -41,6 +53,9 @@ import sys
 DEFAULT_BASELINE = pathlib.Path(__file__).parent / "baseline" / \
     "BENCH_baseline.json"
 DEFAULT_TOL = 0.05
+# wall-clock band: one-sided (+10%) — slower fails, faster is an
+# improvement surfaced as a refresh-the-baseline warning.
+DEFAULT_TIMING_TOL = 0.10
 
 
 def _die(msg: str) -> None:
@@ -84,15 +99,61 @@ def find_fresh(bench_dir: pathlib.Path | None = None) -> pathlib.Path:
 
 
 def compare(fresh: dict, base: dict, tol: float = DEFAULT_TOL,
-            warnings: list[str] | None = None) -> list[str]:
+            warnings: list[str] | None = None,
+            timing_tol: float = DEFAULT_TIMING_TOL,
+            timing_problems: list[str] | None = None) -> list[str]:
     """All regressions of ``fresh`` against ``base`` (empty == gate passes).
 
     Forward-compat findings (rows *added* by the fresh run, schema-version
     skew) are appended to ``warnings`` when given — surfaced, never
     failing; see the module docstring.
+
+    Wall-clock (us/iter) violations go to ``timing_problems`` when given —
+    the caller decides whether they fail or warn (``--timing-warn-only``);
+    when None they are ordinary problems.
     """
     problems: list[str] = []
     warnings = warnings if warnings is not None else []
+    timing = timing_problems if timing_problems is not None else problems
+
+    # --- us/iter wall clock: relative band, same-backend only -----------
+    base_us = base.get("us_per_iter") or {}
+    if base_us:
+        base_be = base.get("reference_backend")
+        fresh_be = fresh.get("reference_backend")
+        fresh_us = fresh.get("us_per_iter")
+        if base_be is not None and fresh_be != base_be:
+            warnings.append(
+                f"us/iter reference backend mismatch: fresh={fresh_be!r} "
+                f"baseline={base_be!r} — wall time is not comparable "
+                "across backends; timing rows skipped (refresh the "
+                "baseline on this backend to re-arm them)")
+        elif not fresh_us:
+            timing.append("fresh bench json has no us_per_iter table — "
+                          "measured wall time silently disappeared "
+                          "(baseline pins it)")
+        else:
+            for row, want in sorted(base_us.items()):
+                got = fresh_us.get(row)
+                if got is None:
+                    timing.append(f"us/iter row '{row}' missing "
+                                  f"(baseline: {want:g}us)")
+                    continue
+                w, g = float(want), float(got)
+                if w > 0 and g > w * (1.0 + timing_tol):
+                    timing.append(
+                        f"us/iter '{row}': {g:g}us regressed past "
+                        f"+{timing_tol:.0%} of baseline {w:g}us")
+                elif w > 0 and g < w * (1.0 - timing_tol):
+                    warnings.append(
+                        f"us/iter '{row}': {g:g}us is >{timing_tol:.0%} "
+                        f"faster than baseline {w:g}us — refresh the "
+                        "baseline to pin the win")
+            for row in sorted(set(fresh_us) - set(base_us)):
+                warnings.append(
+                    f"new us/iter row '{row}' = {fresh_us[row]:g}us not in "
+                    "baseline — unchecked until the next baseline refresh "
+                    "pins it")
 
     # --- schema version: skew is a warning, the tables still compare ----
     bv, fv = base.get("schema_version"), fresh.get("schema_version")
@@ -200,6 +261,13 @@ def main(argv=None) -> int:
     ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
                     help="relative tolerance for byte counts "
                          f"(default {DEFAULT_TOL})")
+    ap.add_argument("--timing-tol", type=float, default=DEFAULT_TIMING_TOL,
+                    help="relative band for measured us/iter rows "
+                         f"(default {DEFAULT_TIMING_TOL})")
+    ap.add_argument("--timing-warn-only", action="store_true",
+                    help="route us/iter band violations to ::warning:: "
+                         "annotations (exit 0); stream/byte rows stay "
+                         "hard — for noisy shared CI runners")
     args = ap.parse_args(argv)
 
     fresh_path = pathlib.Path(args.fresh) if args.fresh else find_fresh()
@@ -207,8 +275,11 @@ def main(argv=None) -> int:
     base = load_bench_json(pathlib.Path(args.baseline), "baseline")
 
     warnings: list[str] = []
+    timing_problems: list[str] = []
     try:
-        problems = compare(fresh, base, tol=args.tol, warnings=warnings)
+        problems = compare(fresh, base, tol=args.tol, warnings=warnings,
+                           timing_tol=args.timing_tol,
+                           timing_problems=timing_problems)
     except (KeyError, TypeError, AttributeError, ValueError) as e:
         # valid JSON, wrong shape (hand-edited table, scalar where an
         # object belongs): same contract as corrupt JSON — clear error,
@@ -218,6 +289,13 @@ def main(argv=None) -> int:
              "or refresh the baseline per benchmarks/README.md")
     for w in warnings:
         print(f"WARNING: {w}", file=sys.stderr)
+    if args.timing_warn_only:
+        # GitHub-annotation format so band violations surface on the PR
+        # without failing the (noisy-runner) smoke leg.
+        for t in timing_problems:
+            print(f"::warning::timing: {t}")
+    else:
+        problems = problems + timing_problems
     if problems:
         print(f"perf-regression gate FAILED ({fresh_path} vs "
               f"{args.baseline}):")
@@ -226,7 +304,8 @@ def main(argv=None) -> int:
         return 1
     streams = fresh.get("streams_per_iter", {})
     print(f"perf-regression gate OK: {fresh_path} matches {args.baseline} "
-          f"(streams/iter {streams}, bytes within ±{args.tol:.0%})")
+          f"(streams/iter {streams}, bytes within ±{args.tol:.0%}, "
+          f"us/iter within +{args.timing_tol:.0%})")
     return 0
 
 

@@ -144,6 +144,33 @@ def _streams_ladder() -> dict:
     }
 
 
+def _us_per_iter_table(sections: list) -> dict:
+    """Measured wall-clock (us) of the per-iteration pipeline rungs.
+
+    Extracted from the version-ladder section's ``*_iter_*`` rows — the
+    fused v1/v2 iterations, the s-step cycles, and the PCG rungs — keyed
+    by row name.  check_regression.py holds each entry within a relative
+    band against the baseline *when the reference backend matches*
+    (DESIGN.md §11): wall time is only comparable measured on the same
+    backend kind, so the table travels with a ``reference_backend``
+    record and cross-backend comparisons degrade to warnings.
+    """
+    table = {}
+    for sec in sections:
+        if not sec["module"].endswith("bench_ax_versions"):
+            continue
+        for row in sec["rows"]:
+            if "_iter_" in row["name"] and row["us_per_call"] > 0.0:
+                table[row["name"]] = row["us_per_call"]
+    return table
+
+
+def _reference_backend() -> str:
+    import jax
+
+    return jax.default_backend()
+
+
 def main() -> None:
     from benchmarks import bench_ax_versions, bench_cost_model, bench_roofline
 
@@ -162,18 +189,24 @@ def main() -> None:
                          "rows": rows})
 
     payload = {
-        "schema": "repro-bench/5",
+        "schema": "repro-bench/6",
         # monotone int for forward-compat decisions (check_regression.py
         # warns on version skew instead of failing on unknown tables).
         # v5: sharded rungs — *_sharded_d8 ladder entries and the
         # <pipeline>_d8 per-device byte rows (DESIGN.md §10).
-        "schema_version": 5,
+        # v6: measured-time rows — the us_per_iter table + the
+        # reference_backend record it is only comparable under
+        # (DESIGN.md §11); the gate holds each entry within a relative
+        # band alongside the exact stream ladder.
+        "schema_version": 6,
         "tag": os.environ.get("REPRO_BENCH_TAG", "local"),
         "quick": bool(os.environ.get("REPRO_BENCH_QUICK")),
+        "reference_backend": _reference_backend(),
         "streams_per_iter": _streams_ladder(),
         # the second axis of the ladder (DESIGN.md §7): bytes each stream
         # carries under each precision policy, per DOF per iteration.
         "bytes_per_dof_iter": _precision_table(),
+        "us_per_iter": _us_per_iter_table(sections),
         "sections": sections,
     }
     path = _bench_json_path()

@@ -1,0 +1,11 @@
+"""Bench-side re-export of the shared wall-clock helper.
+
+The implementation lives in ``repro.kernels.timing`` so the autotune
+sweeps and the benches share one measurement methodology (warmup-discard
++ median-of-reps, DESIGN.md §11); this module exists so bench code can
+say ``from benchmarks.timing import measure`` without importing from the
+kernel layer explicitly.
+"""
+from repro.kernels.timing import measure, median  # noqa: F401
+
+__all__ = ["measure", "median"]

@@ -18,6 +18,9 @@ class NekboneConfig:
     grid: tuple[int, int, int]           # element grid (per device)
     niter: int = 100                     # paper: 100 CG iterations
     dtype: str = "float32"               # TPU target; fp64 on CPU oracle
+    # "auto" resolves to the measured-fastest fused CG pipeline for the
+    # case shape (kernels/autotune.pick_pipeline; E-threshold heuristic
+    # off-TPU) — see NekboneCase.ax_impl for the full value list.
     ax_impl: str = "pallas"
     # Fused-pipeline precision policy (DESIGN.md §7, core/precision.py):
     # "f64" | "f32" | "bf16" | "bf16_ir" | "f32_ir", or None to leave the

@@ -212,7 +212,8 @@ def _check_box_fields(grid, n, mask, c) -> None:
 
 def _v2_iter(x2, r2, p2, rtz, beta, *, D, Dt, g3, mx, my, mz, cx, cy, cz,
              zero_plane, n: int, grid: tuple[int, int, int], sz: int,
-             interpret: bool, acc_name: str):
+             interpret: bool, acc_name: str, layout: str = "fold",
+             grid_order: str = "parallel"):
     """One full v2 CG iteration (both slab kernels + the plane stitch).
 
     Shared by the fixed-iteration driver below and the tolerance-driven
@@ -225,7 +226,8 @@ def _v2_iter(x2, r2, p2, rtz, beta, *, D, Dt, g3, mx, my, mz, cx, cy, cz,
     # assembly; boundary planes leave as (nblk, pln) side outputs.
     p2, w2, bot, top, pap_b = _ax.nekbone_ax_slab_pallas(
         p2, r2, D, Dt, g3, mx, my, mz, beta.reshape(1, 1),
-        n=n, grid=grid, sz=sz, interpret=interpret, acc_dtype=acc_name)
+        n=n, grid=grid, sz=sz, interpret=interpret, acc_dtype=acc_name,
+        layout=layout, grid_order=grid_order)
     pap = jnp.sum(pap_b)
     alpha = rtz / pap
     # cross-block stitch operands: each block receives its neighbours'
@@ -243,10 +245,13 @@ def _v2_iter(x2, r2, p2, rtz, beta, *, D, Dt, g3, mx, my, mz, cx, cy, cz,
 
 @functools.partial(jax.jit, static_argnames=("n", "grid", "niter", "sz",
                                              "interpret", "acc_name",
-                                             "x_name"))
+                                             "x_name", "layout",
+                                             "grid_order"))
 def _cg_fused_v2(b, D, Dt, g3, mx, my, mz, cx, cy, cz, *, n: int,
                  grid: tuple[int, int, int], niter: int, sz: int,
-                 interpret: bool, acc_name: str, x_name: str) -> CGResult:
+                 interpret: bool, acc_name: str, x_name: str,
+                 layout: str = "fold",
+                 grid_order: str = "parallel") -> CGResult:
     ex, ey, ez = grid
     E = b.shape[0]
     n3 = n ** 3
@@ -266,7 +271,8 @@ def _cg_fused_v2(b, D, Dt, g3, mx, my, mz, cx, cy, cz, *, n: int,
         x2, r2, p2, rtz_new, beta = _v2_iter(
             x2, r2, p2, rtz, beta, D=D, Dt=Dt, g3=g3, mx=mx, my=my, mz=mz,
             cx=cx, cy=cy, cz=cz, zero_plane=zero_plane, n=n, grid=grid,
-            sz=sz, interpret=interpret, acc_name=acc_name)
+            sz=sz, interpret=interpret, acc_name=acc_name, layout=layout,
+            grid_order=grid_order)
         return x2, r2, p2, rtz_new, beta, hist
 
     hist0 = jnp.full((niter + 1,), jnp.nan, dtype=acc)
@@ -284,6 +290,8 @@ def cg_fused_v2_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray,
                             niter: int, mask: jnp.ndarray | None = None,
                             c: jnp.ndarray | None = None,
                             sz: int | None = None,
+                            layout: str | None = None,
+                            grid_order: str | None = None,
                             interpret: bool | None = None,
                             precision=None) -> CGResult:
     """Fixed-iteration CG, whole iteration in two Pallas kernels (v2).
@@ -301,6 +309,9 @@ def cg_fused_v2_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray,
              structural fields and otherwise unused.
       sz:    slabs per block; default: autotuned divisor of EZ
              (kernels/autotune.pick_slab_sz).
+      layout, grid_order: contraction layout / grid iteration order for
+             the slab kernel (defaults: jointly autotuned with sz when
+             all three are None, kernels/autotune.pick_slab_config).
       interpret: force Pallas interpret mode (default: off-TPU detection).
       precision: policy name / policy / ``None`` (infer from ``b.dtype``):
              b and the metric are cast to the storage dtype, both kernels
@@ -318,9 +329,14 @@ def cg_fused_v2_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray,
     grid = tuple(grid)
     if interpret is None:
         interpret = kernel_ops.default_interpret()
-    if sz is None:
+    if sz is None and layout is None and grid_order is None:
+        sz, layout, grid_order = _autotune.pick_slab_config(
+            grid, n, b.dtype, acc_dtype=policy.accum)
+    elif sz is None:
         sz = _autotune.pick_slab_sz(grid, n, b.dtype,
                                     acc_dtype=policy.accum)
+    layout = "fold" if layout is None else layout
+    grid_order = "parallel" if grid_order is None else grid_order
 
     _check_box_fields(grid, n, mask, c)
     (mx, my, mz), (cx, cy, cz) = kernel_ops.slab_axis_factors(grid, n,
@@ -333,7 +349,8 @@ def cg_fused_v2_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray,
     return _cg_fused_v2(b, D, D.T, g3, mx, my, mz, cx, cy, cz, n=n,
                         grid=grid, niter=niter, sz=sz, interpret=interpret,
                         acc_name=policy.accum,
-                        x_name=policy.x_storage_dtype.name)
+                        x_name=policy.x_storage_dtype.name,
+                        layout=layout, grid_order=grid_order)
 
 
 # ---------------------------------------------------------------------------

@@ -203,16 +203,19 @@ def estimate_theta(D: jnp.ndarray, g: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "s",
-                                             "interpret", "acc_name"))
+                                             "interpret", "acc_name",
+                                             "layout", "grid_order"))
 def _powers_call(p2, r2, D, Dt, gext, mx, my, mzext, cx, cy, cz, inv_theta,
                  *, n: int, grid: tuple[int, int, int], sz: int, s: int,
-                 interpret: bool, acc_name: str):
+                 interpret: bool, acc_name: str, layout: str = "fold",
+                 grid_order: str = "parallel"):
     """Halo-window gather + the matrix-powers pallas_call, one cycle."""
     pext = _ax.sstep_extend_field(p2, grid, sz, s)
     rext = _ax.sstep_extend_field(r2, grid, sz, s)
     return _ax.nekbone_ax_powers_pallas(
         pext, rext, D, Dt, gext, mx, my, mzext, cx, cy, cz, inv_theta,
-        n=n, grid=grid, sz=sz, s=s, interpret=interpret, acc_dtype=acc_name)
+        n=n, grid=grid, sz=sz, s=s, interpret=interpret, acc_dtype=acc_name,
+        layout=layout, grid_order=grid_order)
 
 
 def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
@@ -220,6 +223,8 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
                          mask: jnp.ndarray | None = None,
                          c: jnp.ndarray | None = None,
                          sz: int | None = None, theta: float | None = None,
+                         layout: str | None = None,
+                         grid_order: str | None = None,
                          tol: float | None = None,
                          interpret: bool | None = None,
                          precision=None) -> CGResult:
@@ -239,6 +244,9 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
       mask/c: optional structural fields, validated like the v2 path.
       sz:    slabs per block (default: joint (sz, s) autotune,
              `kernels/autotune.pick_slab_sz_sstep`).
+      layout, grid_order: powers-kernel contraction layout / grid
+             iteration order (defaults: jointly autotuned with sz when
+             all three are None, `kernels/autotune.pick_sstep_config`).
       theta: basis scale override (default: power-iteration ||A|| estimate).
       tol:   optional tolerance for early exit (DESIGN.md §9.4): stop, as
              :func:`repro.core.cg.cg` does, *before* the first iteration
@@ -273,9 +281,14 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
     ex, ey, ez = grid
     if interpret is None:
         interpret = kernel_ops.default_interpret()
-    if sz is None:
+    if sz is None and layout is None and grid_order is None:
+        sz, layout, grid_order = _autotune.pick_sstep_config(
+            grid, n, s, b.dtype, acc_dtype=policy.accum)
+    elif sz is None:
         sz = _autotune.pick_slab_sz_sstep(grid, n, s, b.dtype,
                                           acc_dtype=policy.accum)
+    layout = "fold" if layout is None else layout
+    grid_order = "parallel" if grid_order is None else grid_order
 
     _check_box_fields(grid, n, mask, c)
     (mx, my, mz), (cx, cy, cz) = kernel_ops.slab_axis_factors(grid, n,
@@ -318,7 +331,7 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
         basis, gram_b = _powers_call(
             p2, r2, D_op, D_op.T, gext, mx, my, mzext, cx, cy, cz,
             inv_theta, n=n, grid=grid, sz=sz, s=s, interpret=interpret,
-            acc_name=policy.accum)
+            acc_name=policy.accum, layout=layout, grid_order=grid_order)
         # the policy's gram dtype is always float64 (PrecisionPolicy.gram);
         # cycle_coefficients resolves the in-cycle stop (run only the
         # iterations whose start rtz is still above tol^2 — exactly cg()'s

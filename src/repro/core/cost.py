@@ -25,6 +25,7 @@ __all__ = ["flops_per_dof", "cg_iter_flops", "cg_iter_bytes", "intensity",
            "fused_v2_cg_iter_bytes", "fused_v2_intensity",
            "fused_v2_plane_streams", "PIPELINE_STREAMS", "PRECISION_ITEMSIZE",
            "precision_itemsize", "bytes_per_dof_iter", "pipeline_intensity",
+           "pipeline_flops_per_dof",
            "ir_overhead_streams", "SSTEP_DEFAULT_S", "sstep_cycle_streams",
            "sstep_streams", "sstep_halo_streams", "sstep_effective_streams",
            "sstep_intensity", "JACOBI_V2_READ_STREAMS",
@@ -402,8 +403,28 @@ def bytes_per_dof_iter(pipeline: str, precision, *, exact: bool = False,
 def pipeline_intensity(n: int, pipeline: str, precision) -> float:
     """Eq. 2 arithmetic intensity of a (pipeline, precision) point:
     same (12n + 34) flops over the policy-priced streams."""
-    return flops_per_dof(n) / float(sum(bytes_per_dof_iter(pipeline,
-                                                           precision)))
+    return pipeline_flops_per_dof(n, pipeline) / float(
+        sum(bytes_per_dof_iter(pipeline, precision)))
+
+
+def pipeline_flops_per_dof(n: int, pipeline: str, *,
+                           s: int = SSTEP_DEFAULT_S,
+                           k: int = CHEB_DEFAULT_K) -> float:
+    """Eq.-1 flops per DOF per CG *iteration* of a pipeline rung.
+
+    The fusion ladder (eq2, fused_v1, fused_v2, sstep_v3) moves the same
+    arithmetic through fewer streams, so every rung keeps Eq. 1's
+    (12n + 34); Jacobi-PCG adds the diagonal scale + the extra rtz books
+    (~3 flops/DOF/iter on the merged update); Chebyshev-PCG adds k
+    operator applications per iteration (:func:`cheb_flops_per_dof`) —
+    its win is the *iteration count*, not the per-iteration rate."""
+    if pipeline in ("eq2", "fused_v1", "fused_v2", "sstep_v3"):
+        return float(flops_per_dof(n))
+    if pipeline == "fused_v2_jacobi":
+        return float(flops_per_dof(n) + 3)
+    if pipeline == "fused_v2_cheb":
+        return float(cheb_flops_per_dof(n, k))
+    raise ValueError(f"unknown pipeline {pipeline!r}")
 
 
 def ir_overhead_streams(inner_iters: int, hi_itemsize: int = 8,

@@ -43,7 +43,17 @@ class NekboneCase:
       lengths: physical box size.
       dtype:   compute dtype (fp64 validated on CPU; fp32/bf16 TPU target).
       ax_impl: 'listing1' | 'fused' | 'pallas' | 'pallas_fused_cg' |
-               'pallas_fused_cg_v2' | 'pallas_sstep_v3'.
+               'pallas_fused_cg_v2' | 'pallas_sstep_v3' | 'auto'.
+               'auto' resolves at construction to the measured-fastest
+               fused pipeline for this case shape via the autotune cache
+               (kernels/autotune.pick_pipeline): on TPU both fused CG
+               pipelines are timed once per (backend, case key) and the
+               winner is persisted; elsewhere the documented E-threshold
+               heuristic applies (E < AUTO_V2_MIN_E selects v1 — small
+               element counts cannot amortize v2's second kernel
+               dispatch; preconditioned cases always select v2, the only
+               pipeline with fused PCG drivers).  The requested value is
+               kept in ``ax_impl_requested``.
                The fused_cg variants select the step-fused CG pipelines
                (core/cg_fused.py): v1 runs one multi-output Pallas call per
                iteration plus XLA assembly/vector passes (DESIGN.md §3.3);
@@ -83,6 +93,7 @@ class NekboneCase:
     cheb_k: int = 4
 
     def __post_init__(self):
+        policy = None
         if self.precision is not None:
             from repro.core.precision import resolve_policy
 
@@ -91,6 +102,14 @@ class NekboneCase:
                 # storage dtype IS the case dtype: mesh fields, rhs, and
                 # the solver all live in it (Eq.-2 streams are billed here).
                 self.dtype = policy.storage_dtype
+        self.ax_impl_requested = self.ax_impl
+        if self.ax_impl == "auto":
+            from repro.kernels import autotune as _autotune
+
+            self.ax_impl = _autotune.pick_pipeline(
+                self.grid, self.n, self.dtype,
+                acc_dtype=None if policy is None else policy.accum,
+                precond=self.precond)
         self.mesh = BoxMesh(self.n, self.grid, self.lengths)
         ops = self.mesh.ops
         dt = self.dtype

@@ -352,10 +352,13 @@ def make_preconditioner(name: str, *, D: jnp.ndarray, g: jnp.ndarray,
 
 @functools.partial(jax.jit, static_argnames=("n", "grid", "max_iter", "sz",
                                              "interpret", "acc_name",
-                                             "x_name"))
+                                             "x_name", "layout",
+                                             "grid_order"))
 def _cg_v2_tol(b, D, Dt, g3, mx, my, mz, cx, cy, cz, tol2, *, n: int,
                grid: tuple[int, int, int], max_iter: int, sz: int,
-               interpret: bool, acc_name: str, x_name: str) -> CGResult:
+               interpret: bool, acc_name: str, x_name: str,
+               layout: str = "fold",
+               grid_order: str = "parallel") -> CGResult:
     ex, ey, ez = grid
     E = b.shape[0]
     n3 = n ** 3
@@ -379,7 +382,8 @@ def _cg_v2_tol(b, D, Dt, g3, mx, my, mz, cx, cy, cz, tol2, *, n: int,
         x2, r2, p2, rtz_new, beta = _v2_iter(
             x2, r2, p2, rtz, beta, D=D, Dt=Dt, g3=g3, mx=mx, my=my, mz=mz,
             cx=cx, cy=cy, cz=cz, zero_plane=zero_plane, n=n, grid=grid,
-            sz=sz, interpret=interpret, acc_name=acc_name)
+            sz=sz, interpret=interpret, acc_name=acc_name, layout=layout,
+            grid_order=grid_order)
         return x2, r2, p2, rtz_new, beta, hist, kk + 1
 
     state = (jnp.zeros(b2.shape, x_dtype), b2, jnp.zeros_like(b2), rtz0,
@@ -392,10 +396,13 @@ def _cg_v2_tol(b, D, Dt, g3, mx, my, mz, cx, cy, cz, tol2, *, n: int,
 
 @functools.partial(jax.jit, static_argnames=("n", "grid", "max_iter", "sz",
                                              "interpret", "acc_name",
-                                             "x_name"))
+                                             "x_name", "layout",
+                                             "grid_order"))
 def _pcg_jacobi(b, invd, D, Dt, g3, mx, my, mz, cx, cy, cz, tol2, *, n: int,
                 grid: tuple[int, int, int], max_iter: int, sz: int,
-                interpret: bool, acc_name: str, x_name: str) -> CGResult:
+                interpret: bool, acc_name: str, x_name: str,
+                layout: str = "fold",
+                grid_order: str = "parallel") -> CGResult:
     """Fused Jacobi-PCG core: v2 slab front-half + PCG update back-half.
 
     The loop state carries ``z = invdiag * r`` instead of ``r``
@@ -435,7 +442,8 @@ def _pcg_jacobi(b, invd, D, Dt, g3, mx, my, mz, cx, cy, cz, tol2, *, n: int,
         x2, z2, p2, rtz, beta, hist, kk = state
         p2, w2, bot, top, pap_b = _ax.nekbone_ax_slab_pallas(
             p2, z2, D, Dt, g3, mx, my, mz, beta.reshape(1, 1),
-            n=n, grid=grid, sz=sz, interpret=interpret, acc_dtype=acc_name)
+            n=n, grid=grid, sz=sz, interpret=interpret, acc_dtype=acc_name,
+            layout=layout, grid_order=grid_order)
         alpha = rtz / jnp.sum(pap_b)
         addb = jnp.concatenate([zero_plane, top[:-1]], axis=0)
         addt = jnp.concatenate([bot[1:], zero_plane], axis=0)
@@ -457,11 +465,13 @@ def _pcg_jacobi(b, invd, D, Dt, g3, mx, my, mz, cx, cy, cz, tol2, *, n: int,
 
 @functools.partial(jax.jit, static_argnames=("n", "grid", "max_iter", "sz",
                                              "sz_c", "k", "interpret",
-                                             "acc_name", "x_name"))
+                                             "acc_name", "x_name",
+                                             "layout", "grid_order"))
 def _pcg_cheb(b, D, Dt, g3, mx, my, mz, cx, cy, cz, coef, tol2, *, n: int,
               grid: tuple[int, int, int], max_iter: int, sz: int, sz_c: int,
-              k: int, interpret: bool, acc_name: str,
-              x_name: str) -> CGResult:
+              k: int, interpret: bool, acc_name: str, x_name: str,
+              layout: str = "fold",
+              grid_order: str = "parallel") -> CGResult:
     """Fused Chebyshev-PCG core: cheb apply + v2 slab + v2 update.
 
     Per iteration: the halo'd Chebyshev kernel evaluates
@@ -493,7 +503,7 @@ def _pcg_cheb(b, D, Dt, g3, mx, my, mz, cx, cy, cz, coef, tol2, *, n: int,
         z2, rtz_b = _ax.nekbone_cheb_apply_pallas(
             rext, D, Dt, gext, mx, my, mzext, cx, cy, cz, coef,
             n=n, grid=grid, sz=sz_c, k=k, interpret=interpret,
-            acc_dtype=acc_name)
+            acc_dtype=acc_name, layout=layout, grid_order=grid_order)
         return z2, jnp.sum(rtz_b)
 
     z0, rtz0 = cheb(b2)
@@ -510,7 +520,8 @@ def _pcg_cheb(b, D, Dt, g3, mx, my, mz, cx, cy, cz, coef, tol2, *, n: int,
         beta = rtz / rtz_prev            # rtz_prev = 1 at k=0: p0 = 0
         p2, w2, bot, top, pap_b = _ax.nekbone_ax_slab_pallas(
             p2, z2, D, Dt, g3, mx, my, mz, beta.reshape(1, 1),
-            n=n, grid=grid, sz=sz, interpret=interpret, acc_dtype=acc_name)
+            n=n, grid=grid, sz=sz, interpret=interpret, acc_dtype=acc_name,
+            layout=layout, grid_order=grid_order)
         alpha = rtz / jnp.sum(pap_b)
         addb = jnp.concatenate([zero_plane, top[:-1]], axis=0)
         addt = jnp.concatenate([bot[1:], zero_plane], axis=0)
@@ -533,7 +544,8 @@ def _pcg_cheb(b, D, Dt, g3, mx, my, mz, cx, cy, cz, coef, tol2, *, n: int,
 # public drivers
 # ---------------------------------------------------------------------------
 
-def _prepare(b, D, g, grid, mask, c, sz, interpret, precision, precond):
+def _prepare(b, D, g, grid, mask, c, sz, interpret, precision, precond,
+             layout=None, grid_order=None):
     """Shared operand preparation for the fused v2-family drivers."""
     from repro.kernels import ops as kernel_ops
 
@@ -544,24 +556,30 @@ def _prepare(b, D, g, grid, mask, c, sz, interpret, precision, precond):
     grid = tuple(grid)
     if interpret is None:
         interpret = kernel_ops.default_interpret()
-    if sz is None:
-        # only Jacobi changes the slab kernels' working set (the update
-        # kernel holds the diagonal block); Chebyshev runs the unmodified
-        # v2 kernels — its own apply kernel is tuned by pick_slab_sz_cheb
-        # — so it shares the plain pick rather than re-measuring.
-        jac = (isinstance(precond, JacobiPrecond)
-               or (isinstance(precond, str) and precond == "jacobi"))
+    # only Jacobi changes the slab kernels' working set (the update
+    # kernel holds the diagonal block); Chebyshev runs the unmodified
+    # v2 kernels — its own apply kernel is tuned by pick_slab_sz_cheb
+    # — so it shares the plain pick rather than re-measuring.
+    jac = (isinstance(precond, JacobiPrecond)
+           or (isinstance(precond, str) and precond == "jacobi"))
+    if sz is None and layout is None and grid_order is None:
+        sz, layout, grid_order = _autotune.pick_slab_config(
+            grid, n, b.dtype, acc_dtype=policy.accum,
+            precond="jacobi" if jac else None)
+    elif sz is None:
         sz = _autotune.pick_slab_sz(grid, n, b.dtype,
                                     acc_dtype=policy.accum,
                                     precond="jacobi" if jac else None)
+    layout = "fold" if layout is None else layout
+    grid_order = "parallel" if grid_order is None else grid_order
     _check_box_fields(grid, n, mask, c)
     (mx, my, mz), (cx, cy, cz) = kernel_ops.slab_axis_factors(grid, n,
                                                               b.dtype)
     D_op = jnp.asarray(D, policy.op_storage_dtype)
     g3 = kernel_ops.diag_metric(jnp.asarray(g, policy.op_storage_dtype),
                                 E, n)
-    return (policy, b, n, grid, sz, interpret, (mx, my, mz), (cx, cy, cz),
-            D_op, g3)
+    return (policy, b, n, grid, sz, layout, grid_order, interpret,
+            (mx, my, mz), (cx, cy, cz), D_op, g3)
 
 
 def _resolve_precond(precond, *, D, g, grid, mask, c):
@@ -574,12 +592,14 @@ def _resolve_precond(precond, *, D, g, grid, mask, c):
 
 def _dispatch(b, precond, tol2, max_iter, *, policy, n, grid, sz, interpret,
               m_factors, c_factors, D_op, g3,
-              cheb_sz: int | None = None) -> CGResult:
+              cheb_sz: int | None = None, layout: str = "fold",
+              grid_order: str = "parallel") -> CGResult:
     mx, my, mz = m_factors
     cx, cy, cz = c_factors
     common = dict(n=n, grid=grid, max_iter=max_iter, sz=sz,
                   interpret=interpret, acc_name=policy.accum,
-                  x_name=policy.x_storage_dtype.name)
+                  x_name=policy.x_storage_dtype.name, layout=layout,
+                  grid_order=grid_order)
     if precond is None:
         return _cg_v2_tol(b, D_op, D_op.T, g3, mx, my, mz, cx, cy, cz,
                           tol2, **common)
@@ -606,6 +626,8 @@ def pcg_fused_v2_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray,
                              c: jnp.ndarray | None = None,
                              sz: int | None = None,
                              cheb_sz: int | None = None,
+                             layout: str | None = None,
+                             grid_order: str | None = None,
                              interpret: bool | None = None,
                              precision=None) -> CGResult:
     """Fixed-iteration *preconditioned* CG through the fused v2 pipeline.
@@ -626,9 +648,9 @@ def pcg_fused_v2_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray,
     apply kernel's (defaults: autotuned — deeper polynomials want larger
     ``cheb_sz``, the halo is ``8k/sz`` streams, cost.cheb_halo_streams).
     """
-    (policy, b, n, grid, sz, interpret, m_factors, c_factors, D_op,
-     g3) = _prepare(b, D, g, grid, mask, c, sz, interpret, precision,
-                    precond)
+    (policy, b, n, grid, sz, layout, grid_order, interpret, m_factors,
+     c_factors, D_op, g3) = _prepare(b, D, g, grid, mask, c, sz, interpret,
+                                     precision, precond, layout, grid_order)
     # specs built by name use the caller's (full-precision) operator data;
     # the drivers cast the resulting fields to the policy's op-storage.
     precond = _resolve_precond(precond, D=D, g=g, grid=grid, mask=mask, c=c)
@@ -636,7 +658,8 @@ def pcg_fused_v2_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray,
     # iterations run — the tol-driven path's trajectory continued.
     return _dispatch(b, precond, -1.0, niter, policy=policy, n=n, grid=grid,
                      sz=sz, interpret=interpret, m_factors=m_factors,
-                     c_factors=c_factors, D_op=D_op, g3=g3, cheb_sz=cheb_sz)
+                     c_factors=c_factors, D_op=D_op, g3=g3, cheb_sz=cheb_sz,
+                     layout=layout, grid_order=grid_order)
 
 
 def cg_fused_tol(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
@@ -645,6 +668,8 @@ def cg_fused_tol(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
                  mask: jnp.ndarray | None = None,
                  c: jnp.ndarray | None = None, sz: int | None = None,
                  cheb_sz: int | None = None,
+                 layout: str | None = None,
+                 grid_order: str | None = None,
                  interpret: bool | None = None, precision=None) -> CGResult:
     """Tolerance-driven fused-v2 (P)CG: solve to ``tol``, not 100 iters.
 
@@ -660,11 +685,12 @@ def cg_fused_tol(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
     Args are :func:`pcg_fused_v2_fixed_iters`'s with ``tol``/``max_iter``
     replacing ``niter``; ``precond=None`` runs the plain v2 pipeline.
     """
-    (policy, b, n, grid, sz, interpret, m_factors, c_factors, D_op,
-     g3) = _prepare(b, D, g, grid, mask, c, sz, interpret, precision,
-                    precond)
+    (policy, b, n, grid, sz, layout, grid_order, interpret, m_factors,
+     c_factors, D_op, g3) = _prepare(b, D, g, grid, mask, c, sz, interpret,
+                                     precision, precond, layout, grid_order)
     precond = _resolve_precond(precond, D=D, g=g, grid=grid, mask=mask, c=c)
     return _dispatch(b, precond, float(tol) ** 2, max_iter, policy=policy,
                      n=n, grid=grid, sz=sz, interpret=interpret,
                      m_factors=m_factors, c_factors=c_factors, D_op=D_op,
-                     g3=g3, cheb_sz=cheb_sz)
+                     g3=g3, cheb_sz=cheb_sz, layout=layout,
+                     grid_order=grid_order)

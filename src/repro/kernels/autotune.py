@@ -43,13 +43,17 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import timing as _timing
+
 __all__ = ["vmem_block_e", "pick_block_e", "candidate_blocks",
            "candidate_slab_sizes", "pick_slab_sz",
            "candidate_slab_sizes_sstep", "pick_slab_sz_sstep",
-           "candidate_slab_sizes_cheb", "pick_slab_sz_cheb", "clear_cache",
-           "cache_info", "cache_path"]
+           "candidate_slab_sizes_cheb", "pick_slab_sz_cheb",
+           "candidate_configs", "pick_slab_config", "pick_sstep_config",
+           "pick_cheb_config", "pick_pipeline", "AUTO_V2_MIN_E",
+           "clear_cache", "cache_info", "cache_path"]
 
-_CACHE: dict[tuple, int] = {}
+_CACHE: dict[tuple, object] = {}
 _MEASURED: set[tuple] = set()     # keys whose value came from a timing sweep
 _LOCK = threading.Lock()
 _DISK_LOADED = False
@@ -85,8 +89,19 @@ def _load_disk_locked() -> None:
         raw = json.loads(cache_path().read_text())
         for item in raw["entries"]:
             key = tuple(item["key"])
-            val = int(item["value"])
-            if val >= 1:
+            val = item["value"]
+            # three value shapes live in the file: ints (block/slab sizes,
+            # the v1 format — kept readable for old caches), lists (joint
+            # (sz, layout, grid_order) configs; tuples round-trip through
+            # JSON as lists), and strings (pipeline picks).
+            if isinstance(val, list):
+                val, ok = tuple(val), len(val) > 0
+            elif isinstance(val, str):
+                ok = len(val) > 0
+            else:
+                val = int(val)
+                ok = val >= 1
+            if ok:
                 _CACHE.setdefault(key, val)
                 _MEASURED.add(key)     # the file only ever holds measured picks
     except Exception:
@@ -102,7 +117,8 @@ def _save_disk_locked() -> None:
     try:
         path = cache_path()
         path.parent.mkdir(parents=True, exist_ok=True)
-        entries = [{"key": list(k), "value": v}
+        entries = [{"key": list(k),
+                    "value": list(v) if isinstance(v, tuple) else v}
                    for k, v in sorted(_CACHE.items(), key=lambda kv: str(kv[0]))
                    if k in _MEASURED]
         payload = {"version": 1, "entries": entries}
@@ -113,8 +129,7 @@ def _save_disk_locked() -> None:
         pass  # read-only cache dir: persistence is best-effort
 
 
-def _cached_pick(key: tuple,
-                 pick: Callable[[], tuple[int, bool]]) -> int:
+def _cached_pick(key: tuple, pick: Callable[[], tuple]):
     """Shared lookup -> pick -> memoize (+persist if measured) path.
 
     ``pick`` runs only on a cache miss — it may build an expensive measure
@@ -174,8 +189,6 @@ def candidate_blocks(E: int, n: int, itemsize: int = 4) -> list[int]:
 def _default_measure(E: int, n: int, dtype,
                      acc_dtype=None) -> Callable[[int], float]:
     """Times the real Ax kernel on synthetic data for one block size."""
-    import time
-
     import numpy as np
 
     from repro.core.sem import derivative_matrix
@@ -193,12 +206,7 @@ def _default_measure(E: int, n: int, dtype,
                                          block_e=block_e, interpret=False,
                                          acc_dtype=acc_dtype)
 
-        jax.block_until_ready(f())             # compile + warm
-        t0 = time.perf_counter()
-        for _ in range(3):
-            out = f()
-        jax.block_until_ready(out)
-        return (time.perf_counter() - t0) / 3
+        return _timing.measure(f, reps=3, warmup=1)
 
     return measure
 
@@ -273,9 +281,8 @@ def candidate_slab_sizes(grid: tuple[int, int, int], n: int,
 
 def _default_measure_slab(grid: tuple[int, int, int], n: int, dtype,
                           acc_dtype=None) -> Callable[[int], float]:
-    """Times the v2 slab kernel on synthetic data for one slab count."""
-    import time
-
+    """Times the v2 slab kernel on synthetic data for one config
+    (slab count; optionally contraction layout and grid order)."""
     import numpy as np
 
     from repro.core.geom import axis_mask_factor
@@ -294,18 +301,15 @@ def _default_measure_slab(grid: tuple[int, int, int], n: int, dtype,
     mz = jnp.asarray(axis_mask_factor(ez, n), dtype)
     beta = jnp.zeros((1, 1), _ax._accum(jnp.dtype(dtype), acc_dtype))
 
-    def measure(sz: int) -> float:
+    def measure(sz: int, layout: str = "fold",
+                grid_order: str = "parallel") -> float:
         def f():
             return _ax.nekbone_ax_slab_pallas(
                 p2, r2, D, D.T, g3, mx, my, mz, beta, n=n, grid=grid, sz=sz,
-                interpret=False, acc_dtype=acc_dtype)
+                interpret=False, acc_dtype=acc_dtype, layout=layout,
+                grid_order=grid_order)
 
-        jax.block_until_ready(f()[0])          # compile + warm
-        t0 = time.perf_counter()
-        for _ in range(3):
-            out = f()
-        jax.block_until_ready(out[0])
-        return (time.perf_counter() - t0) / 3
+        return _timing.measure(f, reps=3, warmup=1)
 
     return measure
 
@@ -375,9 +379,7 @@ def candidate_slab_sizes_sstep(grid: tuple[int, int, int], n: int, s: int,
 
 def _default_measure_sstep(grid: tuple[int, int, int], n: int, s: int,
                            dtype, acc_dtype=None) -> Callable[[int], float]:
-    """Times the v3 powers kernel on synthetic data for one slab count."""
-    import time
-
+    """Times the v3 powers kernel on synthetic data for one config."""
     import numpy as np
 
     from repro.core.geom import box_axis_factors
@@ -397,7 +399,8 @@ def _default_measure_sstep(grid: tuple[int, int, int], n: int, s: int,
     acc = _ax._accum(jnp.dtype(dtype), acc_dtype)
     inv_theta = jnp.ones((1, 1), acc)
 
-    def measure(sz: int) -> float:
+    def measure(sz: int, layout: str = "fold",
+                grid_order: str = "parallel") -> float:
         pext = _ax.sstep_extend_field(p2, grid, sz, s)
         rext = _ax.sstep_extend_field(r2, grid, sz, s)
         gext = _ax.sstep_extend_field(g3, grid, sz, s)
@@ -407,14 +410,9 @@ def _default_measure_sstep(grid: tuple[int, int, int], n: int, s: int,
             return _ax.nekbone_ax_powers_pallas(
                 pext, rext, D, D.T, gext, mx, my, mzext, cx, cy, cz,
                 inv_theta, n=n, grid=grid, sz=sz, s=s, interpret=False,
-                acc_dtype=acc_dtype)
+                acc_dtype=acc_dtype, layout=layout, grid_order=grid_order)
 
-        jax.block_until_ready(f()[0])          # compile + warm
-        t0 = time.perf_counter()
-        for _ in range(3):
-            out = f()
-        jax.block_until_ready(out[0])
-        return (time.perf_counter() - t0) / 3
+        return _timing.measure(f, reps=3, warmup=1)
 
     return measure
 
@@ -477,9 +475,7 @@ def candidate_slab_sizes_cheb(grid: tuple[int, int, int], n: int, k: int,
 
 def _default_measure_cheb(grid: tuple[int, int, int], n: int, k: int,
                           dtype, acc_dtype=None) -> Callable[[int], float]:
-    """Times the Chebyshev-apply kernel on synthetic data per slab count."""
-    import time
-
+    """Times the Chebyshev-apply kernel on synthetic data per config."""
     import numpy as np
 
     from repro.core.geom import box_axis_factors
@@ -498,7 +494,8 @@ def _default_measure_cheb(grid: tuple[int, int, int], n: int, k: int,
     acc = _ax._accum(jnp.dtype(dtype), acc_dtype)
     coef = jnp.ones((k + 1, 2), acc)
 
-    def measure(sz: int) -> float:
+    def measure(sz: int, layout: str = "fold",
+                grid_order: str = "parallel") -> float:
         rext = _ax.sstep_extend_field(r2, grid, sz, k)
         gext = _ax.sstep_extend_field(g3, grid, sz, k)
         mzext = _ax.sstep_extend_zfactor(jnp.asarray(mz, dtype), sz, k)
@@ -507,14 +504,9 @@ def _default_measure_cheb(grid: tuple[int, int, int], n: int, k: int,
             return _ax.nekbone_cheb_apply_pallas(
                 rext, D, D.T, gext, mx, my, mzext, cx, cy, cz, coef,
                 n=n, grid=grid, sz=sz, k=k, interpret=False,
-                acc_dtype=acc_dtype)
+                acc_dtype=acc_dtype, layout=layout, grid_order=grid_order)
 
-        jax.block_until_ready(f()[0])          # compile + warm
-        t0 = time.perf_counter()
-        for _ in range(3):
-            out = f()
-        jax.block_until_ready(out[0])
-        return (time.perf_counter() - t0) / 3
+        return _timing.measure(f, reps=3, warmup=1)
 
     return measure
 
@@ -544,6 +536,181 @@ def pick_slab_sz_cheb(grid: tuple[int, int, int], n: int, k: int,
             m = _default_measure_cheb(grid, n, k, dtype, acc_dtype)
         if m is None:
             return cands[0], False
+        return min(cands, key=m), True
+
+    return _cached_pick(key, pick)
+
+
+# ---------------------------------------------------------------------------
+# joint (contraction layout x slab sz x grid order) configs — the
+# measured-time sweep (DESIGN.md §11).  One pick per (backend/arch, case
+# key, precision policy, precond), persisted like the sz-only picks above.
+# ---------------------------------------------------------------------------
+
+def candidate_configs(sz_cands: list[int]) -> list[tuple[int, str, str]]:
+    """The joint sweep space: every (sz, layout, grid_order) triple.
+
+    Ordered sz-major with the historical (fold, parallel) point first per
+    sz, so a measured tie keeps the established configuration.
+    """
+    from repro.kernels.nekbone_ax import GRID_ORDERS, LAYOUTS
+
+    return [(sz, ly, go) for sz in sz_cands
+            for ly in LAYOUTS for go in GRID_ORDERS]
+
+
+def _pick_config(key: tuple, sz_cands: list[int], measure,
+                 default_measure_factory, backend: str):
+    """Shared joint-config selection: measured sweep on TPU (or with an
+    explicit ``measure(sz, layout, grid_order)``), else the heuristic
+    (largest-fitting sz, fold, parallel) — the pre-sweep configuration."""
+    def pick() -> tuple:
+        m = measure
+        if m is None and backend == "tpu":
+            m = default_measure_factory()
+        if m is None:
+            return (sz_cands[0], "fold", "parallel"), False
+        cands = candidate_configs(sz_cands)
+        return min(cands, key=lambda c: m(*c)), True
+
+    return _cached_pick(key, pick)
+
+
+def pick_slab_config(grid: tuple[int, int, int], n: int, dtype=jnp.float32,
+                     *, acc_dtype=None, backend: str | None = None,
+                     precond: str | None = None,
+                     measure=None) -> tuple[int, str, str]:
+    """Best ``(sz, layout, grid_order)`` for the v2 slab kernel, memoized.
+
+    The joint analog of :func:`pick_slab_sz`: on a TPU backend (or with an
+    explicit ``measure``) every (slab size x contraction layout x grid
+    iteration order) point is timed and the fastest wins; elsewhere the
+    heuristic keeps the historical (fold, parallel) configuration at the
+    VMEM-ceiling sz.  Keys use a new ``("cfg", "slab", ...)`` kind so
+    sz-only picks (and their persisted caches) are never aliased.
+    """
+    dtype = jnp.dtype(dtype)
+    backend = backend or jax.default_backend()
+    ex, ey, ez = grid
+    acc_name = _acc_name(dtype, acc_dtype)
+    key = ("cfg", "slab", n, ex, ey, ez, dtype.name, acc_name, backend)
+    if precond is not None:
+        key = key + (f"pc:{precond}",)
+    size_item = max(dtype.itemsize, jnp.dtype(acc_name).itemsize)
+    sz_cands = candidate_slab_sizes(grid, n, itemsize=size_item)
+    return _pick_config(
+        key, sz_cands, measure,
+        lambda: _default_measure_slab(grid, n, dtype, acc_dtype), backend)
+
+
+def pick_sstep_config(grid: tuple[int, int, int], n: int, s: int,
+                      dtype=jnp.float32, *, acc_dtype=None,
+                      backend: str | None = None,
+                      measure=None) -> tuple[int, str, str]:
+    """Best ``(sz, layout, grid_order)`` for the v3 powers kernel at ``s``."""
+    dtype = jnp.dtype(dtype)
+    backend = backend or jax.default_backend()
+    ex, ey, ez = grid
+    acc_name = _acc_name(dtype, acc_dtype)
+    key = ("cfg", "sstep", n, ex, ey, ez, s, dtype.name, acc_name, backend)
+    size_item = max(dtype.itemsize, jnp.dtype(acc_name).itemsize)
+    sz_cands = candidate_slab_sizes_sstep(grid, n, s, itemsize=size_item)
+    return _pick_config(
+        key, sz_cands, measure,
+        lambda: _default_measure_sstep(grid, n, s, dtype, acc_dtype), backend)
+
+
+def pick_cheb_config(grid: tuple[int, int, int], n: int, k: int,
+                     dtype=jnp.float32, *, acc_dtype=None,
+                     backend: str | None = None,
+                     measure=None) -> tuple[int, str, str]:
+    """Best ``(sz, layout, grid_order)`` for the Chebyshev-apply kernel."""
+    dtype = jnp.dtype(dtype)
+    backend = backend or jax.default_backend()
+    ex, ey, ez = grid
+    acc_name = _acc_name(dtype, acc_dtype)
+    key = ("cfg", "cheb", n, ex, ey, ez, k, dtype.name, acc_name, backend)
+    size_item = max(dtype.itemsize, jnp.dtype(acc_name).itemsize)
+    sz_cands = candidate_slab_sizes_cheb(grid, n, k, itemsize=size_item)
+    return _pick_config(
+        key, sz_cands, measure,
+        lambda: _default_measure_cheb(grid, n, k, dtype, acc_dtype), backend)
+
+
+# ---------------------------------------------------------------------------
+# pipeline dispatch (NekboneCase ax_impl="auto"): measured-fastest pipeline
+# per (backend, case key), with a documented E-threshold fallback
+# ---------------------------------------------------------------------------
+
+# Below this element count the v2 two-kernel slab pipeline loses to the v1
+# single-call kernel on every backend we have measured: v2's fixed
+# per-iteration overhead (a second pallas dispatch + the boundary-plane
+# stitch between them) is amortized over E elements, and under ~16
+# elements the amortization no longer covers it — the ROADMAP-cited
+# E=8 inversion (3206 us v2 vs 2596 us v1 on the quick backend).  The
+# heuristic only applies where wall time cannot be measured honestly
+# (non-TPU backends run kernels in interpret mode); on TPU the dispatch is
+# measured and cached instead.
+AUTO_V2_MIN_E = 16
+
+
+def _default_measure_pipeline(grid: tuple[int, int, int], n: int, dtype,
+                              acc_dtype=None) -> Callable[[str], float]:
+    """Times one fixed CG iteration of a full pipeline on the real case
+    shape (manufactured solution, same setup as the benches)."""
+    from repro.core import cg_fused as _cg
+    from repro.core.nekbone import NekboneCase
+
+    case = NekboneCase(n=n, grid=grid, dtype=dtype)
+    _, b = case.manufactured()
+
+    def measure(pipeline: str) -> float:
+        if pipeline == "pallas_fused_cg_v2":
+            def f():
+                return _cg.cg_fused_v2_fixed_iters(
+                    b, D=case.D, g=case.g, grid=grid, niter=1,
+                    mask=case.mask, c=case.c).x
+        else:
+            def f():
+                return _cg.cg_fused_fixed_iters(
+                    b, D=case.D, g=case.g, mask=case.mask, c=case.c,
+                    grid=grid, niter=1).x
+
+        return _timing.measure(f, reps=3, warmup=1)
+
+    return measure
+
+
+def pick_pipeline(grid: tuple[int, int, int], n: int, dtype=jnp.float32, *,
+                  acc_dtype=None, backend: str | None = None,
+                  precond: str | None = None, measure=None) -> str:
+    """The measured-fastest fused-CG pipeline for a case, memoized.
+
+    Returns an ``ax_impl`` name: ``"pallas_fused_cg"`` (v1) or
+    ``"pallas_fused_cg_v2"``.  Preconditioned cases always resolve to v2 —
+    the fused PCG drivers only exist there (DESIGN.md §9).  On TPU (or
+    with an explicit ``measure(pipeline) -> seconds``) both pipelines are
+    timed on the real case shape and the faster wins, persisted per
+    backend; elsewhere the documented :data:`AUTO_V2_MIN_E` threshold
+    decides (small E -> v1, the amortization argument above).
+    """
+    dtype = jnp.dtype(dtype)
+    backend = backend or jax.default_backend()
+    ex, ey, ez = grid
+    if precond is not None:
+        return "pallas_fused_cg_v2"
+    acc_name = _acc_name(dtype, acc_dtype)
+    key = ("pipeline", n, ex, ey, ez, dtype.name, acc_name, backend)
+
+    def pick() -> tuple:
+        m = measure
+        if m is None and backend == "tpu":
+            m = _default_measure_pipeline(grid, n, dtype, acc_dtype)
+        if m is None:
+            small = ex * ey * ez < AUTO_V2_MIN_E
+            return ("pallas_fused_cg" if small
+                    else "pallas_fused_cg_v2"), False
+        cands = ("pallas_fused_cg", "pallas_fused_cg_v2")
         return min(cands, key=m), True
 
     return _cached_pick(key, pick)

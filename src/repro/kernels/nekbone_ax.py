@@ -44,7 +44,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["nekbone_ax_kernel", "nekbone_ax_pallas", "ax_block",
+__all__ = ["LAYOUTS", "GRID_ORDERS",
+           "nekbone_ax_kernel", "nekbone_ax_pallas", "ax_block",
            "ax_block_diag", "nekbone_ax_dots_kernel", "nekbone_ax_dots_pallas",
            "nekbone_ax_pap_kernel", "nekbone_ax_pap_pallas",
            "nekbone_ax_slab_kernel", "nekbone_ax_slab_pallas",
@@ -86,12 +87,74 @@ def _dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.dot(a, b, preferred_element_type=acc)
 
 
-def _grad3(u: jnp.ndarray, Dt: jnp.ndarray, *, n: int, e: int):
+# Selectable contraction layouts for the per-layer tensor products (the
+# static ``layout`` kernel parameter; autotune sweeps them per backend):
+#
+#   fold — fold (e, plane) axes into the M dimension of a skinny 2-D matmul
+#          (e*n^2, n) x (n, n), transposing operands into position first
+#          (the historical order; one dot shape for all three directions).
+#   dng  — batched ``dot_general`` directly on the 4-D block, contracting
+#          the needed axis in place against the supplied matrix's *rows*;
+#          only the *output* is transposed into (e,k,j,i) order.
+#   dnt  — ``dot_general`` on the 4-D block contracting against the *other*
+#          orientation of the derivative matrix along its *columns*
+#          (flipped dimension numbers).  Both D and Dt are VMEM-resident in
+#          every kernel, so this needs no operand transposes at all — the
+#          matrix unit just sees the opposite operand orientation.
+#
+# Every layout computes each output element as the *same* length-n dot
+# product with the contraction kept innermost, so results are
+# bitwise-identical at fp64 (gated by tests/test_kernels_ax.py); only the
+# operand orientation the backend's matrix units see differs.  (A true
+# matrix-on-LHS placement is *not* offered: XLA reassociates that GEMM and
+# breaks bitwise parity, which the parity gate would reject.)
+LAYOUTS = ("fold", "dng", "dnt")
+
+# Grid-iteration-order knob for the slab-family pallas_calls: "parallel"
+# declares the (1-D) slab grid embarrassingly parallel (the historical
+# setting — lets Mosaic reorder/overlap block iterations), "arbitrary"
+# forces sequential issue order (can win when the slab working set thrashes
+# a shared cache level).  Swept jointly with (layout, sz) by autotune.
+GRID_ORDERS = ("parallel", "arbitrary")
+
+
+def _cfg_tag(layout: str, grid_order: str = "parallel") -> str:
+    """Kernel-name suffix for a non-default (layout, grid order) config."""
+    tag = "" if layout == "fold" else f"_ly{layout}"
+    if grid_order != "parallel":
+        tag += f"_go{grid_order}"
+    return tag
+
+
+def _dg(a: jnp.ndarray, m: jnp.ndarray, axis: int,
+        maxis: int = 0) -> jnp.ndarray:
+    """``dot_general`` contracting ``a``'s ``axis`` with matrix ``m``'s
+    ``maxis``; output dims = a's free dims (in order) + m's free dim last."""
+    acc = jnp.float64 if a.dtype == jnp.float64 else jnp.float32
+    return jax.lax.dot_general(a, m, (((axis,), (maxis,)), ((), ())),
+                               preferred_element_type=acc)
+
+
+def _grad3(u: jnp.ndarray, Dt: jnp.ndarray, *, n: int, e: int,
+           layout: str = "fold", D: jnp.ndarray | None = None):
     """Forward reference-space gradient on a VMEM block: (wr, ws, wt).
 
     Folds (e,k,j) / (e,k,i) / (e,j,i) into the M dimension of skinny matmuls
-    so the MXU sees (e*n^2, n) x (n, n) operands.
+    so the MXU sees (e*n^2, n) x (n, n) operands (``layout="fold"``), or
+    contracts the 4-D block in place via ``dot_general`` (``"dng"`` /
+    ``"dnt"`` — see ``LAYOUTS``; ``"dnt"`` contracts against ``D`` along its
+    columns and needs it passed in).
     """
+    if layout in ("dng", "dnt"):
+        u4 = u.reshape(e, n, n, n)
+        m, maxis = (Dt, 0) if layout == "dng" else (D, 1)
+        # wr[e,k,j,i] = sum_l u[e,k,j,l] Dt[l,i] — contract in place.
+        wr = _dg(u4, m, 3, maxis)
+        # ws[e,k,j,i] = sum_l u[e,k,l,i] Dt[l,j] -> (e,k,i,j), swap back.
+        ws = _dg(u4, m, 2, maxis).transpose(0, 1, 3, 2)
+        # wt[e,k,j,i] = sum_l u[e,l,j,i] Dt[l,k] -> (e,j,i,k), rotate back.
+        wt = _dg(u4, m, 1, maxis).transpose(0, 3, 1, 2)
+        return wr, ws, wt
     # wr[e,k,j,i] = sum_l u[e,k,j,l] D[i,l]      (M = e*n^2, K = n, N = n)
     wr = _dot(u.reshape(e * n * n, n), Dt).reshape(e, n, n, n)
     # ws[e,k,j,i] = sum_l u[e,k,l,i] D[j,l]: transpose j<->i, contract, undo.
@@ -106,8 +169,21 @@ def _grad3(u: jnp.ndarray, Dt: jnp.ndarray, *, n: int, e: int):
 
 
 def _grad3_t(ur: jnp.ndarray, us: jnp.ndarray, ut: jnp.ndarray,
-             D: jnp.ndarray, *, n: int, e: int) -> jnp.ndarray:
-    """Transposed gradient (weak-form assembly) on a VMEM block, (e, n^3)."""
+             D: jnp.ndarray, *, n: int, e: int, layout: str = "fold",
+             Dt: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Transposed gradient (weak-form assembly) on a VMEM block, (e, n^3).
+
+    The three contributions are summed in the same order under every
+    ``layout`` (fold order), so the reduction rounding is layout-invariant.
+    ``"dnt"`` contracts against ``Dt`` along its columns (Dt[i,l] = D[l,i])
+    and needs it passed in.
+    """
+    if layout in ("dng", "dnt"):
+        m, maxis = (D, 0) if layout == "dng" else (Dt, 1)
+        w = _dg(ur, m, 3, maxis)
+        w += _dg(us, m, 2, maxis).transpose(0, 1, 3, 2)
+        w += _dg(ut, m, 1, maxis).transpose(0, 3, 1, 2)
+        return w.reshape(e, n ** 3)
     # w += sum_l D[l,i] ur[e,k,j,l]  ==  ur @ D
     w = _dot(ur.reshape(e * n * n, n), D).reshape(e, n, n, n)
     us_kij = us.transpose(0, 1, 3, 2)
@@ -141,7 +217,8 @@ def ax_block(u: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
 
 
 def ax_block_diag(u: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
-                  g3: jnp.ndarray, *, n: int, e: int) -> jnp.ndarray:
+                  g3: jnp.ndarray, *, n: int, e: int,
+                  layout: str = "fold") -> jnp.ndarray:
     """``ax_block`` for a *diagonal* metric (axis-aligned box elements).
 
     For the structured box mesh the off-diagonal metric entries are
@@ -153,9 +230,10 @@ def ax_block_diag(u: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
     Args:
       u: (e, n^3); g3: (e, 3, n^3) metric diagonal (rr, ss, tt).
     """
-    wr, ws, wt = _grad3(u, Dt, n=n, e=e)
+    wr, ws, wt = _grad3(u, Dt, n=n, e=e, layout=layout, D=D)
     grr, gss, gtt = (g3[:, m, :].reshape(e, n, n, n) for m in range(3))
-    return _grad3_t(grr * wr, gss * ws, gtt * wt, D, n=n, e=e)
+    return _grad3_t(grr * wr, gss * ws, gtt * wt, D, n=n, e=e, layout=layout,
+                    Dt=Dt)
 
 
 def nekbone_ax_kernel(u_ref, d_ref, dt_ref, g_ref, w_ref, *, n: int,
@@ -397,7 +475,8 @@ def nekbone_ax_pap_pallas(p2: jnp.ndarray, D: jnp.ndarray, Dt: jnp.ndarray,
 def nekbone_ax_slab_kernel(p_ref, r_ref, d_ref, dt_ref, g_ref, mx_ref, my_ref,
                            mz_ref, beta_ref, p_out, w_ref, bot_ref, top_ref,
                            pap_ref, *, n: int, ex: int, ey: int, sz: int,
-                           acc_dtype: str | None = None):
+                           acc_dtype: str | None = None,
+                           layout: str = "fold"):
     """Fused CG front-half on one block of ``sz`` whole z-slabs.
 
     In one VMEM residency:
@@ -440,7 +519,7 @@ def nekbone_ax_slab_kernel(p_ref, r_ref, d_ref, dt_ref, g_ref, mx_ref, my_ref,
     D = d_ref[...].astype(f32)
     Dt = dt_ref[...].astype(f32)
     g3 = g_ref[...].astype(f32)
-    w = ax_block_diag(p, D, Dt, g3, n=n, e=block_e)
+    w = ax_block_diag(p, D, Dt, g3, n=n, e=block_e, layout=layout)
 
     # structural mask: outer product of the three per-axis 0/1 factors
     mask = _box_outer(mz_ref[...].astype(f32), my_ref[...].astype(f32),
@@ -474,14 +553,17 @@ def nekbone_ax_slab_kernel(p_ref, r_ref, d_ref, dt_ref, g_ref, mx_ref, my_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "interpret",
-                                             "acc_dtype"))
+                                             "acc_dtype", "layout",
+                                             "grid_order"))
 def nekbone_ax_slab_pallas(p2: jnp.ndarray, r2: jnp.ndarray, D: jnp.ndarray,
                            Dt: jnp.ndarray, g3: jnp.ndarray, mx: jnp.ndarray,
                            my: jnp.ndarray, mz: jnp.ndarray,
                            beta: jnp.ndarray, *, n: int,
                            grid: tuple[int, int, int], sz: int,
                            interpret: bool = False,
-                           acc_dtype: str | None = None):
+                           acc_dtype: str | None = None,
+                           layout: str = "fold",
+                           grid_order: str = "parallel"):
     """Multi-output pallas_call for the v2 slab dots kernel.
 
     Args:
@@ -490,6 +572,8 @@ def nekbone_ax_slab_pallas(p2: jnp.ndarray, r2: jnp.ndarray, D: jnp.ndarray,
       ``EZ % sz == 0`` and elements z-major.
       acc_dtype: explicit accumulation dtype (precision policy); the field
       outputs stay in the storage dtype of ``p2``, the pap partials in acc.
+      layout/grid_order: static contraction layout (``LAYOUTS``) and grid
+      iteration order (``GRID_ORDERS``) — autotuned jointly with ``sz``.
 
     Returns ``(p2_new, w2, bot, top, pap_parts)`` with the boundary planes of
     shape ``(EZ//sz, EY*EX*n^2)`` and partials ``(EZ//sz, 1)``.
@@ -506,7 +590,7 @@ def nekbone_ax_slab_pallas(p2: jnp.ndarray, r2: jnp.ndarray, D: jnp.ndarray,
     plane = pl.BlockSpec((1, pln), lambda i: (i, 0))
     return pl.pallas_call(
         functools.partial(nekbone_ax_slab_kernel, n=n, ex=ex, ey=ey, sz=sz,
-                          acc_dtype=acc_dtype),
+                          acc_dtype=acc_dtype, layout=layout),
         grid=(nblk,),
         in_specs=[
             field,                                      # p_prev
@@ -529,10 +613,11 @@ def nekbone_ax_slab_pallas(p2: jnp.ndarray, r2: jnp.ndarray, D: jnp.ndarray,
             jax.ShapeDtypeStruct((nblk, 1), acc),
         ),
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel",),
+            dimension_semantics=(grid_order,),
         ),
         interpret=interpret,
-        name=f"nekbone_ax_slab_n{n}_sz{sz}{_acc_tag(acc_dtype)}",
+        name=(f"nekbone_ax_slab_n{n}_sz{sz}{_acc_tag(acc_dtype)}"
+              f"{_cfg_tag(layout, grid_order)}"),
     )(p2, r2, D, Dt, g3, mx, my, mz, beta)
 
 
@@ -723,7 +808,8 @@ def nekbone_ax_powers_kernel(pext_ref, rext_ref, d_ref, dt_ref, gext_ref,
                              mx_ref, my_ref, mzext_ref, cx_ref, cy_ref,
                              cz_ref, th_ref, basis_ref, gram_ref, *, n: int,
                              ex: int, ey: int, sz: int, s: int, halo: int,
-                             acc_dtype: str | None = None):
+                             acc_dtype: str | None = None,
+                             layout: str = "fold"):
     """Matrix-powers front-half of one s-step CG cycle, one slab block.
 
     In one VMEM residency over ``L = sz + 2*halo`` slabs (``halo = s``):
@@ -772,7 +858,7 @@ def nekbone_ax_powers_kernel(pext_ref, rext_ref, d_ref, dt_ref, gext_ref,
 
     def apply_scaled(v):
         """One masked, block-assembled, theta-scaled operator application."""
-        w = ax_block_diag(v, D, Dt, g3, n=n, e=Lee)
+        w = ax_block_diag(v, D, Dt, g3, n=n, e=Lee, layout=layout)
         v6 = w.reshape(L, ey, ex, n, n, n) * mask
         if ex > 1:
             t = v6[:, :, :-1, :, :, -1] + v6[:, :, 1:, :, :, 0]
@@ -817,7 +903,8 @@ def nekbone_ax_powers_kernel(pext_ref, rext_ref, d_ref, dt_ref, gext_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "s",
-                                             "interpret", "acc_dtype"))
+                                             "interpret", "acc_dtype",
+                                             "layout", "grid_order"))
 def nekbone_ax_powers_pallas(pext: jnp.ndarray, rext: jnp.ndarray,
                              D: jnp.ndarray, Dt: jnp.ndarray,
                              gext: jnp.ndarray, mx: jnp.ndarray,
@@ -826,7 +913,9 @@ def nekbone_ax_powers_pallas(pext: jnp.ndarray, rext: jnp.ndarray,
                              cz: jnp.ndarray, inv_theta: jnp.ndarray, *,
                              n: int, grid: tuple[int, int, int], sz: int,
                              s: int, interpret: bool = False,
-                             acc_dtype: str | None = None):
+                             acc_dtype: str | None = None,
+                             layout: str = "fold",
+                             grid_order: str = "parallel"):
     """Multi-output pallas_call for the v3 matrix-powers kernel.
 
     Args:
@@ -855,7 +944,8 @@ def nekbone_ax_powers_pallas(pext: jnp.ndarray, rext: jnp.ndarray,
     ext = pl.BlockSpec((1, Lee, n3), lambda i: (i, 0, 0))
     return pl.pallas_call(
         functools.partial(nekbone_ax_powers_kernel, n=n, ex=ex, ey=ey,
-                          sz=sz, s=s, halo=halo, acc_dtype=acc_dtype),
+                          sz=sz, s=s, halo=halo, acc_dtype=acc_dtype,
+                          layout=layout),
         grid=(nblk,),
         in_specs=[
             ext,                                        # p window
@@ -878,10 +968,11 @@ def nekbone_ax_powers_pallas(pext: jnp.ndarray, rext: jnp.ndarray,
             jax.ShapeDtypeStruct((nblk, K, K), acc),
         ),
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel",),
+            dimension_semantics=(grid_order,),
         ),
         interpret=interpret,
-        name=f"nekbone_ax_powers_n{n}_sz{sz}_s{s}{_acc_tag(acc_dtype)}",
+        name=(f"nekbone_ax_powers_n{n}_sz{sz}_s{s}{_acc_tag(acc_dtype)}"
+              f"{_cfg_tag(layout, grid_order)}"),
     )(pext, rext, D, Dt, gext, mx, my, mzext, cx, cy, cz, inv_theta)
 
 
@@ -1125,7 +1216,8 @@ def nekbone_cheb_apply_kernel(rext_ref, d_ref, dt_ref, gext_ref, mx_ref,
                               my_ref, mzext_ref, cx_ref, cy_ref, cz_ref,
                               coef_ref, z_ref, rtz_ref, *, n: int, ex: int,
                               ey: int, sz: int, k: int, halo: int,
-                              acc_dtype: str | None = None):
+                              acc_dtype: str | None = None,
+                              layout: str = "fold"):
     """Chebyshev preconditioner application, one slab block (DESIGN.md §9.3).
 
     Evaluates ``z = q_k(A) r`` — the degree-k Chebyshev-semi-iteration
@@ -1174,7 +1266,7 @@ def nekbone_cheb_apply_kernel(rext_ref, d_ref, dt_ref, gext_ref, mx_ref,
 
     def apply_a(v):
         """One masked, block-assembled operator application (unscaled)."""
-        w = ax_block_diag(v, D, Dt, g3, n=n, e=Lee)
+        w = ax_block_diag(v, D, Dt, g3, n=n, e=Lee, layout=layout)
         v6 = w.reshape(L, ey, ex, n, n, n) * mask
         if ex > 1:
             t = v6[:, :, :-1, :, :, -1] + v6[:, :, 1:, :, :, 0]
@@ -1211,7 +1303,8 @@ def nekbone_cheb_apply_kernel(rext_ref, d_ref, dt_ref, gext_ref, mx_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "k",
-                                             "interpret", "acc_dtype"))
+                                             "interpret", "acc_dtype",
+                                             "layout", "grid_order"))
 def nekbone_cheb_apply_pallas(rext: jnp.ndarray, D: jnp.ndarray,
                               Dt: jnp.ndarray, gext: jnp.ndarray,
                               mx: jnp.ndarray, my: jnp.ndarray,
@@ -1220,7 +1313,9 @@ def nekbone_cheb_apply_pallas(rext: jnp.ndarray, D: jnp.ndarray,
                               coef: jnp.ndarray, *, n: int,
                               grid: tuple[int, int, int], sz: int, k: int,
                               interpret: bool = False,
-                              acc_dtype: str | None = None):
+                              acc_dtype: str | None = None,
+                              layout: str = "fold",
+                              grid_order: str = "parallel"):
     """Multi-output pallas_call for the Chebyshev-apply kernel.
 
     Args:
@@ -1248,7 +1343,8 @@ def nekbone_cheb_apply_pallas(rext: jnp.ndarray, D: jnp.ndarray,
     ext = pl.BlockSpec((1, Lee, n3), lambda i: (i, 0, 0))
     return pl.pallas_call(
         functools.partial(nekbone_cheb_apply_kernel, n=n, ex=ex, ey=ey,
-                          sz=sz, k=k, halo=halo, acc_dtype=acc_dtype),
+                          sz=sz, k=k, halo=halo, acc_dtype=acc_dtype,
+                          layout=layout),
         grid=(nblk,),
         in_specs=[
             ext,                                        # r window
@@ -1270,8 +1366,9 @@ def nekbone_cheb_apply_pallas(rext: jnp.ndarray, D: jnp.ndarray,
             jax.ShapeDtypeStruct((nblk, 1), acc),
         ),
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel",),
+            dimension_semantics=(grid_order,),
         ),
         interpret=interpret,
-        name=f"nekbone_cheb_apply_n{n}_sz{sz}_k{k}{_acc_tag(acc_dtype)}",
+        name=(f"nekbone_cheb_apply_n{n}_sz{sz}_k{k}{_acc_tag(acc_dtype)}"
+              f"{_cfg_tag(layout, grid_order)}"),
     )(rext, D, Dt, gext, mx, my, mzext, cx, cy, cz, coef)

@@ -160,6 +160,8 @@ def nekbone_ax_dots_slab(p_prev: jnp.ndarray, r: jnp.ndarray,
                          D: jnp.ndarray, g3: jnp.ndarray,
                          grid: tuple[int, int, int], *, beta: float = 0.0,
                          sz: int | None = None,
+                         layout: str | None = None,
+                         grid_order: str | None = None,
                          interpret: bool | None = None,
                          acc_dtype: str | None = None):
     """v2 slab dots kernel on natural shapes, with the planes stitched.
@@ -177,6 +179,10 @@ def nekbone_ax_dots_slab(p_prev: jnp.ndarray, r: jnp.ndarray,
          validated zero, then dropped — see :func:`diag_metric`).
       grid: (EX, EY, EZ); beta: direction-update scalar.
       sz: slabs per block (default: autotuned divisor of EZ).
+      layout, grid_order: contraction layout / grid iteration order
+        (defaults: jointly autotuned with sz when all three are None,
+        see :func:`repro.kernels.autotune.pick_slab_config`; otherwise
+        the historical ``("fold", "parallel")``).
       acc_dtype: explicit in-kernel accumulation dtype (precision policy).
 
     Returns ``(p, w, pap)`` with ``pap == p·c·(mask gs w_local)`` tree-
@@ -186,9 +192,14 @@ def nekbone_ax_dots_slab(p_prev: jnp.ndarray, r: jnp.ndarray,
     E = p_prev.shape[0]
     n = p_prev.shape[-1]
     interpret = default_interpret() if interpret is None else interpret
-    if sz is None:
+    if sz is None and layout is None and grid_order is None:
+        sz, layout, grid_order = _autotune.pick_slab_config(
+            grid, n, p_prev.dtype, acc_dtype=acc_dtype)
+    elif sz is None:
         sz = _autotune.pick_slab_sz(grid, n, p_prev.dtype,
                                     acc_dtype=acc_dtype)
+    layout = "fold" if layout is None else layout
+    grid_order = "parallel" if grid_order is None else grid_order
     n3 = n ** 3
     nblk = ez // sz
     (mx, my, mz), _ = slab_axis_factors(grid, n, p_prev.dtype)
@@ -200,7 +211,7 @@ def nekbone_ax_dots_slab(p_prev: jnp.ndarray, r: jnp.ndarray,
         p_prev.reshape(E, n3), r.reshape(E, n3), D, D.T,
         g3, mx, my, mz,
         beta_arr, n=n, grid=grid, sz=sz, interpret=interpret,
-        acc_dtype=acc_dtype)
+        acc_dtype=acc_dtype, layout=layout, grid_order=grid_order)
     vb = w2.reshape(nblk, sz, ey, ex, n, n, n)
     plane = (nblk - 1, ey, ex, n, n)
     if nblk > 1:
@@ -213,6 +224,8 @@ def nekbone_ax_dots_slab(p_prev: jnp.ndarray, r: jnp.ndarray,
 def nekbone_ax_powers(p: jnp.ndarray, r: jnp.ndarray, D: jnp.ndarray,
                       g3: jnp.ndarray, grid: tuple[int, int, int], *,
                       s: int, theta: float = 1.0, sz: int | None = None,
+                      layout: str | None = None,
+                      grid_order: str | None = None,
                       interpret: bool | None = None,
                       acc_dtype: str | None = None):
     """v3 matrix-powers kernel on natural shapes (DESIGN.md §8).
@@ -228,6 +241,9 @@ def nekbone_ax_powers(p: jnp.ndarray, r: jnp.ndarray, D: jnp.ndarray,
       D: (n, n); g3: diagonal (E, 3, ...) or verifiably-diagonal 6-component
          metric; theta: basis scale (``A' = A/theta``).
       s: powers per cycle (>= 1); sz: slabs per block (default: autotuned).
+      layout, grid_order: contraction layout / grid iteration order
+        (defaults: jointly autotuned with sz when all three are None,
+        see :func:`repro.kernels.autotune.pick_sstep_config`).
 
     Returns ``(basis, gram)``: basis ``(E, 2s-1, n, n, n)`` holding
     ``[A'p..A'^s p, A'r..A'^{s-1} r]`` and the summed ``(2s+1, 2s+1)``
@@ -237,9 +253,14 @@ def nekbone_ax_powers(p: jnp.ndarray, r: jnp.ndarray, D: jnp.ndarray,
     E = p.shape[0]
     n = p.shape[-1]
     interpret = default_interpret() if interpret is None else interpret
-    if sz is None:
+    if sz is None and layout is None and grid_order is None:
+        sz, layout, grid_order = _autotune.pick_sstep_config(
+            grid, n, s, p.dtype, acc_dtype=acc_dtype)
+    elif sz is None:
         sz = _autotune.pick_slab_sz_sstep(grid, n, s, p.dtype,
                                           acc_dtype=acc_dtype)
+    layout = "fold" if layout is None else layout
+    grid_order = "parallel" if grid_order is None else grid_order
     n3 = n ** 3
     (mx, my, mz), (cx, cy, cz) = slab_axis_factors(grid, n, p.dtype)
     D = jnp.asarray(D, p.dtype)
@@ -252,7 +273,8 @@ def nekbone_ax_powers(p: jnp.ndarray, r: jnp.ndarray, D: jnp.ndarray,
     inv_theta = jnp.full((1, 1), 1.0 / theta, acc)
     basis, gram_b = _ax.nekbone_ax_powers_pallas(
         pext, rext, D, D.T, gext, mx, my, mzext, cx, cy, cz, inv_theta,
-        n=n, grid=grid, sz=sz, s=s, interpret=interpret, acc_dtype=acc_dtype)
+        n=n, grid=grid, sz=sz, s=s, interpret=interpret, acc_dtype=acc_dtype,
+        layout=layout, grid_order=grid_order)
     return (basis.reshape(E, 2 * s - 1, n, n, n), jnp.sum(gram_b, axis=0))
 
 
@@ -392,6 +414,8 @@ def nekbone_pcg_update(x: jnp.ndarray, p: jnp.ndarray, z: jnp.ndarray,
 def nekbone_cheb_precond(r: jnp.ndarray, D: jnp.ndarray, g3: jnp.ndarray,
                          coef: jnp.ndarray, grid: tuple[int, int, int], *,
                          k: int, sz: int | None = None,
+                         layout: str | None = None,
+                         grid_order: str | None = None,
                          interpret: bool | None = None,
                          acc_dtype: str | None = None):
     """Chebyshev preconditioner application on natural shapes.
@@ -409,6 +433,9 @@ def nekbone_cheb_precond(r: jnp.ndarray, D: jnp.ndarray, g3: jnp.ndarray,
          (:func:`repro.core.precond.cheb_scalars`).
       k: polynomial degree (>= 1); sz: slabs per block (default:
          autotuned, :func:`repro.kernels.autotune.pick_slab_sz_cheb`).
+      layout, grid_order: contraction layout / grid iteration order
+        (defaults: jointly autotuned with sz when all three are None,
+        see :func:`repro.kernels.autotune.pick_cheb_config`).
 
     Returns ``(z, rtz)``.
     """
@@ -416,9 +443,14 @@ def nekbone_cheb_precond(r: jnp.ndarray, D: jnp.ndarray, g3: jnp.ndarray,
     E = r.shape[0]
     n = r.shape[-1]
     interpret = default_interpret() if interpret is None else interpret
-    if sz is None:
+    if sz is None and layout is None and grid_order is None:
+        sz, layout, grid_order = _autotune.pick_cheb_config(
+            grid, n, k, r.dtype, acc_dtype=acc_dtype)
+    elif sz is None:
         sz = _autotune.pick_slab_sz_cheb(grid, n, k, r.dtype,
                                          acc_dtype=acc_dtype)
+    layout = "fold" if layout is None else layout
+    grid_order = "parallel" if grid_order is None else grid_order
     n3 = n ** 3
     (mx, my, mz), (cx, cy, cz) = slab_axis_factors(grid, n, r.dtype)
     D = jnp.asarray(D, r.dtype)
@@ -430,7 +462,8 @@ def nekbone_cheb_precond(r: jnp.ndarray, D: jnp.ndarray, g3: jnp.ndarray,
     z2, rtz_b = _ax.nekbone_cheb_apply_pallas(
         rext, D, D.T, gext, mx, my, mzext, cx, cy, cz,
         jnp.asarray(coef, acc), n=n, grid=grid, sz=sz, k=k,
-        interpret=interpret, acc_dtype=acc_dtype)
+        interpret=interpret, acc_dtype=acc_dtype,
+        layout=layout, grid_order=grid_order)
     return z2.reshape(r.shape), jnp.sum(rtz_b)
 
 

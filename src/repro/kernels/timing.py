@@ -1,0 +1,66 @@
+"""The one wall-clock measurement helper (DESIGN.md §11).
+
+Every measured-time consumer — the autotune sweeps in
+``kernels/autotune.py`` and the bench modules under ``benchmarks/`` (via
+the ``benchmarks.timing`` re-export) — times through :func:`measure`, so
+warmup handling and the median-of-reps estimator cannot drift apart
+between the tuner and the benches that validate its picks.
+
+Methodology: ``warmup`` calls are discarded (they absorb compilation and
+first-touch cache effects), then each of ``reps`` calls is synced and
+timed *individually* and the median is returned — the median is robust to
+the one-sided noise wall-clock suffers (preemption, clock migration can
+only add time, so the mean over-reports).  ``timer`` and ``sync`` are
+injectable for unit tests (tests/test_timing.py).
+"""
+from __future__ import annotations
+
+import time
+
+__all__ = ["measure", "median"]
+
+
+def median(xs) -> float:
+    """Median of a non-empty sequence (upper median for even lengths —
+    the conservative choice for one-sided timing noise)."""
+    xs = sorted(xs)
+    if not xs:
+        raise ValueError("median() of empty sequence")
+    return xs[len(xs) // 2]
+
+
+def _default_sync(x):
+    import jax
+    return jax.block_until_ready(x)
+
+
+def measure(fn, *args, reps: int = 5, warmup: int = 1, timer=None,
+            sync=None) -> float:
+    """Median wall-clock seconds of ``sync(fn(*args))`` over ``reps`` calls,
+    after ``warmup`` discarded calls.
+
+    Args:
+      fn: callable under test; its (possibly async-dispatched) result is
+        passed through ``sync`` so the work is actually finished inside
+        the timed region.
+      reps: timed repetitions (must be >= 1); the *median* is returned.
+      warmup: discarded leading calls (compile + cache warm; may be 0 when
+        the callable is already warm).
+      timer: monotonic clock, ``time.perf_counter`` by default.
+      sync: completion barrier, ``jax.block_until_ready`` by default
+        (imported lazily so non-jax callables can use this too).
+    """
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1, got {reps}")
+    if warmup < 0:
+        raise ValueError(f"warmup must be >= 0, got {warmup}")
+    timer = time.perf_counter if timer is None else timer
+    sync = _default_sync if sync is None else sync
+    for _ in range(warmup):
+        sync(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = timer()
+        sync(fn(*args))
+        ts.append(timer() - t0)
+    return median(ts)

@@ -364,3 +364,157 @@ def test_clear_cache_removes_disk():
     autotune.clear_cache()
     assert not autotune.cache_path().exists()
     assert not autotune.cache_info()
+
+
+# ---------------------------------------------------------------------------
+# joint (sz x layout x grid_order) configs + pipeline dispatch (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def test_candidate_configs_cover_the_sweep_space():
+    from repro.kernels.nekbone_ax import GRID_ORDERS, LAYOUTS
+
+    cands = autotune.candidate_configs([4, 2, 1])
+    assert len(cands) == 3 * len(LAYOUTS) * len(GRID_ORDERS)
+    assert len(set(cands)) == len(cands)
+    # sz-major with the historical (fold, parallel) point first per sz,
+    # so a measured tie keeps the established configuration
+    assert cands[0] == (4, "fold", "parallel")
+    assert cands[len(LAYOUTS) * len(GRID_ORDERS)] == (2, "fold", "parallel")
+
+
+def test_pick_slab_config_heuristic_is_pre_sweep_point():
+    def boom(sz, layout, grid_order):
+        raise AssertionError("must not measure on cpu")
+
+    cfg = autotune.pick_slab_config((2, 2, 8), 4, jnp.float32, backend="cpu")
+    assert cfg == (autotune.candidate_slab_sizes((2, 2, 8), 4)[0],
+                   "fold", "parallel")
+    # heuristic picks stay memory-only (like the sz-only picks)
+    assert not autotune.cache_path().exists()
+
+
+def test_pick_slab_config_measured_winner_and_persistence():
+    def measure(sz, layout, grid_order):
+        # a non-default point must win: (2, dng, arbitrary)
+        return 0.0 if (sz, layout, grid_order) == (2, "dng", "arbitrary") \
+            else 1.0 + sz
+
+    cfg = autotune.pick_slab_config((2, 2, 8), 4, jnp.float32,
+                                    backend="tpu", measure=measure)
+    assert cfg == (2, "dng", "arbitrary")
+    assert autotune.cache_path().exists()
+
+    # fresh process: reload from disk, tuple round-trips intact
+    autotune._CACHE.clear()
+    autotune._DISK_LOADED = False
+
+    def boom(sz, layout, grid_order):
+        raise AssertionError("disk-cached pick must not re-measure")
+
+    cfg2 = autotune.pick_slab_config((2, 2, 8), 4, jnp.float32,
+                                     backend="tpu", measure=boom)
+    assert cfg2 == cfg
+    assert isinstance(cfg2, tuple)
+
+
+def test_cfg_keys_never_alias_sz_only_keys():
+    """The joint picks live under a ("cfg", kind, ...) namespace: a
+    measured sz-only pick and a joint pick for the same case must coexist
+    under distinct keys."""
+    autotune.pick_slab_sz((2, 2, 8), 4, jnp.float32, backend="tpu",
+                          measure=lambda sz: float(sz))
+    autotune.pick_slab_config((2, 2, 8), 4, jnp.float32, backend="tpu",
+                              measure=lambda sz, ly, go: float(sz))
+    info = autotune.cache_info()
+    assert ("slab", 4, 2, 2, 8, "float32", "float32", "tpu") in info
+    assert ("cfg", "slab", 4, 2, 2, 8, "float32", "float32", "tpu") in info
+
+
+def test_cfg_keys_carry_s_k_and_precond_dimensions():
+    calls = []
+
+    def measure(sz, layout, grid_order):
+        calls.append((sz, layout, grid_order))
+        return float(sz)
+
+    autotune.pick_sstep_config((2, 2, 8), 4, 2, jnp.float32,
+                               backend="tpu", measure=measure)
+    autotune.pick_sstep_config((2, 2, 8), 4, 4, jnp.float32,
+                               backend="tpu", measure=measure)
+    autotune.pick_cheb_config((2, 2, 8), 4, 2, jnp.float32,
+                              backend="tpu", measure=measure)
+    autotune.pick_slab_config((2, 2, 8), 4, jnp.float32, backend="tpu",
+                              precond="jacobi", measure=measure)
+    info = autotune.cache_info()
+    assert ("cfg", "sstep", 4, 2, 2, 8, 2, "float32", "float32", "tpu") \
+        in info
+    assert ("cfg", "sstep", 4, 2, 2, 8, 4, "float32", "float32", "tpu") \
+        in info
+    assert ("cfg", "cheb", 4, 2, 2, 8, 2, "float32", "float32", "tpu") \
+        in info
+    assert ("cfg", "slab", 4, 2, 2, 8, "float32", "float32", "tpu",
+            "pc:jacobi") in info
+
+
+def test_pick_pipeline_heuristic_threshold():
+    # below AUTO_V2_MIN_E the fixed v2 overhead is not amortized -> v1
+    assert autotune.pick_pipeline((2, 2, 2), 4, backend="cpu") \
+        == "pallas_fused_cg"
+    assert autotune.pick_pipeline((4, 4, 4), 4, backend="cpu") \
+        == "pallas_fused_cg_v2"
+    # heuristic picks never reach the disk cache
+    assert not autotune.cache_path().exists()
+
+
+def test_pick_pipeline_preconditioned_always_v2():
+    """The fused PCG drivers only exist in v2 — no measurement, no cache
+    entry, any E."""
+    before = len(autotune.cache_info())
+
+    def boom(pipeline):
+        raise AssertionError("precond dispatch must not measure")
+
+    got = autotune.pick_pipeline((2, 2, 2), 4, backend="tpu",
+                                 precond="jacobi", measure=boom)
+    assert got == "pallas_fused_cg_v2"
+    assert len(autotune.cache_info()) == before
+
+
+def test_pick_pipeline_measured_winner_persists():
+    def measure(pipeline):
+        return 1.0 if pipeline == "pallas_fused_cg_v2" else 2.0
+
+    got = autotune.pick_pipeline((4, 4, 8), 4, jnp.float32, backend="tpu",
+                                 measure=measure)
+    assert got == "pallas_fused_cg_v2"
+
+    autotune._CACHE.clear()
+    autotune._DISK_LOADED = False
+
+    def boom(pipeline):
+        raise AssertionError("disk-cached pipeline must not re-measure")
+
+    assert autotune.pick_pipeline((4, 4, 8), 4, jnp.float32, backend="tpu",
+                                  measure=boom) == "pallas_fused_cg_v2"
+    # str values survive the JSON round-trip as str (not listified)
+    assert isinstance(autotune.pick_pipeline((4, 4, 8), 4, jnp.float32,
+                                             backend="tpu"), str)
+
+
+def test_case_ax_impl_auto_resolves_and_records_request():
+    from repro.core.nekbone import NekboneCase
+
+    case = NekboneCase(n=3, grid=(2, 2, 2), dtype=jnp.float32,
+                       ax_impl="auto")
+    assert case.ax_impl_requested == "auto"
+    assert case.ax_impl in ("pallas_fused_cg", "pallas_fused_cg_v2")
+    # E=8 < AUTO_V2_MIN_E on the CPU heuristic -> v1
+    if autotune.jax.default_backend() == "cpu":
+        assert case.ax_impl == "pallas_fused_cg"
+    big = NekboneCase(n=3, grid=(4, 4, 4), dtype=jnp.float32,
+                      ax_impl="auto")
+    assert big.ax_impl == "pallas_fused_cg_v2"
+    # preconditioned auto: the fused PCG drivers force v2 at any E
+    pc = NekboneCase(n=3, grid=(2, 2, 2), dtype=jnp.float32,
+                     ax_impl="auto", precond="jacobi")
+    assert pc.ax_impl == "pallas_fused_cg_v2"

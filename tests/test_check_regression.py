@@ -12,14 +12,21 @@ from benchmarks.check_regression import compare, load_bench_json, main
 
 BASELINE = (pathlib.Path(__file__).parent.parent / "benchmarks" /
             "baseline" / "BENCH_baseline.json")
+_BASELINE_DATA = json.loads(BASELINE.read_text())
 
 
 def _payload(**overrides):
+    # the analytic tables come from the live helpers (so the test fails
+    # when run.py and the cost model drift apart); the measured us/iter
+    # rows and their backend are mirrored from the committed baseline —
+    # a synthetic payload has no wall clock of its own to offer.
     base = {
-        "schema": "repro-bench/5",
-        "schema_version": 5,
+        "schema": "repro-bench/6",
+        "schema_version": 6,
+        "reference_backend": _BASELINE_DATA.get("reference_backend", "cpu"),
         "streams_per_iter": bench_run._streams_ladder(),
         "bytes_per_dof_iter": bench_run._precision_table(),
+        "us_per_iter": dict(_BASELINE_DATA.get("us_per_iter", {})),
         "sections": [],
     }
     base.update(overrides)
@@ -103,6 +110,110 @@ def test_bf16_half_of_f32_invariant():
     fresh["bytes_per_dof_iter"]["fused_v2"]["bf16"]["read"] = 40
     problems = compare(fresh, _payload(), tol=0.05)
     assert any("half" in p for p in problems)
+
+
+# ---------------------------------------------------------------------------
+# us/iter wall-clock band (schema v6, DESIGN.md §11.4)
+# ---------------------------------------------------------------------------
+
+def _with_timing(payload, row="cg_fused_v2_iter_e8", us=1000.0):
+    payload["us_per_iter"] = {row: us}
+    return payload
+
+
+def test_timing_within_band_passes_and_regression_fails():
+    base = _with_timing(_payload())
+    ok = _with_timing(_payload(), us=1050.0)          # +5% < +10% band
+    assert compare(ok, base) == []
+    slow = _with_timing(_payload(), us=1200.0)        # +20%
+    problems = compare(slow, base)
+    assert any("us/iter" in p and "regressed" in p for p in problems)
+
+
+def test_timing_band_is_one_sided_faster_warns_to_refresh():
+    base = _with_timing(_payload())
+    fast = _with_timing(_payload(), us=500.0)
+    warnings = []
+    assert compare(fast, base, warnings=warnings) == []
+    assert any("faster" in w and "refresh" in w for w in warnings)
+
+
+def test_timing_tol_is_adjustable():
+    base = _with_timing(_payload())
+    slow = _with_timing(_payload(), us=1200.0)
+    assert compare(slow, base, timing_tol=0.25) == []
+
+
+def test_timing_backend_mismatch_downgrades_to_warning():
+    """Wall time measured on another backend kind says nothing — even a
+    10x 'regression' must not fail, only warn that the rows are skipped."""
+    base = _with_timing(_payload(reference_backend="cpu"))
+    fresh = _with_timing(_payload(reference_backend="tpu"), us=10000.0)
+    warnings = []
+    assert compare(fresh, base, warnings=warnings) == []
+    assert any("backend mismatch" in w for w in warnings)
+
+
+def test_timing_table_vanishing_is_a_violation():
+    base = _with_timing(_payload())
+    fresh = _payload()
+    del fresh["us_per_iter"]
+    problems = compare(fresh, base)
+    assert any("us_per_iter" in p for p in problems)
+    # a pinned row individually missing is a violation too
+    fresh = _with_timing(_payload(), row="some_other_row")
+    problems = compare(fresh, base)
+    assert any("missing" in p and "cg_fused_v2_iter_e8" in p
+               for p in problems)
+
+
+def test_timing_problems_routed_separately_when_asked():
+    """The caller's timing_problems list receives the violations so main()
+    can soften them (--timing-warn-only) without touching hard rows."""
+    base = _with_timing(_payload())
+    slow = _with_timing(_payload(), us=1200.0)
+    timing = []
+    assert compare(slow, base, timing_problems=timing) == []
+    assert len(timing) == 1 and "regressed" in timing[0]
+
+
+def test_new_timing_row_warns_not_fails():
+    base = _with_timing(_payload())
+    fresh = _payload()
+    fresh["us_per_iter"] = {"cg_fused_v2_iter_e8": 1000.0,
+                            "brand_new_iter_e8": 5.0}
+    warnings = []
+    assert compare(fresh, base, warnings=warnings) == []
+    assert any("brand_new_iter_e8" in w for w in warnings)
+
+
+def test_timing_warn_only_main_exits_zero_with_annotation(tmp_path, capsys):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_with_timing(_payload())))
+    fresh = tmp_path / "BENCH_fresh.json"
+    fresh.write_text(json.dumps(_with_timing(_payload(), us=1200.0)))
+    # hard by default ...
+    assert main([str(fresh), "--baseline", str(base)]) == 1
+    capsys.readouterr()
+    # ... softened to a GitHub annotation under --timing-warn-only
+    assert main([str(fresh), "--baseline", str(base),
+                 "--timing-warn-only"]) == 0
+    out = capsys.readouterr().out
+    assert "::warning::timing:" in out
+    # ... and --timing-tol widens the band instead
+    assert main([str(fresh), "--baseline", str(base),
+                 "--timing-tol", "0.5"]) == 0
+
+
+def test_timing_warn_only_keeps_stream_rows_hard(tmp_path, capsys):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_payload()))
+    bad = _payload()
+    bad["streams_per_iter"]["fused_v2"] = 15
+    fresh = tmp_path / "BENCH_fresh.json"
+    fresh.write_text(json.dumps(bad))
+    assert main([str(fresh), "--baseline", str(base),
+                 "--timing-warn-only"]) == 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,35 @@
+"""Tracked-file hygiene: generated bench output and bytecode must never
+enter the index (the same check CI runs as a shell step — a tracked
+``benchmarks/out/BENCH_*.json`` would make the regression gate diff a
+file against itself)."""
+import pathlib
+import shutil
+import subprocess
+
+import pytest
+
+REPO = pathlib.Path(__file__).parent.parent
+FORBIDDEN = ("benchmarks/out/", "__pycache__/")
+
+
+def _tracked_files():
+    if shutil.which("git") is None or not (REPO / ".git").exists():
+        pytest.skip("not a git checkout")
+    proc = subprocess.run(["git", "ls-files"], cwd=REPO,
+                          capture_output=True, text=True)
+    if proc.returncode != 0:
+        pytest.skip(f"git ls-files failed: {proc.stderr.strip()}")
+    return proc.stdout.splitlines()
+
+
+def test_no_generated_files_tracked():
+    bad = [f for f in _tracked_files()
+           if any(pat in f + "/" or f"/{pat}" in f or f.startswith(pat)
+                  for pat in FORBIDDEN)]
+    assert bad == [], f"generated files tracked in git: {bad}"
+
+
+def test_baseline_is_tracked():
+    """The flip side: the gate's baseline must BE in the index, or the CI
+    leg silently compares against nothing."""
+    assert "benchmarks/baseline/BENCH_baseline.json" in _tracked_files()
