@@ -1,0 +1,42 @@
+"""Standalone solver-service latency/throughput bench (schema v7 rows).
+
+Thin entry over :func:`repro.launch.solver_service.bench_service` in the
+CSV idiom of the other bench modules; ``benchmarks.run`` embeds the same
+payload under the ``solver_service`` key.
+
+  PYTHONPATH=src python -m benchmarks.bench_solver_service
+  REPRO_BENCH_QUICK=1 ... python -m benchmarks.bench_solver_service
+"""
+from __future__ import annotations
+
+import os
+
+
+def run():
+    """Yield ``(name, us_per_call, derived)`` rows like the other benches.
+
+    ``us_per_call`` is per-request latency; ``derived`` is requests/s at
+    that batch ceiling.
+    """
+    from repro.launch.solver_service import bench_service
+
+    if os.environ.get("REPRO_BENCH_QUICK"):
+        payload = bench_service(nelt=64, n=4, requests=4, max_b=2,
+                                niter=3, repeats=1)
+    else:
+        payload = bench_service(nelt=64, requests=16, max_b=8, niter=25)
+    for b, row in payload["rows"].items():
+        yield (f"solver_service_E{payload['nelt']}_n{payload['n']}_b{b}",
+               row["latency_ms_per_request"] * 1e3,
+               f"{row['throughput_req_s']:.2f}req/s;"
+               f"{row['dispatches']}dispatches")
+
+
+def main():
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,12 @@ and fails (exit 1) on:
   shared CI runners are noisy, ``--timing-warn-only`` routes timing
   violations to ``::warning::`` annotations (exit 0) while the
   stream-ladder and byte rows stay hard.
+* **streams/RHS** — the multi-RHS amortization table (schema v7,
+  DESIGN.md §12) must match the baseline exactly, and every pipeline's
+  per-RHS streams must be *strictly decreasing* in b — a bigger batch
+  must never cost more per RHS.  The measured ``solver_service``
+  latency/throughput section is presence-checked (timing-like: warn-only
+  under ``--timing-warn-only``), never value-gated.
 * **schema presence** — a fresh file missing either analytic table fails:
   the gate exists precisely so these numbers cannot silently disappear.
   A fresh file missing the ``us_per_iter`` table the baseline holds is a
@@ -187,6 +193,54 @@ def compare(fresh: dict, base: dict, tol: float = DEFAULT_TOL,
                 f"new streams/iter rung '{rung}' = {fresh_streams[rung]} "
                 "not in baseline — unchecked until the next baseline "
                 "refresh pins it")
+
+    # --- streams/RHS amortization curve (schema v7): exact rows + the
+    # strictly-decreasing-in-b invariant on whatever the fresh run emits -
+    base_rhs = base.get("streams_per_rhs") or {}
+    fresh_rhs = fresh.get("streams_per_rhs")
+    if base_rhs and not fresh_rhs:
+        problems.append("fresh bench json has no streams_per_rhs table — "
+                        "the multi-RHS amortization curve silently "
+                        "disappeared (baseline pins it)")
+    elif base_rhs:
+        for pipeline, rows in sorted(base_rhs.items()):
+            got_rows = fresh_rhs.get(pipeline)
+            if got_rows is None:
+                problems.append(
+                    f"streams/RHS pipeline '{pipeline}' missing")
+                continue
+            for b, want in sorted(rows.items(), key=lambda kv: int(kv[0])):
+                got = got_rows.get(b)
+                if got is None:
+                    problems.append(f"streams/RHS '{pipeline}' b={b} "
+                                    f"missing (baseline: {want})")
+                elif got != want:
+                    direction = ("regressed" if got > want else
+                                 "improved — refresh the baseline to "
+                                 "pin it")
+                    problems.append(
+                        f"streams/RHS '{pipeline}' b={b}: {got} != "
+                        f"baseline {want} ({direction})")
+        for pipeline in sorted(set(fresh_rhs) - set(base_rhs)):
+            warnings.append(
+                f"new streams/RHS pipeline '{pipeline}' not in baseline — "
+                "unchecked until the next baseline refresh pins it")
+    if fresh_rhs:
+        for pipeline, rows in sorted(fresh_rhs.items()):
+            seq = sorted(((int(b), float(v)) for b, v in rows.items()))
+            for (b0, v0), (b1, v1) in zip(seq, seq[1:]):
+                if v1 >= v0:
+                    problems.append(
+                        f"streams/RHS '{pipeline}' not strictly "
+                        f"decreasing: b={b1} ({v1:g}) >= b={b0} ({v0:g}) "
+                        "— a bigger batch must never cost more per RHS")
+
+    # --- solver_service rows: presence only (measured wall clock — the
+    # values are environment noise; disappearing silently is not) --------
+    if base.get("solver_service") and not fresh.get("solver_service"):
+        timing.append("fresh bench json has no solver_service section — "
+                      "serving latency/throughput rows silently "
+                      "disappeared (baseline pins their presence)")
 
     # --- bytes/DOF/iter: tolerance + the bf16 ≈ f32/2 invariant ---------
     base_bytes = base.get("bytes_per_dof_iter") or {}

@@ -141,7 +141,45 @@ def _streams_ladder() -> dict:
             + cost.v2_plane_collective_streams(10, 32 // 8)),
         "fused_v2_cheb_sharded_d8": cost.cheb_effective_streams(
             cost.CHEB_DEFAULT_K, 4, ndev=8, ez=32, n=10),
+        # multi-RHS rungs (schema v7, DESIGN.md §12): per-RHS streams of
+        # the batched block pipeline — the shared operator streams divide
+        # by b, the per-RHS vector streams stay put.
+        **{f"{base}_rhs{b}": cost.streams_per_rhs(b, base)
+           for base in ("fused_v2", "sstep_v3")
+           for b in cost.MULTI_RHS_BATCHES},
     }
+
+
+def _streams_per_rhs_table() -> dict:
+    """Per-RHS streams vs batch (schema v7, DESIGN.md §12) — the
+    amortization curve check_regression.py holds exactly AND requires to
+    be strictly decreasing in b on every pipeline (the whole point of the
+    block solver: a bigger batch must never cost more per RHS)."""
+    from repro.core import cost
+
+    return {base: {str(b): cost.streams_per_rhs(b, base)
+                   for b in (1,) + cost.MULTI_RHS_BATCHES}
+            for base in ("fused_v2", "sstep_v3")}
+
+
+def _solver_service_section(quick: bool) -> dict | None:
+    """Latency/throughput rows from the solver-service bench (schema v7).
+
+    Measured (wall-clock) — gated like the us/iter table: presence is
+    checked when the baseline pins it, values are never hard-gated.  The
+    quick profile keeps the interpret-mode CI leg to seconds.
+    """
+    from repro.launch.solver_service import bench_service
+
+    try:
+        if quick:
+            return bench_service(nelt=64, n=4, requests=4, max_b=2,
+                                 niter=3, repeats=1)
+        return bench_service(nelt=64, requests=16, max_b=8, niter=25)
+    except Exception as e:  # noqa: BLE001 — bench must not sink the run
+        print(f"# WARNING: solver-service bench skipped: {e}",
+              file=sys.stderr)
+        return None
 
 
 def _us_per_iter_table(sections: list) -> dict:
@@ -188,8 +226,9 @@ def main() -> None:
         sections.append({"title": title, "module": mod.__name__,
                          "rows": rows})
 
+    quick = bool(os.environ.get("REPRO_BENCH_QUICK"))
     payload = {
-        "schema": "repro-bench/6",
+        "schema": "repro-bench/7",
         # monotone int for forward-compat decisions (check_regression.py
         # warns on version skew instead of failing on unknown tables).
         # v5: sharded rungs — *_sharded_d8 ladder entries and the
@@ -198,15 +237,21 @@ def main() -> None:
         # reference_backend record it is only comparable under
         # (DESIGN.md §11); the gate holds each entry within a relative
         # band alongside the exact stream ladder.
-        "schema_version": 6,
+        # v7: multi-RHS rungs — *_rhs{b} ladder entries + byte rows, the
+        # streams_per_rhs amortization table (exact + strictly decreasing
+        # in b), and the measured solver_service latency/throughput
+        # section (DESIGN.md §12).
+        "schema_version": 7,
         "tag": os.environ.get("REPRO_BENCH_TAG", "local"),
-        "quick": bool(os.environ.get("REPRO_BENCH_QUICK")),
+        "quick": quick,
         "reference_backend": _reference_backend(),
         "streams_per_iter": _streams_ladder(),
         # the second axis of the ladder (DESIGN.md §7): bytes each stream
         # carries under each precision policy, per DOF per iteration.
         "bytes_per_dof_iter": _precision_table(),
+        "streams_per_rhs": _streams_per_rhs_table(),
         "us_per_iter": _us_per_iter_table(sections),
+        "solver_service": _solver_service_section(quick),
         "sections": sections,
     }
     path = _bench_json_path()

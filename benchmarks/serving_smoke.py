@@ -1,0 +1,80 @@
+"""Serving smoke: interpret-mode multi-RHS sweep + b=1 parity assert.
+
+The CI ``serving-smoke`` leg (ci.yml): exercises the whole serving stack
+end to end on CPU — the batched block kernels (interpret mode), the
+driver registry, and the solver service's queue/bucket/dispatch path —
+and asserts the two invariants that make the fast path trustworthy:
+
+  * b=1 through ``cg_block_fixed_iters`` is fp64-BITWISE identical to
+    the single-RHS v2 driver (the block kernels are the v2 arithmetic,
+    not an approximation of it);
+  * every lane of a b>1 batch matches its own independent single-RHS
+    solve bitwise (lanes don't contaminate each other).
+
+  JAX_ENABLE_X64=1 PYTHONPATH=src python -m benchmarks.serving_smoke
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def main() -> int:
+    from repro.configs.nekbone import NekboneConfig
+    from repro.core.cg_block import cg_block_fixed_iters
+    from repro.core.cg_fused import cg_fused_v2_fixed_iters
+    from repro.launch.solver_service import SolveRequest, SolverService
+
+    if not jnp.asarray(1.0, jnp.float64).dtype == jnp.float64:
+        print("serving_smoke: needs JAX_ENABLE_X64=1 for the bitwise "
+              "parity assert", file=sys.stderr)
+        return 2
+
+    cfg = NekboneConfig(name="smoke", n=5, grid=(2, 2, 4),
+                        dtype="float64", ax_impl="pallas_fused_cg_v2")
+    case = cfg.make_case()
+    _, f = case.manufactured()
+    niter = 12
+    kw = dict(D=case.D, g=case.g, grid=case.grid, niter=niter,
+              mask=case.mask, c=case.c)
+
+    ref = cg_fused_v2_fixed_iters(f, **kw)
+    rng = np.random.default_rng(0)
+
+    for b in (1, 2, 4):
+        lanes = [f] + [jnp.asarray(
+            rng.standard_normal(f.shape)) * case.mask
+            for _ in range(b - 1)]
+        res = cg_block_fixed_iters(jnp.stack(lanes), **kw)
+        # lane 0 is always the manufactured rhs: bitwise vs single-RHS v2.
+        np.testing.assert_array_equal(np.asarray(res.x[0]),
+                                      np.asarray(ref.x))
+        np.testing.assert_array_equal(np.asarray(res.history[0]),
+                                      np.asarray(ref.history))
+        # every other lane matches its own independent solve bitwise.
+        for j in range(1, b):
+            solo = cg_fused_v2_fixed_iters(lanes[j], **kw)
+            np.testing.assert_array_equal(np.asarray(res.x[j]),
+                                          np.asarray(solo.x))
+        print(f"serving_smoke: b={b} bitwise parity OK "
+              f"(rnorm {[f'{float(r):.3e}' for r in res.rnorm]})")
+
+    # service path: queue -> bucket -> batched dispatch, same answers.
+    svc = SolverService(max_b=4)
+    ids = [svc.submit(SolveRequest(f=f, config=cfg, niter=niter))
+           for _ in range(3)]
+    results = svc.drain()
+    assert [r.request_id for r in results] == ids
+    assert len(svc.dispatch_log) == 1, svc.dispatch_log
+    for r in results:
+        np.testing.assert_array_equal(np.asarray(r.x), np.asarray(ref.x))
+    print(f"serving_smoke: service drained {len(results)} requests in "
+          f"{len(svc.dispatch_log)} dispatch "
+          f"(pipeline {results[0].pipeline}) — parity OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -134,9 +134,11 @@ def main():
                "w/ halo)" if pc_name == "cheb" else "")
         print(f"  {pc_name or 'plain':>6}: {int(r.iters):3d} iters to "
               f"tol @ {streams} streams/iter{eff}")
-    # the pre-subsystem spelling still works on any ax_impl:
+    # per-call override by registry name works on any ax_impl (the old
+    # boolean spelling precond=True|False is deprecated):
     r_plain, _ = case.solve_manufactured(tol=1e-6, max_iter=500)
-    r_pc, _ = case.solve_manufactured(tol=1e-6, max_iter=500, precond=True)
+    r_pc, _ = case.solve_manufactured(tol=1e-6, max_iter=500,
+                                      precond="jacobi")
     print(f"  reference path, iterations to 1e-6: "
           f"plain={int(r_plain.iters)} jacobi={int(r_pc.iters)}")
 

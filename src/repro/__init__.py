@@ -3,5 +3,35 @@
 Reproduction + TPU adaptation of "Optimization of Tensor-product Operations
 in Nekbone on GPUs" (Karp et al., 2020) with a production-grade multi-pod
 training/serving substrate.  See DESIGN.md for the system map.
+
+Top-level surface (lazy — importing ``repro`` stays dependency-free):
+
+    import repro
+    res = repro.solve(1024, niter=100)          # paper case, manufactured
+    res = repro.solve(case, f, b=8, tol=1e-8)   # multi-RHS block solve
+
+``repro.solve`` dispatches through the driver registry
+(:mod:`repro.core.solvers`) and returns a
+:class:`repro.core.cg.SolveResult`.
 """
 __version__ = "1.0.0"
+
+_LAZY = {
+    "solve": ("repro.core.solvers", "solve"),
+    "SolveResult": ("repro.core.cg", "SolveResult"),
+}
+
+
+def __getattr__(name):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(module), attr)
+
+
+def __dir__():
+    return sorted([*globals(), *_LAZY])

@@ -43,6 +43,13 @@ class NekboneConfig:
     # preconditioner through core/cg.py.
     precond: str | None = None
     cheb_k: int = 4
+    # Default RHS batch (DESIGN.md §12): b > 1 routes unpreconditioned
+    # v2-family solves through the multi-RHS block kernels
+    # (core/cg_block.py), amortizing the shared operator streams over the
+    # batch (core/cost.multi_rhs_streams).  The solver service buckets
+    # requests by (grid, n, precision, precond) and solves them at b up
+    # to this value per dispatch.
+    b: int = 1
 
     @property
     def nelt(self) -> int:
@@ -61,7 +68,7 @@ class NekboneConfig:
         kwargs = dict(n=self.n, grid=self.grid,
                       dtype=jnp_dtype(self.dtype), ax_impl=self.ax_impl,
                       precision=self.precision, s=self.s,
-                      precond=self.precond, cheb_k=self.cheb_k)
+                      precond=self.precond, cheb_k=self.cheb_k, b=self.b)
         kwargs.update(overrides)
         return NekboneCase(**kwargs)
 

@@ -15,13 +15,14 @@ Provided solvers:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["CGResult", "cg", "cg_fixed_iters", "ir_solve", "weighted_dot",
-           "jacobi_preconditioner"]
+__all__ = ["CGResult", "SolveResult", "cg", "cg_fixed_iters", "ir_solve",
+           "weighted_dot", "jacobi_preconditioner"]
 
 
 class CGResult(NamedTuple):
@@ -29,6 +30,82 @@ class CGResult(NamedTuple):
     iters: jnp.ndarray          # scalar int
     rnorm: jnp.ndarray          # final weighted residual norm (sqrt(r.c.r))
     rnorm_history: jnp.ndarray  # (max_iter+1,) padded with final value / nan
+
+
+@dataclasses.dataclass(eq=False)
+class SolveResult:
+    """Named result of every public solve driver (DESIGN.md §12).
+
+    Replaces the ad-hoc ``(x, hist)`` tuple returns: the solution, the
+    residual-norm history, how many iterations actually ran, the achieved
+    relative tolerance ``rnorm / history[0]``, and which pipeline /
+    preconditioner produced it.  For multi-RHS block solves ``x`` carries
+    a leading batch axis and ``history``/``rnorm``/``achieved_rtol`` are
+    per-RHS (history: ``(b, niter+1)``).
+
+    Backward compat: iterating still unpacks as the legacy two-tuple
+    ``x, hist = result``, and the :class:`CGResult` attribute surface
+    (``iters``, ``rnorm_history``) is aliased.  Registered as a JAX
+    pytree (pipeline/precond ride as static aux data) so drivers can
+    return it from inside ``jax.jit``.
+    """
+
+    x: jnp.ndarray
+    history: jnp.ndarray
+    iters_taken: jnp.ndarray
+    achieved_rtol: jnp.ndarray
+    rnorm: jnp.ndarray
+    pipeline: str | None = None
+    precond: str | None = None
+
+    # -- legacy (x, hist) tuple protocol --------------------------------
+    def __iter__(self):
+        return iter((self.x, self.history))
+
+    def __len__(self) -> int:
+        return 2
+
+    def __getitem__(self, i):
+        return (self.x, self.history)[i]
+
+    # -- CGResult attribute aliases -------------------------------------
+    @property
+    def iters(self):
+        return self.iters_taken
+
+    @property
+    def rnorm_history(self):
+        return self.history
+
+    @classmethod
+    def from_cg(cls, res: CGResult, *, pipeline: str | None = None,
+                precond: str | None = None) -> "SolveResult":
+        """Lift a :class:`CGResult` (or any x/iters/rnorm/rnorm_history
+        record) into the named surface."""
+        hist = res.rnorm_history
+        r0 = hist[..., 0]
+        denom = jnp.where(r0 > 0, r0, jnp.ones_like(r0))
+        return cls(x=res.x, history=hist, iters_taken=res.iters,
+                   achieved_rtol=res.rnorm / denom, rnorm=res.rnorm,
+                   pipeline=pipeline, precond=precond)
+
+
+def _solve_result_flatten(res: SolveResult):
+    children = (res.x, res.history, res.iters_taken, res.achieved_rtol,
+                res.rnorm)
+    return children, (res.pipeline, res.precond)
+
+
+def _solve_result_unflatten(aux, children):
+    x, history, iters_taken, achieved_rtol, rnorm = children
+    pipeline, precond = aux
+    return SolveResult(x=x, history=history, iters_taken=iters_taken,
+                       achieved_rtol=achieved_rtol, rnorm=rnorm,
+                       pipeline=pipeline, precond=precond)
+
+
+jax.tree_util.register_pytree_node(SolveResult, _solve_result_flatten,
+                                   _solve_result_unflatten)
 
 
 def weighted_dot(c: jnp.ndarray, psum_axes=None) -> Callable:
@@ -84,7 +161,9 @@ def cg(A: Callable, b: jnp.ndarray, *, x0=None, dot: Callable | None = None,
 
     state = (x, r, p, rtz, hist, jnp.asarray(0), r0)
     x, r, p, rtz, hist, k, rn = jax.lax.while_loop(cond, body, state)
-    return CGResult(x=x, iters=k, rnorm=rn, rnorm_history=hist)
+    return SolveResult.from_cg(
+        CGResult(x=x, iters=k, rnorm=rn, rnorm_history=hist),
+        pipeline="reference")
 
 
 def cg_fixed_iters(A: Callable, b: jnp.ndarray, *, niter: int,
@@ -116,18 +195,21 @@ def cg_fixed_iters(A: Callable, b: jnp.ndarray, *, niter: int,
         return x, r, p, rtz_new, hist
 
     x, r, p, rtz, hist = jax.lax.fori_loop(0, niter, body, (x, r, p, rtz, hist))
-    return CGResult(x=x, iters=jnp.asarray(niter), rnorm=hist[niter],
-                    rnorm_history=hist)
+    return SolveResult.from_cg(
+        CGResult(x=x, iters=jnp.asarray(niter), rnorm=hist[niter],
+                 rnorm_history=hist),
+        pipeline="reference")
 
 
 def ir_solve(A_hi: Callable, b: jnp.ndarray, inner_solve: Callable, *,
-             outer_iters: int = 3, lo_dtype=jnp.float32) -> tuple[jnp.ndarray, jnp.ndarray]:
+             outer_iters: int = 3, lo_dtype=jnp.float32) -> SolveResult:
     """Mixed-precision iterative refinement.
 
     ``x_{k+1} = x_k + inner_solve(lo(b - A_hi x_k))`` with the residual formed
     in the precision of ``b`` and the correction solved in ``lo_dtype``.
-    Returns ``(x, residual_norms)`` with ``residual_norms`` of length
-    ``outer_iters + 1``.
+    Returns a :class:`SolveResult` whose ``history`` holds the
+    ``outer_iters + 1`` outer residual norms (legacy ``x, norms = ...``
+    unpacking still works).
     """
     hi = b.dtype
     x = jnp.zeros_like(b)
@@ -137,7 +219,11 @@ def ir_solve(A_hi: Callable, b: jnp.ndarray, inner_solve: Callable, *,
         e = inner_solve(r.astype(lo_dtype))
         x = x + e.astype(hi)
         norms.append(jnp.linalg.norm((b - A_hi(x)).ravel()))
-    return x, jnp.stack(norms)
+    hist = jnp.stack(norms)
+    return SolveResult.from_cg(
+        CGResult(x=x, iters=jnp.asarray(outer_iters), rnorm=hist[-1],
+                 rnorm_history=hist),
+        pipeline="ir")
 
 
 def jacobi_preconditioner(diag: jnp.ndarray) -> Callable:

@@ -61,7 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.gs as gs_mod
-from repro.core.cg import CGResult
+from repro.core.cg import CGResult, SolveResult
 from repro.core.geom import box_axis_factors, box_outer
 from repro.core.precision import resolve_policy
 from repro.kernels import autotune as _autotune
@@ -176,10 +176,12 @@ def cg_fused_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
     g2 = jnp.asarray(g, policy.op_storage_dtype).reshape(E, 6, n3)
     mask2 = jnp.asarray(mask, b.dtype).reshape(E, n3)
     c = jnp.asarray(c, b.dtype)
-    return _cg_fused(b, D, D.T, g2, mask2, c, n=n, grid=tuple(grid),
-                     niter=niter, block_e=block_e, interpret=interpret,
-                     acc_name=policy.accum,
-                     x_name=policy.x_storage_dtype.name)
+    return SolveResult.from_cg(
+        _cg_fused(b, D, D.T, g2, mask2, c, n=n, grid=tuple(grid),
+                  niter=niter, block_e=block_e, interpret=interpret,
+                  acc_name=policy.accum,
+                  x_name=policy.x_storage_dtype.name),
+        pipeline="fused_v1")
 
 
 # ---------------------------------------------------------------------------
@@ -346,11 +348,13 @@ def cg_fused_v2_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray,
     D = jnp.asarray(D, policy.op_storage_dtype)
     g3 = kernel_ops.diag_metric(
         jnp.asarray(g, policy.op_storage_dtype), E, n)
-    return _cg_fused_v2(b, D, D.T, g3, mx, my, mz, cx, cy, cz, n=n,
-                        grid=grid, niter=niter, sz=sz, interpret=interpret,
-                        acc_name=policy.accum,
-                        x_name=policy.x_storage_dtype.name,
-                        layout=layout, grid_order=grid_order)
+    return SolveResult.from_cg(
+        _cg_fused_v2(b, D, D.T, g3, mx, my, mz, cx, cy, cz, n=n,
+                     grid=grid, niter=niter, sz=sz, interpret=interpret,
+                     acc_name=policy.accum,
+                     x_name=policy.x_storage_dtype.name,
+                     layout=layout, grid_order=grid_order),
+        pipeline="fused_v2")
 
 
 # ---------------------------------------------------------------------------
@@ -435,8 +439,10 @@ def cg_fused_sharded_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray,
     state = (x, b, b, rtz0, hist0)
     x, r, p, rtz_last, hist = jax.lax.fori_loop(0, niter, body, state)
     hist = hist.at[niter].set(jnp.sqrt(jnp.abs(rtz_last)))
-    return CGResult(x=x, iters=jnp.asarray(niter), rnorm=hist[niter],
-                    rnorm_history=hist)
+    return SolveResult.from_cg(
+        CGResult(x=x, iters=jnp.asarray(niter), rnorm=hist[niter],
+                 rnorm_history=hist),
+        pipeline="fused_v1_sharded")
 
 
 # ---------------------------------------------------------------------------
@@ -585,5 +591,7 @@ def cg_ir_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
         r, rn = refresh(x)
         norms.append(rn)
     hist = jnp.stack(norms)
-    return CGResult(x=x, iters=jnp.asarray(outer_iters * inner_iters),
-                    rnorm=hist[-1], rnorm_history=hist)
+    return SolveResult.from_cg(
+        CGResult(x=x, iters=jnp.asarray(outer_iters * inner_iters),
+                 rnorm=hist[-1], rnorm_history=hist),
+        pipeline="ir")

@@ -56,7 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.gs as gs_mod
-from repro.core.cg import CGResult
+from repro.core.cg import CGResult, SolveResult
 from repro.core.geom import box_axis_factors, box_outer
 from repro.core.precision import resolve_policy
 from repro.kernels import autotune as _autotune
@@ -354,5 +354,7 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
         rcr_last = jnp.sum(r2.astype(acc) * c2 * r2.astype(acc))
     hist.append(float(np.sqrt(abs(float(rcr_last)))))
     hist_arr = jnp.asarray(np.asarray(hist, np.float64), acc)
-    return CGResult(x=x2.reshape(b.shape), iters=jnp.asarray(it),
-                    rnorm=hist_arr[-1], rnorm_history=hist_arr)
+    return SolveResult.from_cg(
+        CGResult(x=x2.reshape(b.shape), iters=jnp.asarray(it),
+                 rnorm=hist_arr[-1], rnorm_history=hist_arr),
+        pipeline="sstep_v3")

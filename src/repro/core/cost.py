@@ -301,6 +301,88 @@ def fused_v2_plane_streams(n: int, sz: int) -> float:
 
 
 # ---------------------------------------------------------------------------
+# multi-RHS (block) accounting (DESIGN.md §12): shared operator streams / b
+# + per-RHS vector streams.  The serving amortization axis — the only way
+# under the single-RHS floors.
+# ---------------------------------------------------------------------------
+
+# Full-field streams per iteration that are *operator-side* — read once per
+# slab residency and shared across all b right-hand sides of a block solve:
+# the 3 metric diagonals (rr, ss, tt).  D/D^T and the per-axis mask/weight
+# factors are shared too but are sub-stream (n^2 and extent*n words) and
+# charged as ~zero, exactly as in the single-RHS books.
+MULTI_RHS_SHARED_STREAMS = 3.0
+
+# The ladder's rung family: *_rhs{b} entries are pinned at these batches.
+MULTI_RHS_BATCHES = (2, 4, 8)
+
+
+def multi_rhs_streams(b: int, pipeline: str = "fused_v2", *,
+                      s: int = SSTEP_DEFAULT_S) -> tuple[float, float]:
+    """(reads, writes) full-field streams per DOF per iteration *per RHS*
+    of a b-way block solve — the exact books of the amortization.
+
+    ``fused_v2``: of the 9 read streams, 3 are the shared metric
+    diagonals, 6 are per-RHS vectors (p, r, x carried via the update
+    kernel's operands); all 4 write streams are per-RHS.  Per RHS:
+
+        reads = 6 + 3/b,  writes = 4        (13 at b=1, down to 10.375
+                                             at b=8 — floor 10)
+
+    ``sstep_v3``: the same 3 shared streams sit inside the per-cycle
+    budget (2s+7 reads, 2s+2 writes over s iterations), so composing the
+    s-step cycle with a b-way block divides them by s*b:
+
+        reads = (2s+4)/s + 3/(s*b),  writes = (2s+2)/s
+
+    which recovers the 6.25-stream s=4 rung exactly at b=1 and drops
+    below it for every b > 1 (5.59375 at b=8) — the pinned
+    ``streams_per_rhs`` trajectory.
+    """
+    b = float(b)
+    if b < 1:
+        raise ValueError(f"RHS batch must be >= 1, got {b}")
+    if pipeline == "fused_v2":
+        reads = (FUSED_V2_READ_STREAMS - MULTI_RHS_SHARED_STREAMS
+                 + MULTI_RHS_SHARED_STREAMS / b)
+        return reads, float(FUSED_V2_WRITE_STREAMS)
+    if pipeline == "sstep_v3":
+        cr, cw = sstep_cycle_streams(s)
+        reads = ((cr - MULTI_RHS_SHARED_STREAMS) / float(s)
+                 + MULTI_RHS_SHARED_STREAMS / (float(s) * b))
+        return reads, cw / float(s)
+    raise ValueError(f"no multi-RHS books for pipeline {pipeline!r}")
+
+
+def streams_per_rhs(b: int, pipeline: str = "fused_v2", *,
+                    s: int = SSTEP_DEFAULT_S) -> float:
+    """Total (reads + writes) streams per DOF per iteration per RHS —
+    the single scalar the regression gate pins per (pipeline, b) row,
+    strictly decreasing in b."""
+    r, w = multi_rhs_streams(b, pipeline, s=s)
+    return r + w
+
+
+def multi_rhs_halo_streams(b: int, s: int, sz: int) -> float:
+    """Per-RHS v3 matrix-powers halo of a b-way block solve.
+
+    Of the 5 halo'd fields (:func:`sstep_halo_streams`), p and r are
+    per-RHS while the 3 metric diagonals are read once for the whole
+    batch: ``2s * (2 + 3/b) / (sz * s)`` = ``(4 + 6/b)/sz`` per
+    iteration per RHS (the ``10/sz`` single-RHS channel at b=1)."""
+    return 2.0 * float(s) * (2.0 + 3.0 / float(b)) / (float(sz) * float(s))
+
+
+def _multi_rhs_rung(pipeline: str) -> tuple[str, int] | None:
+    """Split a ``<base>_rhs<b>`` ladder rung into (base, b); None if the
+    name is not a multi-RHS rung."""
+    base, sep, tail = pipeline.rpartition("_rhs")
+    if not sep or not tail.isdigit():
+        return None
+    return base, int(tail)
+
+
+# ---------------------------------------------------------------------------
 # dtype-aware accounting (DESIGN.md §7): the stream *counts* above are fixed
 # per pipeline; the precision policy sets the bytes each stream carries.
 # ---------------------------------------------------------------------------
@@ -319,6 +401,14 @@ PIPELINE_STREAMS = {
     "fused_v2_jacobi": (JACOBI_V2_READ_STREAMS, JACOBI_V2_WRITE_STREAMS),
     "fused_v2_cheb": (CHEB_V2_READ_STREAMS, CHEB_V2_WRITE_STREAMS),
 }
+# multi-RHS rung family (DESIGN.md §12): per-RHS streams of the b-way
+# block solves, both standalone (batched v2) and composed with the s-step
+# cycle.  Values are *per RHS* — the quantity that drops below every
+# single-RHS floor.
+PIPELINE_STREAMS.update({
+    f"{base}_rhs{nb}": multi_rhs_streams(nb, base)
+    for base in ("fused_v2", "sstep_v3") for nb in MULTI_RHS_BATCHES
+})
 
 # Storage-dtype bytes per word, per precision-policy name
 # (core/precision.py).  The refined policies price like their storage: the
@@ -371,6 +461,10 @@ def bytes_per_dof_iter(pipeline: str, precision, *, exact: bool = False,
     reads, writes = PIPELINE_STREAMS[pipeline]
     if pipeline == "sstep_v3" and s != SSTEP_DEFAULT_S:
         reads, writes = sstep_streams(s)
+    rhs_rung = _multi_rhs_rung(pipeline)
+    if rhs_rung is not None and rhs_rung[0] == "sstep_v3" \
+            and s != SSTEP_DEFAULT_S:
+        reads, writes = multi_rhs_streams(rhs_rung[1], "sstep_v3", s=s)
     if ndev > 1 and pipeline not in ("sstep_v3", "fused_v2",
                                      "fused_v2_jacobi", "fused_v2_cheb"):
         raise ValueError(f"pipeline {pipeline!r} has no sharded variant; "
@@ -396,6 +490,15 @@ def bytes_per_dof_iter(pipeline: str, precision, *, exact: bool = False,
             if ndev > 1:
                 half_s = sstep_collective_streams(s, ez_l) / 2.0
                 reads, writes = reads + half_s, writes + half_s
+        elif rhs_rung is not None:
+            base, nb = rhs_rung
+            if base == "fused_v2":
+                # the boundary-plane side channel is per-RHS (every RHS's
+                # planes travel), so the per-RHS charge is the b=1 one.
+                half = fused_v2_plane_streams(n, sz) / 2.0
+                reads, writes = reads + half, writes + half
+            else:  # sstep_v3_rhs{b}: metric halo shared across the batch
+                reads = reads + multi_rhs_halo_streams(nb, s, sz)
     itemsize = precision_itemsize(precision)
     return reads * itemsize, writes * itemsize
 
@@ -419,6 +522,10 @@ def pipeline_flops_per_dof(n: int, pipeline: str, *,
     operator applications per iteration (:func:`cheb_flops_per_dof`) —
     its win is the *iteration count*, not the per-iteration rate."""
     if pipeline in ("eq2", "fused_v1", "fused_v2", "sstep_v3"):
+        return float(flops_per_dof(n))
+    if _multi_rhs_rung(pipeline) is not None:
+        # block solves amortize *streams*, not arithmetic: every RHS does
+        # full Eq.-1 work per iteration.
         return float(flops_per_dof(n))
     if pipeline == "fused_v2_jacobi":
         return float(flops_per_dof(n) + 3)

@@ -76,10 +76,19 @@ class NekboneCase:
                dispatch to the fused PCG drivers (Jacobi: 14 streams/iter,
                Chebyshev: 18); other ``ax_impl`` choices apply the
                reference (XLA) preconditioner through ``core/cg.py``.
-               ``solve(precond=...)`` overrides per call (``True`` means
-               'jacobi', ``False`` forces unpreconditioned — the
-               pre-subsystem API).
+               ``solve(precond=...)`` overrides per call and takes the
+               same registry *names* — the string surface is the API.
+               The pre-subsystem booleans (``True`` for 'jacobi',
+               ``False`` for unpreconditioned) still resolve but emit a
+               ``DeprecationWarning`` and will be removed after one
+               release; spell them ``precond='jacobi'`` / omit the
+               argument (or pass ``precond=None`` on a case with no
+               default) instead.
       cheb_k:  Chebyshev polynomial order for ``precond='cheb'``.
+      b:       default RHS batch for this case (DESIGN.md §12).  ``b > 1``
+               routes unpreconditioned v2-family solves through the
+               multi-RHS block kernels (core/cg_block.py), amortizing the
+               operator streams across the batch.
     """
 
     n: int = 10
@@ -91,6 +100,7 @@ class NekboneCase:
     s: int = 4
     precond: str | None = None
     cheb_k: int = 4
+    b: int = 1
 
     def __post_init__(self):
         policy = None
@@ -166,16 +176,25 @@ class NekboneCase:
     def _precond_name(self, precond) -> str | None:
         """Resolve a ``solve(precond=...)`` argument against the case.
 
-        ``None`` inherits the case's ``precond`` field; ``True`` is the
-        pre-subsystem spelling of 'jacobi'; ``False`` forces the solve
-        unpreconditioned; a string names a registry preconditioner.
+        ``None`` inherits the case's ``precond`` field; a string names a
+        registry preconditioner.  The booleans (``True`` = 'jacobi',
+        ``False`` = unpreconditioned) are the pre-subsystem spelling —
+        deprecated, one release of compat.
         """
         if precond is None:
             return self.precond
-        if precond is True:
-            return "jacobi"
-        if precond is False:
-            return None
+        if isinstance(precond, bool):
+            import warnings
+
+            name = "jacobi" if precond else None
+            warnings.warn(
+                "solve(precond=True|False) is deprecated; pass the "
+                "registry name instead (precond='jacobi', or omit the "
+                f"argument / use a case with precond=None for "
+                f"unpreconditioned).  This call resolves to "
+                f"precond={name!r}.",
+                DeprecationWarning, stacklevel=3)
+            return name
         return str(precond)
 
     def precond_spec(self, name: str | None = None):
@@ -215,80 +234,21 @@ class NekboneCase:
         return precond_mod.chebyshev_preconditioner(
             self.ax_full, spec.k, spec.lmin, spec.lmax)
 
-    def solve(self, f: jnp.ndarray, *, niter: int | None = None,
-              tol: float = 1e-8, max_iter: int = 1000,
-              precond: bool | str | None = None) -> cg_mod.CGResult:
-        pc_name = self._precond_name(precond)
-        fused = self.ax_impl in ("pallas_fused_cg", "pallas_fused_cg_v2",
-                                 "pallas_sstep_v3")
-        refined = False
-        if fused and self.precision is not None:
-            from repro.core.precision import resolve_policy
+    def solve(self, f: jnp.ndarray, *, b: int | None = None,
+              niter: int | None = None, tol: float = 1e-8,
+              max_iter: int = 1000,
+              precond: bool | str | None = None) -> cg_mod.SolveResult:
+        """Solve ``A x = f`` through the driver registry (DESIGN.md §12).
 
-            refined = resolve_policy(self.precision).refine
-        if refined and niter is not None and pc_name is None:
-            variant = {"pallas_fused_cg_v2": "v2",
-                       "pallas_sstep_v3": "sstep"}.get(self.ax_impl, "v1")
-            return cg_fused_mod.cg_ir_fixed_iters(
-                f, D=self.D, g=self.g, grid=self.grid, niter=niter,
-                precision=self.precision, mask=self.mask, c=self.c,
-                variant=variant, s=self.s)
-        if self.ax_impl == "pallas_sstep_v3" and pc_name is None \
-                and not refined:
-            from repro.core.cg_sstep import cg_sstep_fixed_iters, \
-                estimate_theta
+        Routing (pipeline × precond × tol × batch) lives in
+        :mod:`repro.core.solvers`; this method is the per-case entry.  A
+        5-D ``f`` of shape (b, E, n, n, n) is a multi-RHS batch; ``b``
+        can also be passed explicitly to validate the batch size.
+        """
+        from repro.core import solvers as solvers_mod
 
-            # the basis scale depends only on the case's operator —
-            # estimate once per case, not once per solve.
-            theta = getattr(self, "_sstep_theta", None)
-            if theta is None:
-                theta = estimate_theta(self.D, self.g, self.grid,
-                                       self.mask)
-                self._sstep_theta = theta
-            if niter is not None:
-                return cg_sstep_fixed_iters(
-                    f, D=self.D, g=self.g, grid=self.grid, niter=niter,
-                    s=self.s, mask=self.mask, c=self.c, theta=theta,
-                    precision=self.precision)
-            # tolerance-driven: the per-cycle host sync checks the stored-
-            # residual reduction and the f64 Gram recurrence resolves the
-            # stopping point to iteration granularity (DESIGN.md §9.4).
-            return cg_sstep_fixed_iters(
-                f, D=self.D, g=self.g, grid=self.grid, niter=max_iter,
-                s=self.s, mask=self.mask, c=self.c, theta=theta, tol=tol,
-                precision=self.precision)
-        if self.ax_impl == "pallas_fused_cg_v2" and not refined:
-            from repro.core import precond as precond_mod
-
-            # pc_name is already resolved against the case default, so a
-            # None here means "explicitly unpreconditioned" — don't let
-            # precond_spec re-apply the case field.
-            spec = self.precond_spec(pc_name) if pc_name else None
-            if niter is not None:
-                if spec is None:
-                    return cg_fused_mod.cg_fused_v2_fixed_iters(
-                        f, D=self.D, g=self.g, grid=self.grid, niter=niter,
-                        mask=self.mask, c=self.c, precision=self.precision)
-                return precond_mod.pcg_fused_v2_fixed_iters(
-                    f, D=self.D, g=self.g, grid=self.grid, niter=niter,
-                    precond=spec, mask=self.mask, c=self.c,
-                    precision=self.precision)
-            # tolerance-driven fused solve (DESIGN.md §9.4), plain or PCG.
-            return precond_mod.cg_fused_tol(
-                f, D=self.D, g=self.g, grid=self.grid, tol=tol,
-                max_iter=max_iter, precond=spec, mask=self.mask, c=self.c,
-                precision=self.precision)
-        if self.ax_impl == "pallas_fused_cg" and niter is not None \
-                and pc_name is None and not refined:
-            return cg_fused_mod.cg_fused_fixed_iters(
-                f, D=self.D, g=self.g, mask=self.mask, c=self.c,
-                grid=self.grid, niter=niter, precision=self.precision)
-        M = self._reference_preconditioner(pc_name)
-        if niter is not None:
-            return cg_mod.cg_fixed_iters(self.ax_full, f, niter=niter,
-                                         dot=self.dot(), precond=M)
-        return cg_mod.cg(self.ax_full, f, tol=tol, max_iter=max_iter,
-                         dot=self.dot(), precond=M)
+        return solvers_mod.solve_case(self, f, b=b, niter=niter, tol=tol,
+                                      max_iter=max_iter, precond=precond)
 
     def solve_manufactured(self, *, niter: int | None = None, tol: float = 1e-8,
                            max_iter: int = 1000,

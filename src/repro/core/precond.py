@@ -61,7 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.gs as gs_mod
-from repro.core.cg import CGResult
+from repro.core.cg import CGResult, SolveResult
 from repro.core.cg_fused import _check_box_fields, _v2_iter
 from repro.core.cost import CHEB_DEFAULT_K
 from repro.core.geom import box_axis_factors, box_outer
@@ -656,10 +656,12 @@ def pcg_fused_v2_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray,
     precond = _resolve_precond(precond, D=D, g=g, grid=grid, mask=mask, c=c)
     # tol2 = -1 sentinel: |rtz| > -1 always holds, so exactly ``niter``
     # iterations run — the tol-driven path's trajectory continued.
-    return _dispatch(b, precond, -1.0, niter, policy=policy, n=n, grid=grid,
-                     sz=sz, interpret=interpret, m_factors=m_factors,
-                     c_factors=c_factors, D_op=D_op, g3=g3, cheb_sz=cheb_sz,
-                     layout=layout, grid_order=grid_order)
+    return SolveResult.from_cg(
+        _dispatch(b, precond, -1.0, niter, policy=policy, n=n, grid=grid,
+                  sz=sz, interpret=interpret, m_factors=m_factors,
+                  c_factors=c_factors, D_op=D_op, g3=g3, cheb_sz=cheb_sz,
+                  layout=layout, grid_order=grid_order),
+        pipeline="fused_v2", precond=getattr(precond, "name", None))
 
 
 def cg_fused_tol(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
@@ -689,8 +691,10 @@ def cg_fused_tol(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
      c_factors, D_op, g3) = _prepare(b, D, g, grid, mask, c, sz, interpret,
                                      precision, precond, layout, grid_order)
     precond = _resolve_precond(precond, D=D, g=g, grid=grid, mask=mask, c=c)
-    return _dispatch(b, precond, float(tol) ** 2, max_iter, policy=policy,
-                     n=n, grid=grid, sz=sz, interpret=interpret,
-                     m_factors=m_factors, c_factors=c_factors, D_op=D_op,
-                     g3=g3, cheb_sz=cheb_sz, layout=layout,
-                     grid_order=grid_order)
+    return SolveResult.from_cg(
+        _dispatch(b, precond, float(tol) ** 2, max_iter, policy=policy,
+                  n=n, grid=grid, sz=sz, interpret=interpret,
+                  m_factors=m_factors, c_factors=c_factors, D_op=D_op,
+                  g3=g3, cheb_sz=cheb_sz, layout=layout,
+                  grid_order=grid_order),
+        pipeline="fused_v2", precond=getattr(precond, "name", None))

@@ -60,8 +60,14 @@ _DISK_LOADED = False
 
 VMEM_BUDGET_BYTES = 8 * 2 ** 20
 # The kernels keep ~14 block-sized arrays live (fields in/out, 3 gradients,
-# metric-applied temporaries) in the accumulation dtype.
-_LIVE_ARRAYS = 14
+# metric-applied temporaries) in the accumulation dtype.  For the multi-RHS
+# block kernels (DESIGN.md §12) that count splits into operator-side
+# residents shared across the batch (metric diagonals + mask box) and
+# per-RHS vector arrays: live = _LIVE_SHARED + _LIVE_PER_RHS * b, which
+# recovers 14 at b = 1.
+_LIVE_SHARED = 4
+_LIVE_PER_RHS = 10
+_LIVE_ARRAYS = _LIVE_SHARED + _LIVE_PER_RHS
 
 
 # ---------------------------------------------------------------------------
@@ -262,17 +268,21 @@ def pick_block_e(E: int, n: int, dtype=jnp.float32, *,
 # ---------------------------------------------------------------------------
 
 def candidate_slab_sizes(grid: tuple[int, int, int], n: int,
-                         itemsize: int = 4) -> list[int]:
+                         itemsize: int = 4, nrhs: int = 1) -> list[int]:
     """Slabs-per-block candidates (descending divisors of EZ).
 
     A slab block holds ``sz * EX * EY`` elements, so the VMEM ceiling caps
     ``sz``; ``sz`` must divide ``EZ`` so every block covers whole slabs with
     no padding.  ``sz = 1`` is always viable (the kernel needs at least one
     slab resident, even if that overshoots the budget on huge x/y extents).
+    ``nrhs > 1`` (the multi-RHS block kernels) scales the per-RHS vector
+    residents while the operator-side share stays constant, so viable sz
+    shrinks as b grows.
     """
     ex, ey, ez = grid
     n3_padded = -(-(n ** 3) // 128) * 128
-    per_elem = _LIVE_ARRAYS * n3_padded * max(itemsize, 4)
+    live = _LIVE_SHARED + _LIVE_PER_RHS * nrhs
+    per_elem = live * n3_padded * max(itemsize, 4)
     max_block = max(1, VMEM_BUDGET_BYTES // per_elem)
     sz_max = max(1, max_block // (ex * ey))
     cands = [s for s in range(ez, 0, -1) if ez % s == 0 and s <= sz_max]
@@ -314,9 +324,44 @@ def _default_measure_slab(grid: tuple[int, int, int], n: int, dtype,
     return measure
 
 
+def _default_measure_slab_block(grid: tuple[int, int, int], n: int, dtype,
+                                nrhs: int,
+                                acc_dtype=None) -> Callable[[int], float]:
+    """Times the batched (multi-RHS) v2 slab kernel on synthetic data."""
+    import numpy as np
+
+    from repro.core.geom import axis_mask_factor
+    from repro.core.sem import derivative_matrix
+    from repro.kernels import nekbone_ax as _ax
+
+    ex, ey, ez = grid
+    E = ex * ey * ez
+    rng = np.random.default_rng(0)
+    p3 = jnp.asarray(rng.normal(size=(nrhs, E, n ** 3)), dtype)
+    r3 = jnp.asarray(rng.normal(size=(nrhs, E, n ** 3)), dtype)
+    g3 = jnp.asarray(rng.normal(size=(E, 3, n ** 3)), dtype)
+    D = jnp.asarray(derivative_matrix(n), dtype)
+    mx = jnp.asarray(axis_mask_factor(ex, n), dtype)
+    my = jnp.asarray(axis_mask_factor(ey, n), dtype)
+    mz = jnp.asarray(axis_mask_factor(ez, n), dtype)
+    beta = jnp.zeros((1, nrhs), _ax._accum(jnp.dtype(dtype), acc_dtype))
+
+    def measure(sz: int, layout: str = "fold",
+                grid_order: str = "parallel") -> float:
+        def f():
+            return _ax.nekbone_ax_slab_block_pallas(
+                p3, r3, D, D.T, g3, mx, my, mz, beta, n=n, grid=grid,
+                sz=sz, interpret=False, acc_dtype=acc_dtype, layout=layout,
+                grid_order=grid_order)
+
+        return _timing.measure(f, reps=3, warmup=1)
+
+    return measure
+
+
 def pick_slab_sz(grid: tuple[int, int, int], n: int, dtype=jnp.float32, *,
                  acc_dtype=None, backend: str | None = None,
-                 precond: str | None = None,
+                 precond: str | None = None, nrhs: int = 1,
                  measure: Callable[[int], float] | None = None) -> int:
     """Best slabs-per-block for the v2 pipeline on ``grid``, memoized.
 
@@ -328,7 +373,10 @@ def pick_slab_sz(grid: tuple[int, int, int], n: int, dtype=jnp.float32, *,
     holds one extra block array (the operator diagonal) live, so a
     measured pick for the plain pipeline must never be reused for the
     preconditioned one.  ``None`` keeps the pre-precond key shape so
-    existing disk caches stay valid.
+    existing disk caches stay valid.  ``nrhs > 1`` (the multi-RHS block
+    kernels, DESIGN.md §12) likewise joins the key — as an ``"rhs:<b>"``
+    suffix, so b = 1 keeps the historical key shape — and switches both
+    the VMEM heuristic and the measured sweep to the batched kernel.
     """
     dtype = jnp.dtype(dtype)
     backend = backend or jax.default_backend()
@@ -337,14 +385,20 @@ def pick_slab_sz(grid: tuple[int, int, int], n: int, dtype=jnp.float32, *,
     key = ("slab", n, ex, ey, ez, dtype.name, acc_name, backend)
     if precond is not None:
         key = key + (f"pc:{precond}",)
+    if nrhs != 1:
+        key = key + (f"rhs:{nrhs}",)
     # as in pick_block_e: VMEM residency is in the accumulation dtype
     size_item = max(dtype.itemsize, jnp.dtype(acc_name).itemsize)
 
     def pick() -> tuple[int, bool]:
-        cands = candidate_slab_sizes(grid, n, itemsize=size_item)
+        cands = candidate_slab_sizes(grid, n, itemsize=size_item, nrhs=nrhs)
         m = measure
         if m is None and backend == "tpu":
-            m = _default_measure_slab(grid, n, dtype, acc_dtype)
+            if nrhs != 1:
+                m = _default_measure_slab_block(grid, n, dtype, nrhs,
+                                                acc_dtype)
+            else:
+                m = _default_measure_slab(grid, n, dtype, acc_dtype)
         if m is None:
             return cands[0], False
         return min(cands, key=m), True
@@ -578,7 +632,7 @@ def _pick_config(key: tuple, sz_cands: list[int], measure,
 
 def pick_slab_config(grid: tuple[int, int, int], n: int, dtype=jnp.float32,
                      *, acc_dtype=None, backend: str | None = None,
-                     precond: str | None = None,
+                     precond: str | None = None, nrhs: int = 1,
                      measure=None) -> tuple[int, str, str]:
     """Best ``(sz, layout, grid_order)`` for the v2 slab kernel, memoized.
 
@@ -588,6 +642,9 @@ def pick_slab_config(grid: tuple[int, int, int], n: int, dtype=jnp.float32,
     heuristic keeps the historical (fold, parallel) configuration at the
     VMEM-ceiling sz.  Keys use a new ``("cfg", "slab", ...)`` kind so
     sz-only picks (and their persisted caches) are never aliased.
+    ``nrhs`` joins the key and the sweep exactly as in
+    :func:`pick_slab_sz` (the RHS batch changes both the VMEM footprint
+    and the measured optimum).
     """
     dtype = jnp.dtype(dtype)
     backend = backend or jax.default_backend()
@@ -596,11 +653,17 @@ def pick_slab_config(grid: tuple[int, int, int], n: int, dtype=jnp.float32,
     key = ("cfg", "slab", n, ex, ey, ez, dtype.name, acc_name, backend)
     if precond is not None:
         key = key + (f"pc:{precond}",)
+    if nrhs != 1:
+        key = key + (f"rhs:{nrhs}",)
     size_item = max(dtype.itemsize, jnp.dtype(acc_name).itemsize)
-    sz_cands = candidate_slab_sizes(grid, n, itemsize=size_item)
-    return _pick_config(
-        key, sz_cands, measure,
-        lambda: _default_measure_slab(grid, n, dtype, acc_dtype), backend)
+    sz_cands = candidate_slab_sizes(grid, n, itemsize=size_item, nrhs=nrhs)
+    if nrhs != 1:
+        factory = lambda: _default_measure_slab_block(  # noqa: E731
+            grid, n, dtype, nrhs, acc_dtype)
+    else:
+        factory = lambda: _default_measure_slab(  # noqa: E731
+            grid, n, dtype, acc_dtype)
+    return _pick_config(key, sz_cands, measure, factory, backend)
 
 
 def pick_sstep_config(grid: tuple[int, int, int], n: int, s: int,

@@ -723,6 +723,224 @@ def nekbone_cg_update_pallas(x2: jnp.ndarray, p2: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Multi-RHS (block) v2 pipeline: the same two slab kernels carrying a static
+# RHS-batch dimension b (DESIGN.md §12).  The operator-side residents — D,
+# D^T, the 3 metric diagonals, and the per-axis mask/weight factors — are
+# loaded ONCE per slab residency and reused across all b right-hand sides;
+# only the vector streams (p, r, w, x) scale with b.  That amortization is
+# the whole point: streams/RHS = per-RHS vector streams + shared operator
+# streams / b (cost.multi_rhs_streams).  The per-RHS work is a static
+# python unroll over identical single-RHS expression graphs, so at b=1 the
+# arithmetic is operation-for-operation the b=1 kernel's and the block CG
+# driver (core/cg_block.py) is fp64-bitwise identical to cg_fused_v2.
+# Per-RHS scalars travel as length-b vectors: beta/alpha come in as (1, b)
+# operands, the pap/rcr partials leave as (nblk, b) outputs.
+# ---------------------------------------------------------------------------
+
+def nekbone_ax_slab_block_kernel(p_ref, r_ref, d_ref, dt_ref, g_ref, mx_ref,
+                                 my_ref, mz_ref, beta_ref, p_out, w_ref,
+                                 bot_ref, top_ref, pap_ref, *, n: int,
+                                 ex: int, ey: int, sz: int, nrhs: int,
+                                 acc_dtype: str | None = None,
+                                 layout: str = "fold"):
+    """Batched CG front-half: ``nekbone_ax_slab_kernel`` over ``nrhs`` RHS.
+
+    Refs are the single-RHS kernel's with a leading ``nrhs`` axis on the
+    vector operands (``p_ref``/``r_ref``: (nrhs, block_e, n^3); planes
+    (nrhs, 1, pln)) while the operator operands keep their shapes — they
+    are read once and shared.  ``beta_ref`` is (1, nrhs), ``pap_ref``
+    (1, nrhs).
+    """
+    block_e = sz * ey * ex
+    f32 = _accum(p_ref.dtype, acc_dtype)
+    out_dtype = w_ref.dtype
+    pln = ey * ex * n * n
+    # shared per-residency loads: operator data + structural mask, once
+    # for all nrhs right-hand sides.
+    D = d_ref[...].astype(f32)
+    Dt = dt_ref[...].astype(f32)
+    g3 = g_ref[...].astype(f32)
+    mask = _box_outer(mz_ref[...].astype(f32), my_ref[...].astype(f32),
+                      mx_ref[...].astype(f32))
+    for j in range(nrhs):
+        beta = beta_ref[0, j].astype(f32)
+        p = r_ref[j].astype(f32) + beta * p_ref[j].astype(f32)
+        # storage rounding of the direction — same contract as the
+        # single-RHS kernel (alpha is applied to the *stored* p).
+        p = p.astype(out_dtype).astype(f32)
+        w = ax_block_diag(p, D, Dt, g3, n=n, e=block_e, layout=layout)
+        v = w.reshape(sz, ey, ex, n, n, n) * mask
+        # continuity identity: the partial sees the unassembled masked
+        # output (DESIGN.md §3.2), one lane per RHS.
+        pap_ref[0, j] = jnp.sum(p.reshape(v.shape) * v).astype(pap_ref.dtype)
+        if ex > 1:
+            s = v[:, :, :-1, :, :, -1] + v[:, :, 1:, :, :, 0]
+            v = v.at[:, :, :-1, :, :, -1].set(s)
+            v = v.at[:, :, 1:, :, :, 0].set(s)
+        if ey > 1:
+            s = v[:, :-1, :, :, -1, :] + v[:, 1:, :, :, 0, :]
+            v = v.at[:, :-1, :, :, -1, :].set(s)
+            v = v.at[:, 1:, :, :, 0, :].set(s)
+        if sz > 1:
+            s = v[:-1, :, :, -1, :, :] + v[1:, :, :, 0, :, :]
+            v = v.at[:-1, :, :, -1, :, :].set(s)
+            v = v.at[1:, :, :, 0, :, :].set(s)
+        w_ref[j] = v.reshape(block_e, n ** 3).astype(out_dtype)
+        p_out[j] = p.astype(out_dtype)
+        bot_ref[j] = v[0, :, :, 0, :, :].reshape(1, pln).astype(out_dtype)
+        top_ref[j] = v[-1, :, :, -1, :, :].reshape(1, pln).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "interpret",
+                                             "acc_dtype", "layout",
+                                             "grid_order"))
+def nekbone_ax_slab_block_pallas(p3: jnp.ndarray, r3: jnp.ndarray,
+                                 D: jnp.ndarray, Dt: jnp.ndarray,
+                                 g3: jnp.ndarray, mx: jnp.ndarray,
+                                 my: jnp.ndarray, mz: jnp.ndarray,
+                                 beta: jnp.ndarray, *, n: int,
+                                 grid: tuple[int, int, int], sz: int,
+                                 interpret: bool = False,
+                                 acc_dtype: str | None = None,
+                                 layout: str = "fold",
+                                 grid_order: str = "parallel"):
+    """Multi-output pallas_call for the batched v2 slab kernel.
+
+    Args mirror :func:`nekbone_ax_slab_pallas` with a leading RHS axis:
+    ``p3``/``r3`` are (b, E, n^3) and ``beta`` is (1, b).  Returns
+    ``(p3_new, w3, bot, top, pap_parts)`` with planes (b, EZ//sz, pln)
+    and partials (EZ//sz, b) — one lane per RHS.
+    """
+    ex, ey, ez = grid
+    nrhs, E = p3.shape[0], p3.shape[1]
+    assert E == ex * ey * ez and ez % sz == 0, (grid, sz, E)
+    block_e = sz * ey * ex
+    nblk = ez // sz
+    n3 = n ** 3
+    pln = ey * ex * n * n
+    acc = _accum(p3.dtype, acc_dtype)
+    field = pl.BlockSpec((nrhs, block_e, n3), lambda i: (0, i, 0))
+    plane = pl.BlockSpec((nrhs, 1, pln), lambda i: (0, i, 0))
+    return pl.pallas_call(
+        functools.partial(nekbone_ax_slab_block_kernel, n=n, ex=ex, ey=ey,
+                          sz=sz, nrhs=nrhs, acc_dtype=acc_dtype,
+                          layout=layout),
+        grid=(nblk,),
+        in_specs=[
+            field,                                      # p_prev (b, ., .)
+            field,                                      # r      (b, ., .)
+            pl.BlockSpec((n, n), lambda i: (0, 0)),     # D       shared
+            pl.BlockSpec((n, n), lambda i: (0, 0)),     # Dt      shared
+            pl.BlockSpec((block_e, 3, n3), lambda i: (i, 0, 0)),  # g diag
+            pl.BlockSpec((ex, n), lambda i: (0, 0)),    # mask factor x
+            pl.BlockSpec((ey, n), lambda i: (0, 0)),    # mask factor y
+            pl.BlockSpec((sz, n), lambda i: (i, 0)),    # mask factor z
+            pl.BlockSpec((1, nrhs), lambda i: (0, 0)),  # beta vector
+        ],
+        out_specs=(field, field, plane, plane,
+                   pl.BlockSpec((1, nrhs), lambda i: (i, 0))),
+        out_shape=(
+            jax.ShapeDtypeStruct((nrhs, E, n3), p3.dtype),    # p
+            jax.ShapeDtypeStruct((nrhs, E, n3), p3.dtype),    # w
+            jax.ShapeDtypeStruct((nrhs, nblk, pln), p3.dtype),
+            jax.ShapeDtypeStruct((nrhs, nblk, pln), p3.dtype),
+            jax.ShapeDtypeStruct((nblk, nrhs), acc),
+        ),
+        compiler_params=_CompilerParams(
+            dimension_semantics=(grid_order,),
+        ),
+        interpret=interpret,
+        name=(f"nekbone_ax_slab_b{nrhs}_n{n}_sz{sz}{_acc_tag(acc_dtype)}"
+              f"{_cfg_tag(layout, grid_order)}"),
+    )(p3, r3, D, Dt, g3, mx, my, mz, beta)
+
+
+def nekbone_cg_update_block_kernel(x_ref, p_ref, r_ref, w_ref, addb_ref,
+                                   addt_ref, alpha_ref, cx_ref, cy_ref,
+                                   cz_ref, x_out, r_out, rcr_ref, *, n: int,
+                                   ex: int, ey: int, sz: int, nrhs: int,
+                                   acc_dtype: str | None = None):
+    """Batched CG back-half: ``nekbone_cg_update_kernel`` over ``nrhs`` RHS.
+
+    The weight box ``c`` is rebuilt from its per-axis factors once and
+    shared across the batch; plane stitch, both axpys, and the post-update
+    r·c·r partial run per RHS (``alpha_ref``/``rcr_ref``: (1, nrhs)).
+    """
+    block_e = sz * ey * ex
+    f32 = _accum(x_ref.dtype, acc_dtype)
+    # shared per-residency load: the inner-product weight, once for all b.
+    c = _box_outer(cz_ref[...].astype(f32), cy_ref[...].astype(f32),
+                   cx_ref[...].astype(f32))
+    for j in range(nrhs):
+        alpha = alpha_ref[0, j].astype(f32)
+        v = w_ref[j].astype(f32).reshape(sz, ey, ex, n, n, n)
+        v = v.at[0, :, :, 0, :, :].add(
+            addb_ref[j].astype(f32).reshape(ey, ex, n, n))
+        v = v.at[-1, :, :, -1, :, :].add(
+            addt_ref[j].astype(f32).reshape(ey, ex, n, n))
+        x = x_ref[j].astype(f32) + alpha * p_ref[j].astype(f32)
+        r = r_ref[j].astype(f32) - alpha * v.reshape(block_e, n ** 3)
+        # rcr must see the *stored* residual (same contract as b=1).
+        r = r.astype(r_out.dtype)
+        r6 = r.astype(f32).reshape(sz, ey, ex, n, n, n)
+        rcr_ref[0, j] = jnp.sum(r6 * c * r6).astype(rcr_ref.dtype)
+        x_out[j] = x.astype(x_out.dtype)
+        r_out[j] = r
+
+
+@functools.partial(jax.jit, static_argnames=("n", "grid", "sz", "interpret",
+                                             "acc_dtype"))
+def nekbone_cg_update_block_pallas(x3: jnp.ndarray, p3: jnp.ndarray,
+                                   r3: jnp.ndarray, w3: jnp.ndarray,
+                                   addb: jnp.ndarray, addt: jnp.ndarray,
+                                   alpha: jnp.ndarray, cx: jnp.ndarray,
+                                   cy: jnp.ndarray, cz: jnp.ndarray, *,
+                                   n: int, grid: tuple[int, int, int],
+                                   sz: int, interpret: bool = False,
+                                   acc_dtype: str | None = None):
+    """Multi-output pallas_call for the batched merged-update kernel.
+
+    Args mirror :func:`nekbone_cg_update_pallas` with a leading RHS axis
+    ((b, E, n^3) fields, (b, EZ//sz, pln) shifted planes, (1, b) alpha).
+    Returns ``(x3_new, r3_new, rcr_parts)`` with partials (EZ//sz, b).
+    """
+    ex, ey, ez = grid
+    nrhs, E = x3.shape[0], x3.shape[1]
+    assert E == ex * ey * ez and ez % sz == 0, (grid, sz, E)
+    block_e = sz * ey * ex
+    nblk = ez // sz
+    n3 = n ** 3
+    pln = ey * ex * n * n
+    acc = _accum(x3.dtype, acc_dtype)
+    field = pl.BlockSpec((nrhs, block_e, n3), lambda i: (0, i, 0))
+    plane = pl.BlockSpec((nrhs, 1, pln), lambda i: (0, i, 0))
+    return pl.pallas_call(
+        functools.partial(nekbone_cg_update_block_kernel, n=n, ex=ex, ey=ey,
+                          sz=sz, nrhs=nrhs, acc_dtype=acc_dtype),
+        grid=(nblk,),
+        in_specs=[
+            field, field, field, field,                 # x, p, r, w
+            plane, plane,                               # addb, addt
+            pl.BlockSpec((1, nrhs), lambda i: (0, 0)),  # alpha vector
+            pl.BlockSpec((ex, n), lambda i: (0, 0)),    # c factor x
+            pl.BlockSpec((ey, n), lambda i: (0, 0)),    # c factor y
+            pl.BlockSpec((sz, n), lambda i: (i, 0)),    # c factor z slice
+        ],
+        out_specs=(field, field, pl.BlockSpec((1, nrhs), lambda i: (i, 0))),
+        out_shape=(
+            jax.ShapeDtypeStruct((nrhs, E, n3), x3.dtype),
+            jax.ShapeDtypeStruct((nrhs, E, n3), r3.dtype),
+            jax.ShapeDtypeStruct((nblk, nrhs), acc),
+        ),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+        name=f"nekbone_cg_update_b{nrhs}_n{n}_sz{sz}{_acc_tag(acc_dtype)}",
+    )(x3, p3, r3, w3, addb, addt, alpha, cx, cy, cz)
+
+
+# ---------------------------------------------------------------------------
 # v3 s-step pipeline: matrix-powers slab kernel + multi-axpy update
 # (DESIGN.md §8).  One kernel invocation evaluates the whole 2s+1-vector
 # Krylov basis {p, Ap, .., A^s p, r, Ar, .., A^{s-1} r} of an s-step CG

@@ -19,9 +19,10 @@ from repro.kernels import nekbone_ax as _ax
 from repro.kernels import wkv6 as _wkv6
 
 __all__ = ["nekbone_ax", "nekbone_ax_dots", "nekbone_ax_dots_slab",
-           "nekbone_cg_update", "nekbone_ax_powers", "nekbone_sstep_update",
-           "nekbone_pcg_update", "nekbone_cheb_precond",
-           "slab_axis_factors", "diag_metric",
+           "nekbone_ax_dots_slab_block", "nekbone_cg_update",
+           "nekbone_cg_update_block", "nekbone_ax_powers",
+           "nekbone_sstep_update", "nekbone_pcg_update",
+           "nekbone_cheb_precond", "slab_axis_factors", "diag_metric",
            "flash_attention", "wkv6", "default_interpret"]
 
 
@@ -359,6 +360,105 @@ def nekbone_cg_update(x: jnp.ndarray, p: jnp.ndarray, r: jnp.ndarray,
         alpha_arr, cx, cy, cz, n=n, grid=grid, sz=sz, interpret=interpret,
         acc_dtype=acc_dtype)
     return x2.reshape(x.shape), r2.reshape(x.shape), jnp.sum(rcr_b)
+
+
+def nekbone_ax_dots_slab_block(p_prev: jnp.ndarray, r: jnp.ndarray,
+                               D: jnp.ndarray, g3: jnp.ndarray,
+                               grid: tuple[int, int, int], *,
+                               beta=0.0, sz: int | None = None,
+                               layout: str | None = None,
+                               grid_order: str | None = None,
+                               interpret: bool | None = None,
+                               acc_dtype: str | None = None):
+    """Batched v2 slab dots kernel on natural shapes (DESIGN.md §12).
+
+    The multi-RHS sibling of :func:`nekbone_ax_dots_slab`: ``p_prev``/``r``
+    carry a leading RHS-batch axis (b, E, n, n, n) and ``beta`` is a scalar
+    or length-b vector.  The operator residents (D, metric diagonals, mask
+    factors) are loaded once per slab residency and shared across the
+    batch; the cross-block boundary planes are stitched host-side here.
+
+    Returns ``(p, w, pap)`` with ``pap`` a length-b vector of per-RHS
+    ``p·c·(mask gs w_local)`` partial reductions.
+    """
+    ex, ey, ez = grid = tuple(grid)
+    nrhs, E = p_prev.shape[0], p_prev.shape[1]
+    n = p_prev.shape[-1]
+    interpret = default_interpret() if interpret is None else interpret
+    if sz is None and layout is None and grid_order is None:
+        sz, layout, grid_order = _autotune.pick_slab_config(
+            grid, n, p_prev.dtype, acc_dtype=acc_dtype, nrhs=nrhs)
+    elif sz is None:
+        sz = _autotune.pick_slab_sz(grid, n, p_prev.dtype,
+                                    acc_dtype=acc_dtype, nrhs=nrhs)
+    layout = "fold" if layout is None else layout
+    grid_order = "parallel" if grid_order is None else grid_order
+    n3 = n ** 3
+    nblk = ez // sz
+    (mx, my, mz), _ = slab_axis_factors(grid, n, p_prev.dtype)
+    D = jnp.asarray(D, p_prev.dtype)
+    g3 = diag_metric(jnp.asarray(g3, p_prev.dtype), E, n)
+    acc = _ax._accum(p_prev.dtype, acc_dtype)
+    beta_arr = jnp.broadcast_to(jnp.asarray(beta, acc),
+                                (nrhs,)).reshape(1, nrhs)
+    p3, w3, bot, top, pap_b = _ax.nekbone_ax_slab_block_pallas(
+        p_prev.reshape(nrhs, E, n3), r.reshape(nrhs, E, n3), D, D.T,
+        g3, mx, my, mz, beta_arr, n=n, grid=grid, sz=sz,
+        interpret=interpret, acc_dtype=acc_dtype, layout=layout,
+        grid_order=grid_order)
+    vb = w3.reshape(nrhs, nblk, sz, ey, ex, n, n, n)
+    plane = (nrhs, nblk - 1, ey, ex, n, n)
+    if nblk > 1:
+        vb = vb.at[:, 1:, 0, :, :, 0, :, :].add(
+            top[:, :-1].reshape(plane))
+        vb = vb.at[:, :-1, -1, :, :, -1, :, :].add(
+            bot[:, 1:].reshape(plane))
+    return (p3.reshape(p_prev.shape), vb.reshape(p_prev.shape),
+            jnp.sum(pap_b, axis=0))
+
+
+def nekbone_cg_update_block(x: jnp.ndarray, p: jnp.ndarray, r: jnp.ndarray,
+                            w: jnp.ndarray, alpha,
+                            grid: tuple[int, int, int], *,
+                            addb: jnp.ndarray | None = None,
+                            addt: jnp.ndarray | None = None,
+                            sz: int | None = None,
+                            interpret: bool | None = None,
+                            acc_dtype: str | None = None):
+    """Batched merged CG vector-update kernel on natural shapes.
+
+    The multi-RHS sibling of :func:`nekbone_cg_update`: fields carry a
+    leading RHS-batch axis (b, E, n, n, n), ``alpha`` is a scalar or
+    length-b vector, ``addb``/``addt`` are (b, EZ//sz, EY*EX*n^2).
+
+    Returns ``(x_new, r_new, rtz_new)`` with ``rtz_new`` a length-b
+    vector of per-RHS weighted norms of the updated residual.
+    """
+    ex, ey, ez = grid = tuple(grid)
+    nrhs, E = x.shape[0], x.shape[1]
+    n = x.shape[-1]
+    interpret = default_interpret() if interpret is None else interpret
+    if sz is None:
+        sz = _autotune.pick_slab_sz(grid, n, x.dtype, acc_dtype=acc_dtype,
+                                    nrhs=nrhs)
+    n3 = n ** 3
+    nblk = ez // sz
+    pln = ey * ex * n * n
+    _, (cx, cy, cz) = slab_axis_factors(grid, n, x.dtype)
+    acc = _ax._accum(x.dtype, acc_dtype)
+    if addb is None:
+        addb = jnp.zeros((nrhs, nblk, pln), x.dtype)
+    if addt is None:
+        addt = jnp.zeros((nrhs, nblk, pln), x.dtype)
+    alpha_arr = jnp.broadcast_to(jnp.asarray(alpha, acc),
+                                 (nrhs,)).reshape(1, nrhs)
+    x3, r3, rcr_b = _ax.nekbone_cg_update_block_pallas(
+        x.reshape(nrhs, E, n3), p.reshape(nrhs, E, n3),
+        r.reshape(nrhs, E, n3), w.reshape(nrhs, E, n3),
+        addb.reshape(nrhs, nblk, pln), addt.reshape(nrhs, nblk, pln),
+        alpha_arr, cx, cy, cz, n=n, grid=grid, sz=sz, interpret=interpret,
+        acc_dtype=acc_dtype)
+    return x3.reshape(x.shape), r3.reshape(x.shape), jnp.sum(rcr_b, axis=0)
 
 
 def nekbone_pcg_update(x: jnp.ndarray, p: jnp.ndarray, z: jnp.ndarray,

@@ -1,0 +1,146 @@
+"""Multi-RHS block CG (core/cg_block.py) + the SolveResult surface.
+
+Pins the acceptance contract of the batched fast path (DESIGN.md §12):
+
+* b=1 through ``cg_block_fixed_iters`` is fp64-BITWISE identical to
+  ``cg_fused_v2_fixed_iters`` — the block kernels ARE the v2 arithmetic
+  with a static batch loop, not a reimplementation;
+* each lane of a b>1 batch matches its own independent single-RHS solve
+  bitwise (the CG recurrences never mix lanes);
+* the tolerance driver stops every lane at (or past) its target;
+* ``SolveResult`` keeps the legacy ``x, hist = res`` two-tuple protocol
+  and the CGResult attribute aliases while carrying the new named fields.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.cg import SolveResult
+from repro.core.cg_block import cg_block_fixed_iters, cg_block_tol
+from repro.core.cg_fused import cg_fused_v2_fixed_iters
+from repro.core.gs import ds_sum_local
+from repro.core.nekbone import NekboneCase
+
+
+def _case64():
+    return NekboneCase(n=5, grid=(2, 2, 4), dtype=jnp.float64,
+                       ax_impl="pallas_fused_cg_v2")
+
+
+def _masked_rhs(rng, case):
+    u = jnp.asarray(rng.normal(size=case.mask.shape), case.dtype)
+    return ds_sum_local(u, case.grid) * case.mask
+
+
+def _kw(case, niter):
+    return dict(D=case.D, g=case.g, grid=case.grid, niter=niter,
+                mask=case.mask, c=case.c)
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity
+# ---------------------------------------------------------------------------
+
+def test_b1_bitwise_parity_with_v2(x64):
+    case = _case64()
+    _, f = case.manufactured()
+    niter = 12
+    ref = cg_fused_v2_fixed_iters(f, **_kw(case, niter))
+    res = cg_block_fixed_iters(f, **_kw(case, niter))     # 4-D lift, b=1
+    np.testing.assert_array_equal(np.asarray(res.x[0]), np.asarray(ref.x))
+    np.testing.assert_array_equal(np.asarray(res.history[0]),
+                                  np.asarray(ref.history))
+    assert res.pipeline == "fused_v2_rhs1"
+
+
+@pytest.mark.parametrize("b", [2, 3])
+def test_lanes_match_independent_solves(rng, x64, b):
+    case = _case64()
+    _, f0 = case.manufactured()
+    lanes = [f0] + [_masked_rhs(rng, case) for _ in range(b - 1)]
+    niter = 10
+    res = cg_block_fixed_iters(jnp.stack(lanes), **_kw(case, niter))
+    assert res.x.shape == (b,) + f0.shape
+    assert res.history.shape == (b, niter + 1)
+    for j in range(b):
+        solo = cg_fused_v2_fixed_iters(lanes[j], **_kw(case, niter))
+        np.testing.assert_array_equal(np.asarray(res.x[j]),
+                                      np.asarray(solo.x))
+        np.testing.assert_array_equal(np.asarray(res.history[j]),
+                                      np.asarray(solo.history))
+
+
+# ---------------------------------------------------------------------------
+# tolerance driver
+# ---------------------------------------------------------------------------
+
+def test_tol_driver_converges_every_lane(x64):
+    case = _case64()
+    _, f = case.manufactured()
+    B = jnp.stack([f, 0.5 * f])
+    tol = 1e-8
+    res = cg_block_tol(B, D=case.D, g=case.g, grid=case.grid, tol=tol,
+                       max_iter=60, mask=case.mask, c=case.c)
+    k = int(res.iters)
+    assert 0 < k < 60
+    # stopping rule is |rtz| > tol^2 checked before each iteration: at
+    # exit every lane's rtz (= rnorm^2) is at or below tol^2.
+    assert np.all(np.asarray(res.rnorm) <= tol)
+    # scaling the rhs scales the whole (linear) trajectory: the two lanes
+    # converge in lockstep and history stays per-lane.
+    np.testing.assert_allclose(np.asarray(res.history[1, :k]),
+                               0.5 * np.asarray(res.history[0, :k]),
+                               rtol=1e-12)
+
+
+def test_rejects_bad_rank(x64):
+    case = _case64()
+    _, f = case.manufactured()
+    with pytest.raises(ValueError, match=r"\(b, E, n, n, n\)"):
+        cg_block_fixed_iters(f[0], **_kw(case, 3))
+
+
+# ---------------------------------------------------------------------------
+# SolveResult surface
+# ---------------------------------------------------------------------------
+
+def test_solve_result_tuple_compat(x64):
+    case = _case64()
+    _, f = case.manufactured()
+    res = case.solve(f, niter=5)
+    assert isinstance(res, SolveResult)
+    x, hist = res                       # legacy (x, hist) unpack
+    assert x is res.x and hist is res.history
+    assert len(res) == 2 and res[0] is res.x and res[1] is res.history
+    # CGResult attribute aliases
+    assert int(res.iters) == 5
+    assert res.rnorm_history is res.history
+    # named fields
+    assert res.pipeline == "fused_v2"
+    assert res.precond is None
+    np.testing.assert_allclose(
+        float(res.achieved_rtol),
+        float(res.rnorm) / float(res.history[0]), rtol=1e-12)
+
+
+def test_precond_boolean_deprecation(x64):
+    case = _case64()
+    _, f = case.manufactured()
+    with pytest.warns(DeprecationWarning, match="precond='jacobi'"):
+        res = case.solve(f, niter=3, precond=True)
+    assert res.precond == "jacobi"
+    case_pc = NekboneCase(n=5, grid=(2, 2, 4), dtype=jnp.float64,
+                          ax_impl="pallas_fused_cg_v2", precond="jacobi")
+    with pytest.warns(DeprecationWarning):
+        res = case_pc.solve(f, niter=3, precond=False)
+    assert res.precond is None and res.pipeline == "fused_v2"
+
+
+def test_case_batched_solve_routes_to_block(x64):
+    case = _case64()
+    _, f = case.manufactured()
+    res = case.solve(jnp.stack([f, 2.0 * f]), niter=6)
+    assert res.pipeline == "fused_v2_rhs2"
+    ref = case.solve(f, niter=6)
+    np.testing.assert_array_equal(np.asarray(res.x[0]), np.asarray(ref.x))

@@ -21,12 +21,14 @@ def _payload(**overrides):
     # rows and their backend are mirrored from the committed baseline —
     # a synthetic payload has no wall clock of its own to offer.
     base = {
-        "schema": "repro-bench/6",
-        "schema_version": 6,
+        "schema": "repro-bench/7",
+        "schema_version": 7,
         "reference_backend": _BASELINE_DATA.get("reference_backend", "cpu"),
         "streams_per_iter": bench_run._streams_ladder(),
         "bytes_per_dof_iter": bench_run._precision_table(),
+        "streams_per_rhs": bench_run._streams_per_rhs_table(),
         "us_per_iter": dict(_BASELINE_DATA.get("us_per_iter", {})),
+        "solver_service": dict(_BASELINE_DATA.get("solver_service") or {}),
         "sections": [],
     }
     base.update(overrides)
@@ -382,3 +384,72 @@ def test_write_json_atomic_path_is_directory_is_clear_error(tmp_path,
     target.mkdir()                      # occupied by a directory
     assert not bench_run.write_json_atomic(target, {"d": 4})
     assert "could not write bench json" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# schema v7: multi-RHS rungs, the streams/RHS table, solver_service rows
+# ---------------------------------------------------------------------------
+
+def test_multi_rhs_ladder_rung_values():
+    """The v7 rungs: shared operator streams (3) divide by b on top of
+    the per-RHS vector streams — and the b=8 s-step point sits below the
+    single-RHS 6.25 headline."""
+    ladder = bench_run._streams_ladder()
+    assert ladder["fused_v2_rhs2"] == 11.5
+    assert ladder["fused_v2_rhs4"] == 10.75
+    assert ladder["fused_v2_rhs8"] == 10.375
+    assert ladder["sstep_v3_rhs2"] == 5.875
+    assert ladder["sstep_v3_rhs4"] == 5.6875
+    assert ladder["sstep_v3_rhs8"] == 5.59375
+    assert ladder["sstep_v3_rhs8"] < 6.25
+
+
+def test_streams_per_rhs_table_strictly_decreasing():
+    table = bench_run._streams_per_rhs_table()
+    for pipeline, rows in table.items():
+        seq = [rows[str(b)] for b in (1, 2, 4, 8)]
+        assert all(a > b for a, b in zip(seq, seq[1:])), (pipeline, seq)
+    assert table["fused_v2"]["1"] == 13
+    assert table["sstep_v3"]["1"] == 6.25
+
+
+def _payload_v7(**overrides):
+    base = _payload(schema_version=7,
+                    streams_per_rhs=bench_run._streams_per_rhs_table(),
+                    solver_service={"rows": {"1": {}}})
+    base.update(overrides)
+    return base
+
+
+def test_streams_per_rhs_exact_and_monotone_gate():
+    base = _payload_v7()
+    fresh = _payload_v7()
+    # exact pin: any drift on a baseline row fails
+    fresh["streams_per_rhs"]["fused_v2"]["8"] = 10.5
+    problems = compare(fresh, base)
+    assert any("streams/RHS 'fused_v2' b=8" in p for p in problems)
+    # monotonicity: a non-decreasing step fails even when the baseline
+    # holds the same (broken) curve
+    broken = _payload_v7()
+    broken["streams_per_rhs"]["fused_v2"]["8"] = 11.0
+    broken["streams_per_rhs"]["fused_v2"]["4"] = 11.0
+    problems = compare(broken, broken)
+    assert any("strictly decreasing" in p for p in problems)
+
+
+def test_streams_per_rhs_missing_fails_when_pinned():
+    fresh = _payload_v7()
+    del fresh["streams_per_rhs"]
+    problems = compare(fresh, _payload_v7())
+    assert any("streams_per_rhs" in p for p in problems)
+    # ...but a v6 baseline without the table doesn't demand it
+    assert compare(_payload(), _payload()) == []
+
+
+def test_solver_service_presence_is_timing_like():
+    fresh = _payload_v7()
+    del fresh["solver_service"]
+    timing = []
+    problems = compare(fresh, _payload_v7(), timing_problems=timing)
+    assert not any("solver_service" in p for p in problems)
+    assert any("solver_service" in t for t in timing)

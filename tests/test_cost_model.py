@@ -291,3 +291,49 @@ def test_bytes_per_dof_iter_ndev():
         bytes_per_dof_iter("fused_v1", "f32", exact=True, ndev=8, ez=32)
     with pytest.raises(ValueError, match="exact=True"):
         bytes_per_dof_iter("sstep_v3", "f32", ndev=8, ez=32)
+
+
+def test_multi_rhs_stream_books():
+    """DESIGN.md §12: per-RHS streams = vector + shared/b, strictly
+    decreasing in b, approaching the vector floor; halo amortizes too;
+    bf16 prices at exactly half of f32 on every rhs rung."""
+    import pytest
+
+    from repro.core.cost import (MULTI_RHS_BATCHES, MULTI_RHS_SHARED_STREAMS,
+                                 PIPELINE_STREAMS, bytes_per_dof_iter,
+                                 multi_rhs_halo_streams, multi_rhs_streams,
+                                 streams_per_rhs)
+
+    assert MULTI_RHS_SHARED_STREAMS == 3.0
+    # b=1 degenerates to the single-RHS rungs
+    assert streams_per_rhs(1, "fused_v2") == 13
+    assert streams_per_rhs(1, "sstep_v3") == 6.25
+    # the b=8 acceptance points
+    assert streams_per_rhs(8, "fused_v2") == 10.375
+    assert streams_per_rhs(8, "sstep_v3") == 5.59375 < 6.25
+    for pipeline in ("fused_v2", "sstep_v3"):
+        seq = [streams_per_rhs(b, pipeline) for b in (1, 2, 4, 8)]
+        assert all(a > b for a, b in zip(seq, seq[1:]))
+        # the shared streams vanish as b -> inf: the floor is vector-only
+        floor = streams_per_rhs(1, pipeline) - (
+            MULTI_RHS_SHARED_STREAMS if pipeline == "fused_v2"
+            else MULTI_RHS_SHARED_STREAMS / 4)
+        assert streams_per_rhs(10 ** 6, pipeline) == pytest.approx(floor)
+        for b in MULTI_RHS_BATCHES:
+            r, w = PIPELINE_STREAMS[f"{pipeline}_rhs{b}"]
+            assert r + w == streams_per_rhs(b, pipeline)
+            f32 = sum(bytes_per_dof_iter(f"{pipeline}_rhs{b}", "f32"))
+            bf16 = sum(bytes_per_dof_iter(f"{pipeline}_rhs{b}", "bf16"))
+            assert bf16 * 2 == f32
+            ex32 = sum(bytes_per_dof_iter(f"{pipeline}_rhs{b}", "f32",
+                                          exact=True))
+            ex16 = sum(bytes_per_dof_iter(f"{pipeline}_rhs{b}", "bf16",
+                                          exact=True))
+            assert ex16 * 2 == pytest.approx(ex32)
+    # halo side channel: (4 + 6/b)/sz per RHS — b=1 is the v3 10/sz
+    assert multi_rhs_halo_streams(1, 4, 4) == pytest.approx(10 / 4)
+    assert multi_rhs_halo_streams(8, 4, 4) == pytest.approx(4.75 / 4)
+    with pytest.raises(ValueError):
+        multi_rhs_streams(0)
+    with pytest.raises(ValueError):
+        multi_rhs_streams(2, "eq2")

@@ -1,0 +1,112 @@
+"""Solver service (launch/solver_service.py): queue, buckets, dispatch.
+
+The scheduling rules the serving layer promises (DESIGN.md §12):
+
+* an empty queue drains to ``[]`` with zero dispatches;
+* requests in different buckets — any difference in (grid, n, dtype,
+  pipeline, precision, precond, stopping rule) — are NEVER co-scheduled;
+* a bucket with more pending requests than ``max_b`` splits into
+  ceil(k/max_b) dispatches, none exceeding ``max_b``;
+* results return in submission order with correct request ids, and each
+  answer equals the equivalent direct registry solve (parity through the
+  batching layer).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.nekbone import NekboneConfig
+from repro.launch.solver_service import SolveRequest, SolverService
+
+
+def _cfg(**over):
+    base = dict(name="svc", n=4, grid=(2, 2, 2), dtype="float32",
+                ax_impl="pallas_fused_cg_v2")
+    base.update(over)
+    return NekboneConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    case = cfg.make_case()
+    _, f = case.manufactured()
+    return cfg, case, f
+
+
+def test_empty_queue_drains_empty():
+    svc = SolverService(max_b=4)
+    assert svc.drain() == []
+    assert svc.dispatch_log == []
+    assert svc.pending == 0
+
+
+def test_mixed_buckets_never_co_scheduled(setup):
+    cfg, case, f = setup
+    cfg_pc = _cfg(precond="jacobi")
+    cfg_tol = cfg                       # same case, different stopping rule
+    svc = SolverService(max_b=8)
+    ids_a = [svc.submit(SolveRequest(f=f, config=cfg, niter=4))
+             for _ in range(2)]
+    ids_b = [svc.submit(SolveRequest(f=f, config=cfg_pc, niter=4))]
+    ids_c = [svc.submit(SolveRequest(f=f, config=cfg_tol, tol=1e-6))]
+    results = svc.drain()
+    assert [r.request_id for r in results] == ids_a + ids_b + ids_c
+    assert len(svc.dispatch_log) == 3
+    groups = [set(rids) for _, rids in svc.dispatch_log]
+    assert set(ids_a) in groups
+    assert set(ids_b) in groups
+    assert set(ids_c) in groups
+    # bucket keys of the three dispatches are pairwise distinct
+    assert len({k for k, _ in svc.dispatch_log}) == 3
+
+
+def test_bucket_overflow_splits(setup):
+    cfg, case, f = setup
+    svc = SolverService(max_b=3)
+    ids = [svc.submit(SolveRequest(f=f, config=cfg, niter=3))
+           for _ in range(7)]
+    results = svc.drain()
+    assert [r.request_id for r in results] == ids
+    sizes = [len(rids) for _, rids in svc.dispatch_log]
+    assert sizes == [3, 3, 1]           # ceil(7/3) chunks, order kept
+    assert all(s <= svc.max_b for s in sizes)
+    assert [r.batch_size for r in results] == [3, 3, 3, 3, 3, 3, 1]
+
+
+def test_batched_answers_match_direct_solve(setup):
+    cfg, case, f = setup
+    svc = SolverService(max_b=4)
+    rng = np.random.default_rng(1)
+    fs = [f, jnp.asarray(rng.standard_normal(f.shape),
+                         jnp.float32) * case.mask]
+    ids = [svc.submit(SolveRequest(f=fi, config=cfg, niter=6))
+           for fi in fs]
+    results = svc.drain()
+    assert len(svc.dispatch_log) == 1   # one bucket, one dispatch
+    for r, fi in zip(results, fs):
+        direct = case.solve(fi, niter=6)
+        np.testing.assert_array_equal(np.asarray(r.x),
+                                      np.asarray(direct.x))
+        assert r.pipeline == "fused_v2_rhs2"
+        assert int(r.iters_taken) == 6
+
+
+def test_warm_start_populates_caches(setup, tmp_path, monkeypatch):
+    cfg, case, f = setup
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    from repro.kernels import autotune
+
+    autotune.clear_cache()
+    svc = SolverService(max_b=2)
+    warmed = svc.warm_start([cfg], batches=[1, 2], niter=1)
+    assert warmed == 2
+    # the case is cached for subsequent dispatches
+    assert len(svc._cases) == 1
+    autotune.clear_cache(disk=False)
+
+
+def test_rejects_bad_max_b():
+    with pytest.raises(ValueError, match="max_b"):
+        SolverService(max_b=0)
