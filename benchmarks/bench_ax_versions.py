@@ -133,6 +133,12 @@ def run():
                      _time_pcg(E, "jacobi") * 1e6, _pcg_derived("jacobi")))
         rows.append((f"pcg_cheb4_iter_e{E}",
                      _time_pcg(E, "cheb4") * 1e6, _pcg_derived("cheb")))
+        # p-multigrid rung (DESIGN.md §13): one full symmetric V-cycle
+        # inside the fused PCG iteration — the most streams/iter on the
+        # ladder, bought back several times over in iteration count (the
+        # pcg_iters_tol row below carries the counts).
+        rows.append((f"pcg_pmg_iter_e{E}",
+                     _time_pcg(E, "pmg") * 1e6, _pcg_derived("pmg")))
     # iterations-to-tolerance (the PCG headline, DESIGN.md §9.4): solved
     # once at the sweep's smallest point — the derived column carries the
     # iteration counts of the plain / Jacobi / Chebyshev(4) tolerance-
@@ -184,14 +190,20 @@ def _sstep_derived(s: int) -> str:
 
 
 def _pcg_derived(kind: str) -> str:
-    from repro.core.cost import (CHEB_DEFAULT_K, bytes_per_dof_iter,
-                                 cheb_effective_streams)
+    from repro.core.cost import (CHEB_DEFAULT_K, PMG_DEFAULT_K,
+                                 bytes_per_dof_iter, cheb_effective_streams,
+                                 pmg_effective_streams)
 
-    pipeline = "fused_v2_jacobi" if kind == "jacobi" else "fused_v2_cheb"
+    pipeline = {"jacobi": "fused_v2_jacobi",
+                "pmg": "fused_v2_pmg"}.get(kind, "fused_v2_cheb")
     pcg = sum(bytes_per_dof_iter(pipeline, "f32"))
     v2 = sum(bytes_per_dof_iter("fused_v2", "f32"))
-    extra = (f";eff={cheb_effective_streams(CHEB_DEFAULT_K, 4):.2f}"
-             if kind != "jacobi" else "")
+    if kind == "jacobi":
+        extra = ""
+    elif kind == "pmg":
+        extra = f";eff={pmg_effective_streams(10, PMG_DEFAULT_K, 4):.2f}"
+    else:
+        extra = f";eff={cheb_effective_streams(CHEB_DEFAULT_K, 4):.2f}"
     return f"B/dof/iter_{pcg:g}v{v2:g}={pcg / v2:.2f}x{extra}"
 
 
@@ -227,21 +239,24 @@ def _time_pcg(E: int, name: str) -> float:
 
 
 def _pcg_iters_derived(E: int) -> str:
-    """Tolerance-driven iteration counts: plain vs Jacobi vs Chebyshev."""
+    """Tolerance-driven iteration counts: plain vs Jacobi vs Chebyshev vs
+    p-multigrid (the §13 headline — pmg trades the largest per-iteration
+    stream budget for the smallest count)."""
     from repro.core.precond import cg_fused_tol
 
     case, f = _pcg_case(E)
     r0 = float(jnp.sqrt(jnp.abs(jnp.sum(f * case.c * f))))
     tol = 1e-6 * r0
     counts = {}
-    for name in (None, "jacobi", "cheb4"):
+    for name in (None, "jacobi", "cheb4", "pmg"):
         spec = case.precond_spec(name) if name else None
         res = cg_fused_tol(f, D=case.D, g=case.g, grid=case.grid, tol=tol,
                            max_iter=500, precond=spec, mask=case.mask,
                            c=case.c)
         counts[name or "plain"] = int(res.iters)
     return (f"iters@rtol1e-6:plain={counts['plain']}"
-            f";jacobi={counts['jacobi']};cheb4={counts['cheb4']}")
+            f";jacobi={counts['jacobi']};cheb4={counts['cheb4']}"
+            f";pmg={counts['pmg']}")
 
 
 def _time_cg_sstep(E: int, s: int) -> float:

@@ -1,0 +1,101 @@
+"""CI smoke for the p-multigrid preconditioner: fused-vs-reference parity
+plus the iteration-count acceptance (DESIGN.md §13).
+
+  JAX_ENABLE_X64=1 PYTHONPATH=src python -m benchmarks.pmg_smoke
+
+Mirrors benchmarks/pcg_smoke.py.  Two checks:
+
+* **Parity** — the fused V-cycle PCG driver (core/precond._pcg_pmg, all
+  Pallas kernels in interpret mode) against reference PCG built on the
+  XLA V-cycle (core/pmg.pmg_vcycle_reference) on a small case: the two
+  cycles share the degree ladder, the smoothing intervals, and the exact
+  base solve, so any miss isolates the kernels.
+* **Acceptance** — on the paper E=1024/n=10 case, tolerance-driven
+  pmg-PCG must reach rtol 1e-8 in at most half the iterations of
+  Chebyshev(4)-PCG, and in at most :data:`PMG_MAX_ITERS_PAPER` (ISSUE 9;
+  the V-cycle's stream surcharge has to buy at least a 2x count cut to
+  be worth running).
+
+Exits non-zero naming the offending check; prints one CSV-ish row per
+check so the log doubles as an iteration-advantage record.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+RTOL = 1e-9
+N, GRID, NITER = 5, (2, 2, 4), 10
+PAPER_N, PAPER_GRID = 10, (8, 8, 16)
+PMG_MAX_ITERS_PAPER = 15
+
+
+def main() -> int:
+    from repro.core import cg as cg_mod
+    from repro.core import pmg
+    from repro.core import precond as pc
+    from repro.core.nekbone import NekboneCase
+
+    failures = 0
+
+    # --- parity: fused V-cycle PCG vs reference PCG ---------------------
+    case = NekboneCase(n=N, grid=GRID, dtype=jnp.float64)
+    _, f = case.manufactured()
+    spec = case.precond_spec("pmg")
+    M = pmg.pmg_vcycle_reference(spec, D=case.D, g=case.g, grid=case.grid,
+                                 mask=case.mask, c=case.c)
+    ref = cg_mod.cg_fixed_iters(case.ax_full, f, niter=NITER,
+                                dot=case.dot(), precond=M)
+    fused = pc.pcg_fused_v2_fixed_iters(
+        f, D=case.D, g=case.g, grid=case.grid, niter=NITER, precond=spec,
+        mask=case.mask, c=case.c, interpret=True)
+    h_ref = np.asarray(ref.rnorm_history)
+    h_fus = np.asarray(fused.rnorm_history)
+    hist_rel = float(np.abs(h_fus - h_ref).max() / h_ref[0])
+    x_scale = np.abs(np.asarray(ref.x)).max() + 1e-300
+    x_rel = float(np.abs(np.asarray(fused.x)
+                         - np.asarray(ref.x)).max() / x_scale)
+    ok = hist_rel < RTOL and x_rel < RTOL
+    failures += not ok
+    print(f"pmg_smoke_parity,0.0,hist_rel={hist_rel:.2e}"
+          f";x_rel={x_rel:.2e};ladder={'-'.join(map(str, spec.ns))}"
+          f";{'OK' if ok else 'FAIL'}")
+    if not ok:
+        print(f"ERROR: fused V-cycle parity vs reference exceeded "
+              f"{RTOL:g} (hist {hist_rel:.2e}, x {x_rel:.2e})",
+              file=sys.stderr)
+
+    # --- acceptance: paper case iteration counts ------------------------
+    paper = NekboneCase(n=PAPER_N, grid=PAPER_GRID, dtype=jnp.float64)
+    _, fp = paper.manufactured()
+    r0 = float(jnp.sqrt(jnp.abs(jnp.sum(fp * paper.c * fp))))
+    tol = 1e-8 * r0
+    # cheb_sz=16 (one z-block): interpret-mode halo redundancy dominates
+    # wall clock; the split only changes fp associations.
+    kw = dict(D=paper.D, g=paper.g, grid=paper.grid, tol=tol, max_iter=60,
+              mask=paper.mask, c=paper.c, interpret=True, cheb_sz=16)
+    it_chb = int(pc.cg_fused_tol(fp, precond=paper.precond_spec("cheb4"),
+                                 **kw).iters)
+    res_pmg = pc.cg_fused_tol(fp, precond=paper.precond_spec("pmg"), **kw)
+    it_pmg = int(res_pmg.iters)
+    ok = (it_pmg <= it_chb // 2 and it_pmg <= PMG_MAX_ITERS_PAPER
+          and float(res_pmg.rnorm) <= tol * 1.0001)
+    failures += not ok
+    print(f"pmg_smoke_iters_e1024,0.0,pmg={it_pmg};cheb4={it_chb}"
+          f";bound={PMG_MAX_ITERS_PAPER};rtol=1e-8"
+          f";{'OK' if ok else 'FAIL'}")
+    if not ok:
+        print(f"ERROR: pmg iteration acceptance failed: pmg={it_pmg}, "
+              f"cheb4={it_chb}, need pmg <= min(cheb4//2, "
+              f"{PMG_MAX_ITERS_PAPER})", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -141,6 +141,11 @@ def _streams_ladder() -> dict:
             + cost.v2_plane_collective_streams(10, 32 // 8)),
         "fused_v2_cheb_sharded_d8": cost.cheb_effective_streams(
             cost.CHEB_DEFAULT_K, 4, ndev=8, ez=32, n=10),
+        # p-multigrid rung (schema v8, DESIGN.md §13): the full symmetric
+        # V-cycle's per-iteration budget at the paper's n=10 ladder —
+        # deliberately the most streams/iter of any rung; the win is the
+        # iteration count (pcg_iters_tol rows).
+        "fused_v2_pmg": sum(cost.pmg_streams(10)),
         # multi-RHS rungs (schema v7, DESIGN.md §12): per-RHS streams of
         # the batched block pipeline — the shared operator streams divide
         # by b, the per-RHS vector streams stay put.
@@ -228,7 +233,7 @@ def main() -> None:
 
     quick = bool(os.environ.get("REPRO_BENCH_QUICK"))
     payload = {
-        "schema": "repro-bench/7",
+        "schema": "repro-bench/8",
         # monotone int for forward-compat decisions (check_regression.py
         # warns on version skew instead of failing on unknown tables).
         # v5: sharded rungs — *_sharded_d8 ladder entries and the
@@ -241,7 +246,11 @@ def main() -> None:
         # streams_per_rhs amortization table (exact + strictly decreasing
         # in b), and the measured solver_service latency/throughput
         # section (DESIGN.md §12).
-        "schema_version": 7,
+        # v8: p-multigrid rung — fused_v2_pmg ladder entry + byte rows
+        # (headline and exact V-cycle books, DESIGN.md §13) and the
+        # pcg_pmg_iter / extended pcg_iters_tol measured rows; baseline
+        # refreshed for the new rows.
+        "schema_version": 8,
         "tag": os.environ.get("REPRO_BENCH_TAG", "local"),
         "quick": quick,
         "reference_backend": _reference_backend(),

@@ -135,7 +135,8 @@ def main():
         print(f"  {pc_name or 'plain':>6}: {int(r.iters):3d} iters to "
               f"tol @ {streams} streams/iter{eff}")
     # per-call override by registry name works on any ax_impl (the old
-    # boolean spelling precond=True|False is deprecated):
+    # boolean spelling precond=True|False finished its deprecation cycle
+    # and now raises TypeError):
     r_plain, _ = case.solve_manufactured(tol=1e-6, max_iter=500)
     r_pc, _ = case.solve_manufactured(tol=1e-6, max_iter=500,
                                       precond="jacobi")

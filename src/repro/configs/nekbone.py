@@ -34,13 +34,16 @@ class NekboneConfig:
     # budget exactly; s=4 is the tuned default (6.25 streams/iter, <= 9
     # effective with the halo side channel).  Ignored by other ax_impls.
     s: int = 4
-    # Preconditioner (DESIGN.md §9, core/precond.py): None (the paper's
-    # unpreconditioned protocol), "jacobi" (diagonal — fused into the v2
-    # pipeline at 14 streams/iter), or "cheb" (Chebyshev polynomial of
-    # order ``cheb_k`` — 18 streams/iter, condition-number-driven
-    # iteration reduction).  The v2 fused pipeline dispatches to the
-    # fused PCG drivers; every other ax_impl applies the reference (XLA)
-    # preconditioner through core/cg.py.
+    # Preconditioner (DESIGN.md §9 and §13, core/precond.py): None (the
+    # paper's unpreconditioned protocol), "jacobi" (diagonal — fused into
+    # the v2 pipeline at 14 streams/iter), "cheb" (Chebyshev polynomial
+    # of order ``cheb_k`` — 18 streams/iter, condition-number-driven
+    # iteration reduction), or "pmg" / "pmg[cheb<k>]" (p-multigrid
+    # V-cycle with fused Chebyshev smoothers, core/pmg.py — the highest
+    # streams/iter and by far the fewest iterations; §13.4 books).  The
+    # v2 fused pipeline dispatches to the fused PCG drivers; every other
+    # ax_impl applies the reference (XLA) preconditioner through
+    # core/cg.py.
     precond: str | None = None
     cheb_k: int = 4
     # Default RHS batch (DESIGN.md §12): b > 1 routes unpreconditioned

@@ -33,7 +33,11 @@ __all__ = ["flops_per_dof", "cg_iter_flops", "cg_iter_bytes", "intensity",
            "CHEB_V2_WRITE_STREAMS", "CHEB_DEFAULT_K", "cheb_halo_streams",
            "cheb_effective_streams", "cheb_flops_per_dof",
            "sstep_collective_streams", "cheb_collective_streams",
-           "v2_plane_collective_streams"]
+           "v2_plane_collective_streams",
+           "PMG_DEFAULT_K", "PMG_COARSE_ITERS", "PMG_SMOOTH_RATIO",
+           "pmg_degrees", "pmg_dof_fracs", "pmg_vcycle_streams",
+           "pmg_streams", "pmg_halo_streams", "pmg_effective_streams",
+           "pmg_flops_per_dof"]
 
 # Eq. 2's stream counts: fp64 words moved per DOF per CG iteration when the
 # operator, mask, and every inner product run as separate passes.
@@ -232,6 +236,144 @@ def cheb_effective_streams(k: int, sz: int, ndev: int = 1,
     return total
 
 
+# p-multigrid V-cycle preconditioner (core/pmg.py, DESIGN.md §13): the
+# degree ladder n -> ceil(n/2) -> ... -> 2, each fine level smoothed twice
+# (pre + post) by the fused Chebyshev(k) apply kernel, a fixed-iteration CG
+# base solve at n=2.  The books below are *exact per-V-cycle counts off the
+# shipped implementation* (precond._pcg_pmg), scaled per level by the DOF
+# fraction phi_l = (n_l / n)^3 — a level-l field is phi_l of one fine-grid
+# stream.  Unlike every other rung this one deliberately *raises*
+# streams/iter: it buys iteration count (>= 2x fewer than cheb4 on the
+# acceptance case), which is what dominates time-to-solution once the
+# per-iteration pipeline is at its traffic floor.
+# Defaults tuned empirically on the paper acceptance case (E=1024, n=10,
+# rtol 1e-8; sweep over k x ratio x coarse_iters, benchmarks/pmg_smoke.py
+# re-checks in CI): k=3 @ ratio=24 reached 1e-8 in 13 iterations vs
+# Chebyshev(4)'s 36 — k=2 @ ratio=8 needed 20, k=3 @ ratio=32 gave 12
+# with less interval-safety margin; coarse_iters below 12 started costing
+# iterations (14 at 6) while 40 bought nothing.
+PMG_DEFAULT_K = 3
+PMG_COARSE_ITERS = 12
+PMG_SMOOTH_RATIO = 24.0
+
+# Exact per-smoothed-level stream table of one symmetric V-cycle, in units
+# of one *level-l* field (multiply by phi_l).  Derived line by line from
+# precond._pcg_pmg — see DESIGN.md §13.4 for the audit:
+#   pre-smooth (cheb kernel)      4R 1W   | prolong-add z+=m*e  3R 1W
+#   A z #1     (v2 slab kernel)   5R 2W   | A z #2 (slab)       5R 2W
+#   res1 = r - w                  2R 1W   | res2 = r - w        2R 1W
+#   c-weight   t = c * res        2R 1W   | post-smooth (cheb)  4R 1W
+#   restrict interp (fine side)   1R  -   | z += dz             2R 1W
+_PMG_LEVEL_READS = 30.0
+_PMG_LEVEL_WRITES = 12.0
+# ... and per coarse-transition, in units of one *level-(l+1)* field: the
+# restrict interp's output write, the gather-scatter+mask pass (2R 1W) and
+# the prolong interp's input read.
+_PMG_COARSE_SIDE_READS = 3.0
+_PMG_COARSE_SIDE_WRITES = 2.0
+
+
+def pmg_degrees(n: int) -> tuple[int, ...]:
+    """The p-coarsening ladder ``n -> ceil(n/2) -> ... -> 2`` (HipBone's
+    degree halving; GLL count n = degree + 1 so n=2 is the trilinear base).
+    """
+    if n < 2:
+        raise ValueError(f"need n >= 2 GLL points, got {n}")
+    ns = [int(n)]
+    while ns[-1] > 2:
+        ns.append((ns[-1] + 1) // 2)
+    return tuple(ns)
+
+
+def pmg_dof_fracs(n: int) -> tuple[float, ...]:
+    """Per-level DOF fractions ``phi_l = (n_l / n)^3`` of the ladder."""
+    return tuple((nl / float(n)) ** 3 for nl in pmg_degrees(n))
+
+
+def pmg_vcycle_streams(n: int = 10,
+                       coarse_iters: int = PMG_COARSE_ITERS
+                       ) -> tuple[float, float]:
+    """(reads, writes) full-*fine*-field streams of ONE symmetric V-cycle.
+
+    Sum of the exact level table over the smoothed levels, the transition
+    table over the level boundaries, and ``coarse_iters`` Eq.-2 CG
+    iterations (the base solve is plain-XLA CG: 24R + 6W) at the base
+    fraction.  k-independent like the cheb rung — the k chained operator
+    applications of a smoother stay in VMEM; only the halo grows with k
+    (:func:`pmg_halo_streams`)."""
+    fr = pmg_dof_fracs(n)
+    reads = sum(_PMG_LEVEL_READS * f for f in fr[:-1])
+    reads += sum(_PMG_COARSE_SIDE_READS * f for f in fr[1:])
+    reads += CG_READ_STREAMS * coarse_iters * fr[-1]
+    writes = sum(_PMG_LEVEL_WRITES * f for f in fr[:-1])
+    writes += sum(_PMG_COARSE_SIDE_WRITES * f for f in fr[1:])
+    writes += CG_WRITE_STREAMS * coarse_iters * fr[-1]
+    return reads, writes
+
+
+def pmg_streams(n: int = 10, coarse_iters: int = PMG_COARSE_ITERS
+                ) -> tuple[float, float]:
+    """(reads, writes) streams per DOF per PCG iteration of the pmg rung:
+    the v2 iteration (9 + 4) plus one V-cycle, exactly as the cheb rung is
+    v2 plus one polynomial apply."""
+    vr, vw = pmg_vcycle_streams(n, coarse_iters)
+    return FUSED_V2_READ_STREAMS + vr, FUSED_V2_WRITE_STREAMS + vw
+
+
+def pmg_halo_streams(n: int, k: int = PMG_DEFAULT_K,
+                     sz: int = 4) -> tuple[float, float]:
+    """(reads, writes) side-channel stream-equivalents of one V-cycle: per
+    smoothed level, two Chebyshev-apply halos (:func:`cheb_halo_streams`,
+    redundant reads) and two v2 slab plane stitches
+    (:func:`fused_v2_plane_streams`, split evenly), each at the level's
+    DOF fraction.  ``sz`` is applied at every level (the per-level
+    autotuned splits differ; the books take one representative split —
+    that is the *formula's* exactness boundary, stated here)."""
+    fr = pmg_dof_fracs(n)
+    ns = pmg_degrees(n)
+    reads = writes = 0.0
+    for nl, f in zip(ns[:-1], fr[:-1]):
+        reads += 2.0 * cheb_halo_streams(k, sz) * f
+        half = 2.0 * fused_v2_plane_streams(nl, sz) / 2.0
+        reads += half * f
+        writes += half * f
+    return reads, writes
+
+
+def pmg_effective_streams(n: int = 10, k: int = PMG_DEFAULT_K,
+                          sz: int = 4,
+                          coarse_iters: int = PMG_COARSE_ITERS) -> float:
+    """Headline + halo/plane side channels: total effective streams per
+    PCG iteration of the pmg rung (single-device; there is no sharded
+    V-cycle yet)."""
+    r, w = pmg_streams(n, coarse_iters)
+    hr, hw = pmg_halo_streams(n, k, sz)
+    return r + w + hr + hw
+
+
+def pmg_flops_per_dof(n: int, k: int = PMG_DEFAULT_K,
+                      coarse_iters: int = PMG_COARSE_ITERS) -> float:
+    """Eq.-1 flops/DOF/iter of pmg-PCG: the v2 iteration plus, per
+    smoothed level at its DOF fraction, two Chebyshev applies (k operator
+    applications + recurrence axpys each), two explicit operator
+    applications, the transfer contractions (3 directions x 2n_c flops
+    per fine point, both directions of the transition) and ~8 glue axpys;
+    plus the base-level CG iterations.  All of it free in the
+    memory-bound regime — the V-cycle is paid for in streams, priced by
+    :func:`pmg_streams`."""
+    ns = pmg_degrees(n)
+    fr = pmg_dof_fracs(n)
+    total = float(flops_per_dof(n))
+    for lev, (nl, f) in enumerate(zip(ns[:-1], fr[:-1])):
+        level = 2.0 * k * (12 * nl + 17 + 6)      # pre+post smoother
+        level += 2.0 * (12 * nl + 17)             # the two A z residuals
+        level += 2.0 * 3.0 * 2.0 * ns[lev + 1]    # interp down + up
+        level += 8.0                              # residual/correction glue
+        total += f * level
+    total += fr[-1] * coarse_iters * flops_per_dof(ns[-1])
+    return total
+
+
 def cheb_flops_per_dof(n: int, k: int = CHEB_DEFAULT_K) -> int:
     """Eq.-1 flops/DOF/iter of Chebyshev-PCG: the CG iteration plus k
     operator applications (12n + 17 each) and the 3-vector recurrence
@@ -400,6 +542,10 @@ PIPELINE_STREAMS = {
     # the Chebyshev one buys its extra 5 streams back in iteration count.
     "fused_v2_jacobi": (JACOBI_V2_READ_STREAMS, JACOBI_V2_WRITE_STREAMS),
     "fused_v2_cheb": (CHEB_V2_READ_STREAMS, CHEB_V2_WRITE_STREAMS),
+    # the p-multigrid rung (DESIGN.md §13) at the paper point (n=10) and
+    # the default base-solve depth: the one rung that *spends* streams per
+    # iteration to buy iteration count.
+    "fused_v2_pmg": pmg_streams(10, PMG_COARSE_ITERS),
 }
 # multi-RHS rung family (DESIGN.md §12): per-RHS streams of the b-way
 # block solves, both standalone (batched v2) and composed with the s-step
@@ -461,6 +607,8 @@ def bytes_per_dof_iter(pipeline: str, precision, *, exact: bool = False,
     reads, writes = PIPELINE_STREAMS[pipeline]
     if pipeline == "sstep_v3" and s != SSTEP_DEFAULT_S:
         reads, writes = sstep_streams(s)
+    if pipeline == "fused_v2_pmg" and n != 10:
+        reads, writes = pmg_streams(n)
     rhs_rung = _multi_rhs_rung(pipeline)
     if rhs_rung is not None and rhs_rung[0] == "sstep_v3" \
             and s != SSTEP_DEFAULT_S:
@@ -485,6 +633,13 @@ def bytes_per_dof_iter(pipeline: str, precision, *, exact: bool = False,
                 if pipeline == "fused_v2_cheb":
                     half_k = cheb_collective_streams(k, ez_l) / 2.0
                     reads, writes = reads + half_k, writes + half_k
+        elif pipeline == "fused_v2_pmg":
+            # the outer v2 iteration's plane stitch, then the V-cycle's
+            # own per-level halo/plane channels (pmg uses the smoother's
+            # default order, not the standalone-cheb k)
+            half = fused_v2_plane_streams(n, sz) / 2.0
+            hr, hw = pmg_halo_streams(n, PMG_DEFAULT_K, sz)
+            reads, writes = reads + half + hr, writes + half + hw
         elif pipeline == "sstep_v3":
             reads = reads + sstep_halo_streams(s, sz)
             if ndev > 1:
@@ -531,6 +686,8 @@ def pipeline_flops_per_dof(n: int, pipeline: str, *,
         return float(flops_per_dof(n) + 3)
     if pipeline == "fused_v2_cheb":
         return float(cheb_flops_per_dof(n, k))
+    if pipeline == "fused_v2_pmg":
+        return pmg_flops_per_dof(n)
     raise ValueError(f"unknown pipeline {pipeline!r}")
 
 

@@ -70,20 +70,19 @@ class NekboneCase:
                as the *outer* (residual) precision and route fixed-iter
                solves through ``cg_ir_fixed_iters``.  ``None`` keeps the
                pre-policy behaviour: everything in ``dtype``.
-      precond: None | 'jacobi' | 'cheb' (optionally 'cheb<k>') — the
-               case's default preconditioner (DESIGN.md §9,
-               core/precond.py).  Solves through the v2 fused pipeline
-               dispatch to the fused PCG drivers (Jacobi: 14 streams/iter,
-               Chebyshev: 18); other ``ax_impl`` choices apply the
-               reference (XLA) preconditioner through ``core/cg.py``.
+      precond: None | 'jacobi' | 'cheb' (optionally 'cheb<k>') | 'pmg'
+               (optionally 'pmg[cheb<k>]') — the case's default
+               preconditioner (DESIGN.md §9 and §13, core/precond.py).
+               Solves through the v2 fused pipeline dispatch to the fused
+               PCG drivers (Jacobi: 14 streams/iter, Chebyshev: 18, pmg:
+               the §13.4 V-cycle budget — more streams/iter, far fewer
+               iterations); other ``ax_impl`` choices apply the reference
+               (XLA) preconditioner through ``core/cg.py``.
                ``solve(precond=...)`` overrides per call and takes the
                same registry *names* — the string surface is the API.
                The pre-subsystem booleans (``True`` for 'jacobi',
-               ``False`` for unpreconditioned) still resolve but emit a
-               ``DeprecationWarning`` and will be removed after one
-               release; spell them ``precond='jacobi'`` / omit the
-               argument (or pass ``precond=None`` on a case with no
-               default) instead.
+               ``False`` for unpreconditioned) completed their
+               deprecation cycle and now raise ``TypeError``.
       cheb_k:  Chebyshev polynomial order for ``precond='cheb'``.
       b:       default RHS batch for this case (DESIGN.md §12).  ``b > 1``
                routes unpreconditioned v2-family solves through the
@@ -177,24 +176,18 @@ class NekboneCase:
         """Resolve a ``solve(precond=...)`` argument against the case.
 
         ``None`` inherits the case's ``precond`` field; a string names a
-        registry preconditioner.  The booleans (``True`` = 'jacobi',
-        ``False`` = unpreconditioned) are the pre-subsystem spelling —
-        deprecated, one release of compat.
+        registry preconditioner.  The pre-subsystem booleans (``True`` =
+        'jacobi', ``False`` = unpreconditioned) went through one release
+        of ``DeprecationWarning`` compat and are now removed.
         """
         if precond is None:
             return self.precond
         if isinstance(precond, bool):
-            import warnings
-
-            name = "jacobi" if precond else None
-            warnings.warn(
-                "solve(precond=True|False) is deprecated; pass the "
-                "registry name instead (precond='jacobi', or omit the "
-                f"argument / use a case with precond=None for "
-                f"unpreconditioned).  This call resolves to "
-                f"precond={name!r}.",
-                DeprecationWarning, stacklevel=3)
-            return name
+            raise TypeError(
+                "solve(precond=True|False) was removed after its "
+                "deprecation cycle; pass the registry name instead "
+                "(precond='jacobi', 'cheb4', 'pmg', ...), or omit the "
+                "argument / pass precond=None for unpreconditioned.")
         return str(precond)
 
     def precond_spec(self, name: str | None = None):
@@ -218,7 +211,7 @@ class NekboneCase:
         if spec is None:
             spec = precond_mod.make_preconditioner(
                 name, D=self.D, g=self.g, grid=self.grid, mask=self.mask,
-                c=self.c)
+                c=self.c, lengths=self.lengths)
             cache[name] = spec
         return spec
 
@@ -231,13 +224,19 @@ class NekboneCase:
         spec = self.precond_spec(name)
         if isinstance(spec, precond_mod.JacobiPrecond):
             return lambda r: r * spec.invdiag
+        if isinstance(spec, precond_mod.PMGPrecond):
+            from repro.core import pmg as pmg_mod
+
+            return pmg_mod.pmg_vcycle_reference(
+                spec, D=self.D, g=self.g, grid=self.grid, mask=self.mask,
+                c=self.c)
         return precond_mod.chebyshev_preconditioner(
             self.ax_full, spec.k, spec.lmin, spec.lmax)
 
     def solve(self, f: jnp.ndarray, *, b: int | None = None,
               niter: int | None = None, tol: float = 1e-8,
               max_iter: int = 1000,
-              precond: bool | str | None = None) -> cg_mod.SolveResult:
+              precond: str | None = None) -> cg_mod.SolveResult:
         """Solve ``A x = f`` through the driver registry (DESIGN.md §12).
 
         Routing (pipeline × precond × tol × batch) lives in
@@ -252,7 +251,7 @@ class NekboneCase:
 
     def solve_manufactured(self, *, niter: int | None = None, tol: float = 1e-8,
                            max_iter: int = 1000,
-                           precond: bool | str | None = None):
+                           precond: str | None = None):
         u_ex, f = self.manufactured()
         res = self.solve(f, niter=niter, tol=tol, max_iter=max_iter,
                          precond=precond)

@@ -61,18 +61,25 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.gs as gs_mod
+from repro.core import pmg as _pmg
 from repro.core.cg import CGResult, SolveResult
 from repro.core.cg_fused import _check_box_fields, _v2_iter
-from repro.core.cost import CHEB_DEFAULT_K
+from repro.core.cost import CHEB_DEFAULT_K, PMG_DEFAULT_K
 from repro.core.geom import box_axis_factors, box_outer
 from repro.core.precision import resolve_policy
 from repro.kernels import autotune as _autotune
 from repro.kernels import nekbone_ax as _ax
 
-__all__ = ["CHEB_DEFAULT_K", "JacobiPrecond", "ChebyshevPrecond",
+__all__ = ["CHEB_DEFAULT_K", "PMG_DEFAULT_K", "JacobiPrecond",
+           "ChebyshevPrecond", "PMGPrecond",
            "make_preconditioner", "operator_diagonal", "estimate_interval",
            "cheb_scalars", "chebyshev_preconditioner",
            "pcg_fused_v2_fixed_iters", "cg_fused_tol"]
+
+# re-exported so every preconditioner spec is importable from one place
+# (the pmg module owns the V-cycle setup/reference; the fused driver
+# lives here, next to its cheb/jacobi siblings).
+PMGPrecond = _pmg.PMGPrecond
 
 
 # ---------------------------------------------------------------------------
@@ -307,18 +314,26 @@ def make_preconditioner(name: str, *, D: jnp.ndarray, g: jnp.ndarray,
                         mask: jnp.ndarray | None = None,
                         c: jnp.ndarray | None = None,
                         k: int = CHEB_DEFAULT_K,
-                        interval: tuple[float, float] | None = None):
+                        interval: tuple[float, float] | None = None,
+                        lengths: tuple[float, float, float] = (1.0, 1.0,
+                                                               1.0)):
     """Build a preconditioner spec from its registry name.
 
     Args:
-      name: ``"jacobi"``, or ``"cheb"``/``"chebyshev"`` (optionally with a
-            trailing order, e.g. ``"cheb2"`` — overrides ``k``).
+      name: ``"jacobi"``; ``"cheb"``/``"chebyshev"`` (optionally with a
+            trailing order, e.g. ``"cheb2"`` — overrides ``k``); or
+            ``"pmg"`` (optionally with a smoother order, ``"pmg[cheb2]"``)
+            — the p-multigrid V-cycle (DESIGN.md §13).
       D/g/grid: the operator's defining data, as the fused drivers take.
       mask/c: structural fields (rebuilt from the box factors if omitted).
-      k: Chebyshev order (default :data:`CHEB_DEFAULT_K`).
+      k: Chebyshev order (default :data:`CHEB_DEFAULT_K`; the pmg
+         smoother has its own default, :data:`CHEB_DEFAULT_K` does not
+         leak into it).
       interval: Chebyshev ``(lmin, lmax)`` override (default: the
             :func:`estimate_interval` Lanczos estimate — a one-time setup
             cost per case).
+      lengths: physical box extents — pmg only (its coarse levels are
+            rediscretizations of the same box, so they must know it).
     """
     grid = tuple(grid)
     if mask is None:
@@ -330,6 +345,20 @@ def make_preconditioner(name: str, *, D: jnp.ndarray, g: jnp.ndarray,
     if key == "jacobi":
         diag = operator_diagonal(jnp.asarray(D), g, grid, mask)
         return JacobiPrecond(invdiag=1.0 / diag)
+    if key.startswith("pmg"):
+        suffix = key.removeprefix("pmg")
+        kk = PMG_DEFAULT_K
+        if suffix:
+            inner = suffix.removeprefix("[cheb").removesuffix("]")
+            if (suffix == f"[cheb{inner}]" and inner.isdigit()
+                    and int(inner) >= 1):
+                kk = int(inner)
+            else:
+                raise ValueError(f"unknown preconditioner {name!r}; the "
+                                 "pmg spellings are 'pmg' and "
+                                 "'pmg[cheb<k>]'")
+        return _pmg.make_pmg_preconditioner(D=D, g=g, grid=grid, mask=mask,
+                                            c=c, k=kk, lengths=lengths)
     if key.startswith("cheb"):
         suffix = key.removeprefix("chebyshev").removeprefix("cheb")
         if suffix:
@@ -338,8 +367,8 @@ def make_preconditioner(name: str, *, D: jnp.ndarray, g: jnp.ndarray,
             interval = estimate_interval(D, g, grid, mask, c)
         return ChebyshevPrecond(k=int(k), lmin=float(interval[0]),
                                 lmax=float(interval[1]))
-    raise ValueError(f"unknown preconditioner {name!r}; expected 'jacobi' "
-                     "or 'cheb[<k>]'")
+    raise ValueError(f"unknown preconditioner {name!r}; expected 'jacobi', "
+                     "'cheb[<k>]', 'pmg', or 'pmg[cheb<k>]'")
 
 
 # ---------------------------------------------------------------------------
@@ -540,6 +569,167 @@ def _pcg_cheb(b, D, Dt, g3, mx, my, mz, cx, cy, cz, coef, tol2, *, n: int,
                     rnorm_history=hist)
 
 
+@functools.partial(jax.jit, static_argnames=("n", "grid", "max_iter", "sz",
+                                             "ns", "szs", "cheb_szs", "k",
+                                             "coarse_iters", "interpret",
+                                             "acc_name", "x_name",
+                                             "layout", "grid_order"))
+def _pcg_pmg(b, D, Dt, g3, mx, my, mz, cx, cy, cz, levels, tol2, *, n: int,
+             grid: tuple[int, int, int], max_iter: int, sz: int,
+             ns: tuple[int, ...], szs: tuple[int, ...],
+             cheb_szs: tuple[int, ...], k: int, coarse_iters: int,
+             interpret: bool, acc_name: str, x_name: str,
+             layout: str = "fold",
+             grid_order: str = "parallel") -> CGResult:
+    """Fused p-multigrid PCG core (DESIGN.md §13).
+
+    The :func:`_pcg_cheb` loop with the single polynomial apply replaced
+    by a symmetric V-cycle over the degree ladder ``ns``: per smoothed
+    level a Chebyshev(k) pre-smooth (the fused apply kernel on that
+    level's rediscretized operator), an explicit residual via the v2 slab
+    kernel (beta=0, planes stitched host-side), the c-weighted-adjoint
+    restriction (c-multiply -> Pallas interp -> gather-scatter -> mask),
+    recursion, tensor-product prolongation + masked correction, a second
+    residual and a Chebyshev post-smooth — then ``rtz = r·c·z`` host-side
+    in the accumulation dtype.  The recursion is a *static* Python unroll
+    (the ladder is a static argname), so every level's kernels trace at
+    their own ``n_l``/slab split (``szs``/``cheb_szs``, autotuned under
+    per-level ``pmg:<level>`` keys).
+
+    ``levels`` is the :func:`repro.core.pmg.pmg_level_pytree` operand
+    pytree; level 0 runs on the caller's operator data (the same
+    ``D``/``g3``/factor operands the unpreconditioned pipeline uses), and
+    the base level is the shared fixed-CG solve
+    (:func:`repro.core.pmg.coarse_solve_fixed` — shared with the XLA
+    reference cycle so interpret-mode parity isolates the kernels).
+    """
+    ex, ey, ez = grid
+    E = b.shape[0]
+    n3 = n ** 3
+    pln = ey * ex * n * n
+    acc = jnp.dtype(acc_name)
+    x_dtype = jnp.dtype(x_name)
+    b2 = b.reshape(E, n3)
+    c2 = box_outer(cz, cy, cx).reshape(E, n3).astype(acc)
+    rcr0 = jnp.sum(b2.astype(acc) * c2 * b2.astype(acc))
+    zero_plane = jnp.zeros((1, pln), b.dtype)
+    coefs, transfers, midops, coarse = levels
+    L = len(ns)
+    # per-smoothed-level kernel operands, fine -> coarsest smoothed
+    lops = [(D, Dt, g3, mx, my, mz, cx, cy, cz)]
+    for (Dl, g3l, mxl, myl, mzl, cxl, cyl, czl) in midops:
+        lops.append((Dl, Dl.T, g3l, mxl, myl, mzl, cxl, cyl, czl))
+    # loop-invariant per-level windows and full structural fields
+    gexts, mzexts, mask2s, c2s = [], [], [], []
+    for lev in range(L - 1):
+        _, _, g3l, mxl, myl, mzl, cxl, cyl, czl = lops[lev]
+        nl3 = ns[lev] ** 3
+        gexts.append(_ax.sstep_extend_field(g3l, grid, cheb_szs[lev], k))
+        mzexts.append(_ax.sstep_extend_zfactor(mzl, cheb_szs[lev], k))
+        mask2s.append(box_outer(mzl, myl, mxl).reshape(E, nl3))
+        c2s.append(box_outer(czl, cyl, cxl).reshape(E, nl3).astype(acc))
+    Dc, gc, maskc, cc = coarse
+    nc = ns[-1]
+    mask2s.append(maskc.reshape(E, nc ** 3))
+
+    def smooth(r2l, lev):
+        Dl, Dtl, _, mxl, myl, _, cxl, cyl, czl = lops[lev]
+        rext = _ax.sstep_extend_field(r2l, grid, cheb_szs[lev], k)
+        z2l, _ = _ax.nekbone_cheb_apply_pallas(
+            rext, Dl, Dtl, gexts[lev], mxl, myl, mzexts[lev],
+            cxl, cyl, czl, coefs[lev], n=ns[lev], grid=grid,
+            sz=cheb_szs[lev], k=k, interpret=interpret, acc_dtype=acc_name,
+            layout=layout, grid_order=grid_order)
+        return z2l
+
+    def apply_a(z2l, lev):
+        nl, szl = ns[lev], szs[lev]
+        Dl, Dtl, g3l, mxl, myl, mzl, *_ = lops[lev]
+        _, w2, bot, top, _ = _ax.nekbone_ax_slab_pallas(
+            jnp.zeros_like(z2l), z2l, Dl, Dtl, g3l, mxl, myl, mzl,
+            jnp.zeros((1, 1), acc), n=nl, grid=grid, sz=szl,
+            interpret=interpret, acc_dtype=acc_name, layout=layout,
+            grid_order=grid_order)
+        nblk = ez // szl
+        if nblk > 1:
+            vb = w2.reshape(nblk, szl, ey, ex, nl, nl, nl)
+            plshape = (nblk - 1, ey, ex, nl, nl)
+            vb = vb.at[1:, 0, :, :, 0, :, :].add(top[:-1].reshape(plshape))
+            vb = vb.at[:-1, -1, :, :, -1, :, :].add(bot[1:].reshape(plshape))
+            w2 = vb.reshape(E, nl ** 3)
+        return w2
+
+    def restrict(res2, lev):
+        ncl = ns[lev + 1]
+        t2 = (res2.astype(acc) * c2s[lev]).astype(res2.dtype)
+        rc2 = _ax.nekbone_interp_pallas(
+            t2, transfers[lev], nin=ns[lev], nout=ncl, grid=grid,
+            sz=szs[lev], interpret=interpret, acc_dtype=acc_name)
+        rc2 = gs_mod.ds_sum_local(
+            rc2.reshape(E, ncl, ncl, ncl), grid).reshape(E, ncl ** 3)
+        return rc2 * mask2s[lev + 1].astype(rc2.dtype)
+
+    def prolong(ec2, lev):
+        return _ax.nekbone_interp_pallas(
+            ec2, jnp.swapaxes(transfers[lev], 0, 1), nin=ns[lev + 1],
+            nout=ns[lev], grid=grid, sz=szs[lev], interpret=interpret,
+            acc_dtype=acc_name)
+
+    def vcycle_level(r2l, lev):
+        if lev == L - 1:
+            e4 = _pmg.coarse_solve_fixed(
+                r2l.reshape(E, nc, nc, nc).astype(acc), Dc, gc, grid,
+                maskc, cc, iters=coarse_iters)
+            return e4.reshape(E, nc ** 3).astype(b.dtype)
+        z2l = smooth(r2l, lev)
+        res = (r2l.astype(acc) - apply_a(z2l, lev).astype(acc)) \
+            .astype(r2l.dtype)
+        ec = vcycle_level(restrict(res, lev), lev + 1)
+        z2l = (z2l.astype(acc) + prolong(ec, lev).astype(acc)
+               * mask2s[lev].astype(acc)).astype(r2l.dtype)
+        res = (r2l.astype(acc) - apply_a(z2l, lev).astype(acc)) \
+            .astype(r2l.dtype)
+        return (z2l.astype(acc) + smooth(res, lev).astype(acc)) \
+            .astype(r2l.dtype)
+
+    def vcycle(r2):
+        z2 = vcycle_level(r2, 0)
+        return z2, jnp.sum(r2.astype(acc) * c2 * z2.astype(acc))
+
+    z0, rtz0 = vcycle(b2)
+    hist0 = jnp.full((max_iter + 1,), jnp.nan, dtype=acc) \
+        .at[0].set(jnp.sqrt(jnp.abs(rcr0)))
+    tol2 = jnp.asarray(tol2, acc)
+
+    def cond(state):
+        _, _, _, _, rtz, _, _, kk = state
+        return jnp.logical_and(kk < max_iter, jnp.abs(rtz) > tol2)
+
+    def body(state):
+        x2, r2, z2, p2, rtz, rtz_prev, hist, kk = state
+        beta = rtz / rtz_prev            # rtz_prev = 1 at k=0: p0 = 0
+        p2, w2, bot, top, pap_b = _ax.nekbone_ax_slab_pallas(
+            p2, z2, D, Dt, g3, mx, my, mz, beta.reshape(1, 1),
+            n=n, grid=grid, sz=sz, interpret=interpret, acc_dtype=acc_name,
+            layout=layout, grid_order=grid_order)
+        alpha = rtz / jnp.sum(pap_b)
+        addb = jnp.concatenate([zero_plane, top[:-1]], axis=0)
+        addt = jnp.concatenate([bot[1:], zero_plane], axis=0)
+        x2, r2, rcr_b = _ax.nekbone_cg_update_pallas(
+            x2, p2, r2, w2, addb, addt, alpha.reshape(1, 1), cx, cy, cz,
+            n=n, grid=grid, sz=sz, interpret=interpret, acc_dtype=acc_name)
+        hist = hist.at[kk + 1].set(jnp.sqrt(jnp.abs(jnp.sum(rcr_b))))
+        z2, rtz_new = vcycle(r2)
+        return x2, r2, z2, p2, rtz_new, rtz, hist, kk + 1
+
+    state = (jnp.zeros(b2.shape, x_dtype), b2, z0, jnp.zeros_like(b2),
+             rtz0, jnp.ones((), acc), hist0, jnp.asarray(0))
+    x2, r2, z2, p2, rtz, rtz_prev, hist, kk = jax.lax.while_loop(cond, body,
+                                                                 state)
+    return CGResult(x=x2.reshape(b.shape), iters=kk, rnorm=hist[kk],
+                    rnorm_history=hist)
+
+
 # ---------------------------------------------------------------------------
 # public drivers
 # ---------------------------------------------------------------------------
@@ -584,7 +774,8 @@ def _prepare(b, D, g, grid, mask, c, sz, interpret, precision, precond,
 
 def _resolve_precond(precond, *, D, g, grid, mask, c):
     if precond is None or isinstance(precond, (JacobiPrecond,
-                                               ChebyshevPrecond)):
+                                               ChebyshevPrecond,
+                                               _pmg.PMGPrecond)):
         return precond
     return make_preconditioner(str(precond), D=D, g=g, grid=grid,
                                mask=mask, c=c)
@@ -616,6 +807,28 @@ def _dispatch(b, precond, tol2, max_iter, *, policy, n, grid, sz, interpret,
         coef = jnp.asarray(precond.scalars(), policy.accum_dtype)
         return _pcg_cheb(b, D_op, D_op.T, g3, mx, my, mz, cx, cy, cz,
                          coef, tol2, sz_c=sz_c, k=precond.k, **common)
+    if isinstance(precond, _pmg.PMGPrecond):
+        ns_t = precond.ns
+        # per-level slab splits: the Az/interp kernels at each degree get
+        # their own ``pmg:<level>`` autotune key; the level-0 smoother may
+        # reuse the caller's cheb_sz pin (the paper-case workloads pin it).
+        szs = tuple(_autotune.pick_slab_sz(grid, ns_t[lev], b.dtype,
+                                           acc_dtype=policy.accum,
+                                           precond=f"pmg:{lev}")
+                    for lev in range(len(ns_t) - 1))
+        cheb_szs = tuple(
+            (cheb_sz if lev == 0 and cheb_sz is not None else
+             _autotune.pick_slab_sz_cheb(grid, ns_t[lev], precond.k,
+                                         b.dtype,
+                                         acc_dtype=policy.accum))
+            for lev in range(len(ns_t) - 1))
+        levels = _pmg.pmg_level_pytree(precond, grid,
+                                       policy.op_storage_dtype.name,
+                                       policy.accum)
+        return _pcg_pmg(b, D_op, D_op.T, g3, mx, my, mz, cx, cy, cz,
+                        levels, tol2, ns=ns_t, szs=szs, cheb_szs=cheb_szs,
+                        k=precond.k, coarse_iters=precond.coarse_iters,
+                        **common)
     raise TypeError(f"unsupported preconditioner {precond!r}")
 
 

@@ -27,6 +27,7 @@ Routes (every driver returns :class:`repro.core.cg.SolveResult`):
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable
 
 import jax.numpy as jnp
@@ -36,6 +37,10 @@ import repro.core.cg_fused as cg_fused_mod
 from repro.core.cg import SolveResult
 
 __all__ = ["REGISTRY", "route_name", "solve_case", "solve"]
+
+# one-time flag for the documented b>1 s-step fallback warning below
+# (tests reset it to re-assert the warning fires).
+_SSTEP_BLOCK_WARNED = False
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +177,21 @@ def route_name(case, *, b: int = 1, niter: int | None = None,
         # pipeline; everything else solves per RHS through this table.
         if pc_name is None and not refined and (
                 fused_v2_family or case.ax_impl == "pallas_fused_cg"):
+            if case.ax_impl == "pallas_sstep_v3":
+                # explicit, documented fallback: there is no batched
+                # matrix-powers kernel — a b>1 s-step case runs the
+                # multi-RHS *v2* block pipeline instead (same answer,
+                # the v2 byte books).  Warn once per process so the
+                # substitution is visible without spamming sweeps.
+                global _SSTEP_BLOCK_WARNED
+                if not _SSTEP_BLOCK_WARNED:
+                    _SSTEP_BLOCK_WARNED = True
+                    warnings.warn(
+                        "b>1 on ax_impl='pallas_sstep_v3': no batched "
+                        "s-step kernel exists; routing through the "
+                        "multi-RHS v2 block pipeline (fused_v2_rhs<b>). "
+                        "Set ax_impl='pallas_fused_cg_v2' to silence.",
+                        UserWarning, stacklevel=3)
             return "block"
         return "block_loop"
     if refined and niter is not None and pc_name is None:
@@ -190,14 +210,15 @@ def route_name(case, *, b: int = 1, niter: int | None = None,
 def solve_case(case, f: jnp.ndarray, *, b: int | None = None,
                niter: int | None = None, tol: float = 1e-8,
                max_iter: int = 1000,
-               precond: bool | str | None = None) -> SolveResult:
+               precond: str | None = None) -> SolveResult:
     """Route one solve request through the registry.
 
     ``b`` is the RHS batch: ``None`` infers it from ``f``'s shape (a
     leading axis ahead of (E, n, n, n) is a batch), 1 forces a single-RHS
     solve, > 1 requires ``f`` of shape (b, E, n, n, n).  ``precond``
-    accepts the registry names (or the deprecated booleans, resolved by
-    :meth:`NekboneCase._precond_name`).
+    accepts the registry names (resolved by
+    :meth:`NekboneCase._precond_name`; the removed booleans raise
+    ``TypeError`` there).
     """
     pc_name = case._precond_name(precond)
     f = jnp.asarray(f)
@@ -232,7 +253,7 @@ def _solve_resolved(case, f, *, b, niter, tol, max_iter, pc_name):
 def solve(case_or_config, f: jnp.ndarray | None = None, *,
           b: int | None = None, niter: int | None = None,
           tol: float | None = None, max_iter: int = 1000,
-          precond: bool | str | None = None) -> SolveResult:
+          precond: str | None = None) -> SolveResult:
     """Top-level solve facade (re-exported as ``repro.solve``).
 
     Args:

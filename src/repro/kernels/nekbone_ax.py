@@ -54,7 +54,8 @@ __all__ = ["LAYOUTS", "GRID_ORDERS",
            "nekbone_sstep_update_kernel", "nekbone_sstep_update_pallas",
            "sstep_extend_field", "sstep_extend_zfactor",
            "nekbone_pcg_update_kernel", "nekbone_pcg_update_pallas",
-           "nekbone_cheb_apply_kernel", "nekbone_cheb_apply_pallas"]
+           "nekbone_cheb_apply_kernel", "nekbone_cheb_apply_pallas",
+           "nekbone_interp_kernel", "nekbone_interp_pallas"]
 
 from repro.compat import CompilerParams as _CompilerParams
 from repro.core.geom import box_outer as _box_outer
@@ -1590,3 +1591,73 @@ def nekbone_cheb_apply_pallas(rext: jnp.ndarray, D: jnp.ndarray,
         name=(f"nekbone_cheb_apply_n{n}_sz{sz}_k{k}{_acc_tag(acc_dtype)}"
               f"{_cfg_tag(layout, grid_order)}"),
     )(rext, D, Dt, gext, mx, my, mzext, cx, cy, cz, coef)
+
+
+def nekbone_interp_kernel(u_ref, mt_ref, v_ref, *, nin: int, nout: int,
+                          block_e: int, acc_dtype: str | None = None):
+    """Tensor-product GLL-to-GLL interpolation of one element block.
+
+    The p-multigrid transfer operator (DESIGN.md §13): the VMEM-resident
+    transfer matrix ``mt`` — ``(nin, nout)``, i.e. rows indexed by the
+    *input* grid like the ``_dg`` convention — is contracted along each
+    of the three local directions with the same dot_general + output-
+    transpose pattern the ``dng`` operator layout uses, so one kernel
+    serves both directions: ``mt = J^T`` prolongs (coarse -> fine),
+    ``mt = J`` restricts (fine -> coarse, the unweighted core of the
+    c-weighted adjoint — the c-multiply / gather-scatter / mask around
+    it stay outside).  Purely element-local (interpolation never crosses
+    element faces), so there is no halo or plane side channel and slab
+    splits are fp64-bitwise by construction.
+
+    Refs: u_ref (block_e, nin^3), mt_ref (nin, nout),
+    v_ref (block_e, nout^3).
+    """
+    f32 = _accum(u_ref.dtype, acc_dtype)
+    mt = mt_ref[...].astype(f32)
+    u = u_ref[...].astype(f32).reshape(block_e, nin, nin, nin)
+    v = _dg(u, mt, 3)                           # (e, k, j, io)
+    v = _dg(v, mt, 2).transpose(0, 1, 3, 2)     # (e, k, jo, io)
+    v = _dg(v, mt, 1).transpose(0, 3, 1, 2)     # (e, ko, jo, io)
+    v_ref[...] = v.reshape(block_e, nout ** 3).astype(v_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("nin", "nout", "grid", "sz",
+                                             "interpret", "acc_dtype",
+                                             "grid_order"))
+def nekbone_interp_pallas(u2: jnp.ndarray, mt: jnp.ndarray, *, nin: int,
+                          nout: int, grid: tuple[int, int, int], sz: int,
+                          interpret: bool = False,
+                          acc_dtype: str | None = None,
+                          grid_order: str = "parallel") -> jnp.ndarray:
+    """pallas_call wrapper for :func:`nekbone_interp_kernel`.
+
+    ``u2`` is ``(E, nin^3)`` flat-local; ``mt`` is ``(nin, nout)``;
+    returns ``(E, nout^3)`` in the storage dtype of ``u2``.  Blocked by
+    z-slabs of ``sz`` element layers like the rest of the slab family
+    (same BlockSpec shape, grid and dimension-semantics machinery) so a
+    V-cycle level reuses its autotuned slab split for the transfers.
+    """
+    ex, ey, ez = grid
+    assert ez % sz == 0, (grid, sz)
+    block_e = sz * ey * ex
+    nblk = ez // sz
+    E = nblk * block_e
+    assert u2.shape == (E, nin ** 3), (u2.shape, (E, nin ** 3))
+    assert mt.shape == (nin, nout), (mt.shape, (nin, nout))
+    return pl.pallas_call(
+        functools.partial(nekbone_interp_kernel, nin=nin, nout=nout,
+                          block_e=block_e, acc_dtype=acc_dtype),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((block_e, nin ** 3), lambda i: (i, 0)),
+            pl.BlockSpec((nin, nout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_e, nout ** 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, nout ** 3), u2.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=(grid_order,),
+        ),
+        interpret=interpret,
+        name=(f"nekbone_interp_{nin}to{nout}_sz{sz}{_acc_tag(acc_dtype)}"
+              f"{_cfg_tag('fold', grid_order)}"),
+    )(u2, mt)

@@ -22,8 +22,8 @@ __all__ = ["nekbone_ax", "nekbone_ax_dots", "nekbone_ax_dots_slab",
            "nekbone_ax_dots_slab_block", "nekbone_cg_update",
            "nekbone_cg_update_block", "nekbone_ax_powers",
            "nekbone_sstep_update", "nekbone_pcg_update",
-           "nekbone_cheb_precond", "slab_axis_factors", "diag_metric",
-           "flash_attention", "wkv6", "default_interpret"]
+           "nekbone_cheb_precond", "nekbone_interp", "slab_axis_factors",
+           "diag_metric", "flash_attention", "wkv6", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -565,6 +565,38 @@ def nekbone_cheb_precond(r: jnp.ndarray, D: jnp.ndarray, g3: jnp.ndarray,
         interpret=interpret, acc_dtype=acc_dtype,
         layout=layout, grid_order=grid_order)
     return z2.reshape(r.shape), jnp.sum(rtz_b)
+
+
+def nekbone_interp(u: jnp.ndarray, M: jnp.ndarray,
+                   grid: tuple[int, int, int], *, sz: int | None = None,
+                   interpret: bool | None = None,
+                   acc_dtype: str | None = None) -> jnp.ndarray:
+    """Tensor-product GLL-to-GLL interpolation on natural shapes.
+
+    Applies ``M`` — ``(n_out, n_in)``, e.g.
+    :func:`repro.core.pmg.gll_interp_matrix` — along each local direction
+    of ``u`` (E, n_in, n_in, n_in): the p-multigrid transfer operator
+    (DESIGN.md §13).  ``M`` itself prolongs when built fine-from-coarse;
+    pass ``J.T`` for the matching restriction core.  Element-local, so
+    the result is slab-split-invariant (fp64-bitwise across ``sz``).
+
+    Returns (E, n_out, n_out, n_out) in ``u``'s dtype.
+    """
+    ex, ey, ez = grid = tuple(grid)
+    E = u.shape[0]
+    nin = u.shape[-1]
+    M = jnp.asarray(M, u.dtype)
+    nout = M.shape[0]
+    assert M.shape == (nout, nin), (M.shape, (nout, nin))
+    interpret = default_interpret() if interpret is None else interpret
+    if sz is None:
+        sz = _autotune.pick_slab_sz(grid, max(nin, nout), u.dtype,
+                                    acc_dtype=acc_dtype,
+                                    precond="pmg:interp")
+    v2 = _ax.nekbone_interp_pallas(
+        u.reshape(E, nin ** 3), M.T, nin=nin, nout=nout, grid=grid, sz=sz,
+        interpret=interpret, acc_dtype=acc_dtype)
+    return v2.reshape(E, nout, nout, nout)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,

@@ -124,17 +124,19 @@ def test_solve_result_tuple_compat(x64):
         float(res.rnorm) / float(res.history[0]), rtol=1e-12)
 
 
-def test_precond_boolean_deprecation(x64):
+def test_precond_boolean_removed(x64):
+    """The deprecated booleans completed their cycle: TypeError now."""
     case = _case64()
     _, f = case.manufactured()
-    with pytest.warns(DeprecationWarning, match="precond='jacobi'"):
-        res = case.solve(f, niter=3, precond=True)
-    assert res.precond == "jacobi"
+    with pytest.raises(TypeError, match="precond='jacobi'"):
+        case.solve(f, niter=3, precond=True)
     case_pc = NekboneCase(n=5, grid=(2, 2, 4), dtype=jnp.float64,
                           ax_impl="pallas_fused_cg_v2", precond="jacobi")
-    with pytest.warns(DeprecationWarning):
-        res = case_pc.solve(f, niter=3, precond=False)
-    assert res.precond is None and res.pipeline == "fused_v2"
+    with pytest.raises(TypeError, match="removed"):
+        case_pc.solve(f, niter=3, precond=False)
+    # the registry-name spelling is the API that remains
+    res = case_pc.solve(f, niter=3, precond="jacobi")
+    assert res.precond == "jacobi"
 
 
 def test_case_batched_solve_routes_to_block(x64):

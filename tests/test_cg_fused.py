@@ -138,5 +138,5 @@ def test_cg_fused_tol_and_precond_fall_back():
                        ax_impl="pallas_fused_cg")
     res, _ = case.solve_manufactured(tol=1e-4, max_iter=100)
     assert int(res.iters) < 100
-    res_pc, _ = case.solve_manufactured(niter=10, precond=True)
+    res_pc, _ = case.solve_manufactured(niter=10, precond="jacobi")
     assert res_pc.rnorm_history.shape == (11,)

@@ -238,7 +238,7 @@ def test_cg_fused_v2_tol_and_precond_stay_fused():
     assert int(res.iters) < 100
     assert float(res.rnorm) <= 1e-4
     assert res.rnorm_history.shape == (101,)      # padded to max_iter + 1
-    res_pc, _ = case.solve_manufactured(niter=10, precond=True)
+    res_pc, _ = case.solve_manufactured(niter=10, precond="jacobi")
     assert res_pc.rnorm_history.shape == (11,)
     assert np.isfinite(np.asarray(res_pc.rnorm_history,
                                   np.float64)).all()

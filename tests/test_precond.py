@@ -385,8 +385,10 @@ def test_case_and_config_precond_wiring(x64):
         case.ax_full, case.manufactured()[1], niter=8, dot=case.dot(),
         precond=cg_mod.jacobi_preconditioner(case.operator_diagonal()))
     _assert_parity(ref, res)
-    # per-solve override: False forces the plain pipeline
-    plain, _ = case.solve_manufactured(niter=8, precond=False)
+    # unpreconditioned comparison point: a case without a default
+    # (the boolean override spelling was removed — see
+    # test_case_solve_precond_booleans_removed)
+    plain, _ = cfg.make_case(precond=None).solve_manufactured(niter=8)
     ref_plain = cg_mod.cg_fixed_iters(case.ax_full, case.manufactured()[1],
                                       niter=8, dot=case.dot())
     _assert_parity(ref_plain, plain)
@@ -398,12 +400,13 @@ def test_case_and_config_precond_wiring(x64):
     assert case_c.precond_spec().k == 2
 
 
-def test_case_solve_precond_true_backcompat(x64):
-    """solve(precond=True) keeps meaning Jacobi, on every ax_impl."""
+def test_case_solve_precond_booleans_removed(x64):
+    """The boolean compat shim is gone: both spellings raise TypeError."""
     case = NekboneCase(n=5, grid=(2, 2, 2), dtype=jnp.float64)
-    r_pc, _ = case.solve_manufactured(tol=1e-8, max_iter=400, precond=True)
-    r_pl, _ = case.solve_manufactured(tol=1e-8, max_iter=400, precond=False)
-    assert int(r_pc.iters) < int(r_pl.iters)
+    with pytest.raises(TypeError, match="removed"):
+        case.solve_manufactured(tol=1e-8, max_iter=400, precond=True)
+    with pytest.raises(TypeError, match="removed"):
+        case.solve_manufactured(tol=1e-8, max_iter=400, precond=False)
 
 
 def test_case_tol_solve_routes_to_fused_v2(x64):
