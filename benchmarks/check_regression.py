@@ -20,7 +20,9 @@ and fails (exit 1) on:
   pins (schema v6, DESIGN.md §11) must stay within ``--timing-tol``
   (+10% default) of the baseline.  Wall time is only comparable on the
   same backend kind, so a ``reference_backend`` mismatch between fresh
-  and baseline downgrades every timing row to a warning; and because
+  and baseline downgrades every timing row to a warning — annotated,
+  when both files carry the schema-v9 ``provenance`` record, with the
+  exact fields (machine, jax version, x64 flag…) that differ; and because
   shared CI runners are noisy, ``--timing-warn-only`` routes timing
   violations to ``::warning::`` annotations (exit 0) while the
   stream-ladder and byte rows stay hard.
@@ -104,6 +106,28 @@ def find_fresh(bench_dir: pathlib.Path | None = None) -> pathlib.Path:
     return cands[-1]
 
 
+def _provenance_delta(fresh: dict, base: dict) -> str:
+    """Explain *why* two bench runs differ using the schema-v9 provenance
+    records (machine tag, python/jax versions, backend, x64 flag).
+
+    Returns a human-readable '; provenance: ...' suffix listing every
+    field whose value differs between the two files, or an empty string
+    when either side predates schema v9 (no provenance record) or
+    nothing differs.  Appended to the reference_backend-mismatch warning
+    so the reader learns e.g. that the baseline was cut on another
+    machine or jax version rather than guessing.
+    """
+    fp, bp = fresh.get("provenance"), base.get("provenance")
+    if not isinstance(fp, dict) or not isinstance(bp, dict):
+        return ""
+    deltas = [f"{k}: fresh={fp.get(k)!r} baseline={bp.get(k)!r}"
+              for k in sorted(set(fp) | set(bp))
+              if fp.get(k) != bp.get(k)]
+    if not deltas:
+        return ""
+    return " [provenance delta: " + "; ".join(deltas) + "]"
+
+
 def compare(fresh: dict, base: dict, tol: float = DEFAULT_TOL,
             warnings: list[str] | None = None,
             timing_tol: float = DEFAULT_TIMING_TOL,
@@ -133,7 +157,8 @@ def compare(fresh: dict, base: dict, tol: float = DEFAULT_TOL,
                 f"us/iter reference backend mismatch: fresh={fresh_be!r} "
                 f"baseline={base_be!r} — wall time is not comparable "
                 "across backends; timing rows skipped (refresh the "
-                "baseline on this backend to re-arm them)")
+                "baseline on this backend to re-arm them)"
+                + _provenance_delta(fresh, base))
         elif not fresh_us:
             timing.append("fresh bench json has no us_per_iter table — "
                           "measured wall time silently disappeared "

@@ -1,0 +1,124 @@
+"""CI smoke for the observability subsystem (DESIGN.md §14).
+
+  JAX_ENABLE_X64=1 PYTHONPATH=src python -m benchmarks.obs_smoke
+
+Three checks, mirroring benchmarks/serving_smoke.py's style:
+
+* **Bitwise parity, tracing on vs off** — the same fused-v2 solve run
+  cold (tracing off) and inside ``trace.recording()`` must produce
+  bit-identical ``x``: instrumentation is host-side span bookkeeping
+  around an unchanged ``_solve_resolved`` call, never a numerics change.
+  The traced result must carry a ``SolveTelemetry``; the untraced one
+  must not.
+* **Paper-case pmg trace** — the E=1024/n=10 paper case solved through
+  ``NekboneCase.solve(precond="pmg")`` with tracing on must write a
+  schema-valid ``repro-trace/1`` JSONL file whose spans include the
+  top-level ``solve``, the ``pmg.dispatch`` V-cycle application, and one
+  ``pmg.vcycle.level`` span per ladder level.
+* **Cost-model drift** — ``obs.drift.assert_no_drift()`` over fused_v2,
+  fused_v2_jacobi, and sstep_v3: measured bytes/DOF/iter (jaxpr stream
+  charge) within the calibrated band of the exact ``cost.py`` books,
+  measured collective counts exactly matching the pinned contracts.
+
+Exits non-zero naming the offending check; prints one CSV-ish row per
+check so the log doubles as a record.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import tempfile
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+N, GRID, NITER = 5, (2, 2, 4), 8
+PAPER_N, PAPER_GRID, PAPER_NITER = 10, (8, 8, 16), 3
+
+
+def _check_bitwise() -> int:
+    from repro.core.nekbone import NekboneCase
+    from repro.obs import trace
+
+    case = NekboneCase(n=N, grid=GRID, dtype=jnp.float64,
+                       ax_impl="pallas_fused_cg_v2")
+    _, f = case.manufactured()
+    res_off = case.solve(f, niter=NITER)
+    with trace.recording() as rec:
+        res_on = case.solve(f, niter=NITER)
+    bitwise = (np.asarray(res_off.x).tobytes()
+               == np.asarray(res_on.x).tobytes())
+    tel_ok = (res_on.telemetry is not None and res_off.telemetry is None
+              and res_on.telemetry.iters == int(np.max(np.asarray(
+                  res_on.iters_taken))))
+    spans = [r["name"] for r in rec.records if r["type"] == "span"]
+    ok = bitwise and tel_ok and "solve" in spans
+    print(f"obs_smoke_bitwise,0.0,bitwise={bitwise};telemetry={tel_ok}"
+          f";spans={len(spans)};{'OK' if ok else 'FAIL'}")
+    if not ok:
+        print(f"ERROR: tracing on/off parity failed (bitwise={bitwise}, "
+              f"telemetry={tel_ok}, spans={spans})", file=sys.stderr)
+    return not ok
+
+
+def _check_paper_pmg_trace(out_dir: pathlib.Path) -> int:
+    from repro.core.nekbone import NekboneCase
+    from repro.obs import trace
+
+    paper = NekboneCase(n=PAPER_N, grid=PAPER_GRID, dtype=jnp.float64,
+                        ax_impl="pallas_fused_cg_v2")
+    _, f = paper.manufactured()
+    path = out_dir / "obs_smoke_pmg.trace.jsonl"
+    with trace.recording(path) as rec:
+        paper.solve(f, niter=PAPER_NITER, precond="pmg")
+    problems = trace.validate_trace_file(path)
+    spans = [r["name"] for r in rec.records if r["type"] == "span"]
+    levels = sorted(r["attrs"]["level"] for r in rec.records
+                    if r["type"] == "span" and r["name"] == "pmg.vcycle.level")
+    ok = (not problems and "solve" in spans and "pmg.dispatch" in spans
+          and len(levels) >= 2 and levels == list(range(len(levels))))
+    print(f"obs_smoke_pmg_trace,0.0,schema_problems={len(problems)}"
+          f";levels={'-'.join(map(str, levels))};spans={len(spans)}"
+          f";{'OK' if ok else 'FAIL'}")
+    if not ok:
+        for p in problems:
+            print(f"ERROR: trace schema: {p}", file=sys.stderr)
+        print(f"ERROR: paper-case pmg trace check failed (spans={spans}, "
+              f"levels={levels})", file=sys.stderr)
+    return not ok
+
+
+def _check_drift() -> int:
+    from repro.obs import drift
+
+    report = drift.check()
+    for row in report.rows:
+        print(f"obs_smoke_drift_{row.pipeline}_{row.check},0.0,"
+              f"ratio={row.ratio};band={row.band};"
+              f"{'OK' if row.ok else 'FAIL'}")
+    if not report.ok:
+        for row in report.failures():
+            print(f"ERROR: model drift: {row.pipeline}/{row.check} "
+                  f"measured={row.measured} expected={row.expected} "
+                  f"({row.detail})", file=sys.stderr)
+    return not report.ok
+
+
+def main() -> int:
+    out = os.environ.get("REPRO_BENCH_DIR")
+    out_dir = pathlib.Path(out) if out else pathlib.Path(tempfile.mkdtemp(
+        prefix="obs_smoke_"))
+    out_dir.mkdir(parents=True, exist_ok=True)
+    failures = _check_bitwise()
+    failures += _check_paper_pmg_trace(out_dir)
+    failures += _check_drift()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

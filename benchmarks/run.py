@@ -214,26 +214,57 @@ def _reference_backend() -> str:
     return jax.default_backend()
 
 
+def _telemetry_section() -> dict | None:
+    """Observability summary travelling with the bench (schema v9).
+
+    The cost-model drift check (obs/drift.py) re-measured at bench time:
+    per-pipeline measured-vs-book byte ratios and collective contracts.
+    Summary-only (ok flag + per-row ratios) — the full report lives in
+    the obs-smoke CI leg; here it stamps the bench JSON so a drifting
+    model is visible next to the numbers it prices.  Never value-gated
+    by check_regression.py, and never allowed to sink the bench run.
+    """
+    try:
+        from repro.obs import drift
+
+        report = drift.check()
+        return {
+            "drift": {
+                "ok": report.ok,
+                "rows": [{"pipeline": r.pipeline, "check": r.check,
+                          "ok": r.ok, "ratio": r.ratio}
+                         for r in report.rows],
+            },
+        }
+    except Exception as e:  # noqa: BLE001 — telemetry must not sink the run
+        print(f"# WARNING: telemetry section skipped: {e}", file=sys.stderr)
+        return None
+
+
 def main() -> None:
     from benchmarks import bench_ax_versions, bench_cost_model, bench_roofline
+    from repro.obs import trace
 
     sections = []
     print("name,us_per_call,derived")
-    for mod, title in ((bench_ax_versions, "Fig2/3: Ax version ladder"),
-                       (bench_roofline, "Fig4: measured roofline"),
-                       (bench_cost_model, "Eq1-2: cost model")):
-        print(f"# --- {title} ---", file=sys.stderr)
-        rows = []
-        for name, us, derived in mod.run():
-            print(f"{name},{us:.1f},{derived}")
-            rows.append({"name": name, "us_per_call": round(us, 1),
-                         "derived": derived})
-        sections.append({"title": title, "module": mod.__name__,
-                         "rows": rows})
+    # one env var away from a named profiler timeline (DESIGN.md §14):
+    # $REPRO_PROFILE_DIR wraps the whole ladder in jax.profiler traces.
+    with trace.profiling(os.environ.get("REPRO_PROFILE_DIR")):
+        for mod, title in ((bench_ax_versions, "Fig2/3: Ax version ladder"),
+                           (bench_roofline, "Fig4: measured roofline"),
+                           (bench_cost_model, "Eq1-2: cost model")):
+            print(f"# --- {title} ---", file=sys.stderr)
+            rows = []
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+                rows.append({"name": name, "us_per_call": round(us, 1),
+                             "derived": derived})
+            sections.append({"title": title, "module": mod.__name__,
+                             "rows": rows})
 
     quick = bool(os.environ.get("REPRO_BENCH_QUICK"))
     payload = {
-        "schema": "repro-bench/8",
+        "schema": "repro-bench/9",
         # monotone int for forward-compat decisions (check_regression.py
         # warns on version skew instead of failing on unknown tables).
         # v5: sharded rungs — *_sharded_d8 ladder entries and the
@@ -250,10 +281,17 @@ def main() -> None:
         # (headline and exact V-cycle books, DESIGN.md §13) and the
         # pcg_pmg_iter / extended pcg_iters_tol measured rows; baseline
         # refreshed for the new rows.
-        "schema_version": 8,
+        # v9: observability — a full ``provenance`` record (machine tag,
+        # python/jax versions, backend, x64 flag; DESIGN.md §14) that
+        # check_regression.py uses to *explain* reference_backend
+        # mismatches, and a ``telemetry`` section carrying the
+        # cost-model drift summary (never value-gated).
+        "schema_version": 9,
         "tag": os.environ.get("REPRO_BENCH_TAG", "local"),
         "quick": quick,
         "reference_backend": _reference_backend(),
+        "provenance": trace.provenance(),
+        "telemetry": _telemetry_section(),
         "streams_per_iter": _streams_ladder(),
         # the second axis of the ladder (DESIGN.md §7): bytes each stream
         # carries under each precision policy, per DOF per iteration.

@@ -57,6 +57,12 @@ class SolveResult:
     rnorm: jnp.ndarray
     pipeline: str | None = None
     precond: str | None = None
+    # Host-side telemetry (obs/metrics.SolveTelemetry), attached by
+    # solvers.solve_case only when a trace recorder is active — never
+    # populated inside jit and deliberately NOT part of the pytree
+    # flatten (it would otherwise have to round-trip as aux data and
+    # break jit-returned results on comparison).
+    telemetry: object = None
 
     # -- legacy (x, hist) tuple protocol --------------------------------
     def __iter__(self):

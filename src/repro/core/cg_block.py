@@ -228,11 +228,19 @@ def cg_block_fixed_iters(B: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
         B, D, g, grid, mask, c, sz, layout, grid_order, interpret,
         precision)
     nrhs = B.shape[0]
-    res = _cg_block(B.reshape(nrhs, B.shape[1], n ** 3), D_op, D_op.T, g3,
-                    mx, my, mz, cx, cy, cz, n=n, grid=grid, niter=niter,
-                    sz=sz, interpret=interpret, acc_name=policy.accum,
-                    x_name=policy.x_storage_dtype.name, layout=layout,
-                    grid_order=grid_order)
+    # tracing: the batched solve is one jitted program; the host
+    # boundary is this dispatch, recorded as a single span when on.
+    from repro.obs import trace as _trace
+
+    rec = _trace.active()
+    with (rec.span("block.dispatch", b=nrhs, niter=niter)
+          if rec is not None else _trace.NULL_SPAN):
+        res = _cg_block(B.reshape(nrhs, B.shape[1], n ** 3), D_op,
+                        D_op.T, g3, mx, my, mz, cx, cy, cz, n=n,
+                        grid=grid, niter=niter, sz=sz,
+                        interpret=interpret, acc_name=policy.accum,
+                        x_name=policy.x_storage_dtype.name, layout=layout,
+                        grid_order=grid_order)
     return SolveResult.from_cg(
         res._replace(x=res.x.reshape(B.shape)),
         pipeline=f"fused_v2_rhs{nrhs}")
@@ -261,12 +269,18 @@ def cg_block_tol(B: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
         B, D, g, grid, mask, c, sz, layout, grid_order, interpret,
         precision)
     nrhs = B.shape[0]
-    res = _cg_block_tol(B.reshape(nrhs, B.shape[1], n ** 3), D_op, D_op.T,
-                        g3, mx, my, mz, cx, cy, cz, float(tol) ** 2, n=n,
-                        grid=grid, max_iter=max_iter, sz=sz,
-                        interpret=interpret, acc_name=policy.accum,
-                        x_name=policy.x_storage_dtype.name, layout=layout,
-                        grid_order=grid_order)
+    from repro.obs import trace as _trace
+
+    rec = _trace.active()
+    with (rec.span("block.dispatch", b=nrhs, tol=tol)
+          if rec is not None else _trace.NULL_SPAN):
+        res = _cg_block_tol(B.reshape(nrhs, B.shape[1], n ** 3), D_op,
+                            D_op.T, g3, mx, my, mz, cx, cy, cz,
+                            float(tol) ** 2, n=n, grid=grid,
+                            max_iter=max_iter, sz=sz, interpret=interpret,
+                            acc_name=policy.accum,
+                            x_name=policy.x_storage_dtype.name,
+                            layout=layout, grid_order=grid_order)
     return SolveResult.from_cg(
         res._replace(x=res.x.reshape(B.shape)),
         pipeline=f"fused_v2_rhs{nrhs}")

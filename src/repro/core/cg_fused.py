@@ -581,15 +581,24 @@ def cg_ir_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
     x = jnp.zeros_like(b)
     r = b
     norms = [jnp.sqrt(jnp.abs(jnp.sum(b * c_hi * b)))]
-    for _ in range(outer_iters):
-        # inf-norm scaling: the downcast spends the narrow mantissa on the
-        # digits that are still wrong, not on the already-converged scale.
-        scale = jnp.max(jnp.abs(r))
-        scale = jnp.where(scale > 0, scale, jnp.ones((), hi))
-        e = inner((r / scale).astype(hi)).x
-        x = x + scale * e.astype(hi)
-        r, rn = refresh(x)
-        norms.append(rn)
+    # tracing: recorder read once per solve; one `is None` test per
+    # sweep when off, a timed "ir.sweep" span per refinement when on.
+    from repro.obs import trace as _trace
+
+    rec = _trace.active()
+    for sweep in range(outer_iters):
+        with (rec.span("ir.sweep", sweep=sweep, variant=variant,
+                       inner_iters=inner_iters)
+              if rec is not None else _trace.NULL_SPAN):
+            # inf-norm scaling: the downcast spends the narrow mantissa
+            # on the digits that are still wrong, not on the
+            # already-converged scale.
+            scale = jnp.max(jnp.abs(r))
+            scale = jnp.where(scale > 0, scale, jnp.ones((), hi))
+            e = inner((r / scale).astype(hi)).x
+            x = x + scale * e.astype(hi)
+            r, rn = refresh(x)
+            norms.append(rn)
     hist = jnp.stack(norms)
     return SolveResult.from_cg(
         CGResult(x=x, iters=jnp.asarray(outer_iters * inner_iters),

@@ -63,7 +63,7 @@ from repro.kernels import autotune as _autotune
 from repro.kernels import nekbone_ax as _ax
 
 __all__ = ["cg_sstep_fixed_iters", "sstep_recurrence", "cycle_coefficients",
-           "estimate_theta"]
+           "estimate_theta", "sstep_cycle_traceables"]
 
 
 def sstep_recurrence(G: np.ndarray, s: int, m: int, theta: float):
@@ -218,6 +218,54 @@ def _powers_call(p2, r2, D, Dt, gext, mx, my, mzext, cx, cy, cz, inv_theta,
         layout=layout, grid_order=grid_order)
 
 
+def sstep_cycle_traceables(D: jnp.ndarray, g: jnp.ndarray,
+                           grid: tuple[int, int, int], *, s: int = 4,
+                           sz: int = 4, precision=None):
+    """One s-step cycle's two launches as traceable closures + arg specs.
+
+    Replicates exactly the operand prep of :func:`cg_sstep_fixed_iters`
+    (operator dtypes, halo'd metric window, extended z factors) and
+    returns ``((powers_fn, powers_args), (update_fn, update_args))``
+    where the args are :class:`jax.ShapeDtypeStruct` specs for the
+    per-cycle vector operands.  ``jax.make_jaxpr(fn)(*args)`` then yields
+    the same program the driver launches once per cycle — the
+    measurement surface :mod:`repro.obs.drift` charges against the
+    ``cost.py`` books without running a solve.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    grid = tuple(grid)
+    n = int(jnp.asarray(D).shape[0])
+    n3 = n ** 3
+    E = int(np.prod(grid))
+    policy = resolve_policy(precision, jnp.asarray(D).dtype)
+    (mx, my, mz), (cx, cy, cz) = kernel_ops.slab_axis_factors(
+        grid, n, policy.storage_dtype)
+    D_op = jnp.asarray(D, policy.op_storage_dtype)
+    g3 = kernel_ops.diag_metric(jnp.asarray(g, policy.op_storage_dtype),
+                                E, n)
+    gext = _ax.sstep_extend_field(g3, grid, sz, s)
+    mzext = _ax.sstep_extend_zfactor(mz, sz, s)
+    inv_theta = jnp.full((1, 1), 1.0, policy.accum_dtype)
+
+    def powers_fn(p2, r2):
+        return _powers_call(p2, r2, D_op, D_op.T, gext, mx, my, mzext,
+                            cx, cy, cz, inv_theta, n=n, grid=grid, sz=sz,
+                            s=s, interpret=True, acc_name=policy.accum)
+
+    def update_fn(x2, p2, r2, basis, coef):
+        return _ax.nekbone_sstep_update_pallas(
+            x2, p2, r2, basis, coef, cx, cy, cz, n=n, grid=grid, sz=sz,
+            s=s, interpret=True, acc_dtype=policy.accum)
+
+    field = jax.ShapeDtypeStruct((E, n3), policy.storage_dtype)
+    xf = jax.ShapeDtypeStruct((E, n3), policy.x_storage_dtype)
+    basis = jax.ShapeDtypeStruct((E, 2 * s - 1, n3), policy.storage_dtype)
+    coef = jax.ShapeDtypeStruct((3, 2 * s + 1), policy.accum_dtype)
+    return ((powers_fn, (field, field)),
+            (update_fn, (xf, field, field, basis, coef)))
+
+
 def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
                          grid: tuple[int, int, int], niter: int, s: int = 4,
                          mask: jnp.ndarray | None = None,
@@ -319,6 +367,11 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
     hist: list[float] = []
     rcr_last = None
     it = 0
+    # tracing: the recorder is read once per solve; when off the loop
+    # pays one local `is None` test per cycle and allocates nothing.
+    from repro.obs import trace as _trace
+
+    rec = _trace.active()
     while it < niter:
         # per-cycle tolerance check on the previous update kernel's stored-
         # residual reduction — the same quantity the next cycle's Gram
@@ -328,24 +381,30 @@ def cg_sstep_fixed_iters(b: jnp.ndarray, *, D: jnp.ndarray, g: jnp.ndarray,
                 and abs(float(rcr_last)) <= tol2:
             break
         m = min(s, niter - it)
-        basis, gram_b = _powers_call(
-            p2, r2, D_op, D_op.T, gext, mx, my, mzext, cx, cy, cz,
-            inv_theta, n=n, grid=grid, sz=sz, s=s, interpret=interpret,
-            acc_name=policy.accum, layout=layout, grid_order=grid_order)
-        # the policy's gram dtype is always float64 (PrecisionPolicy.gram);
-        # cycle_coefficients resolves the in-cycle stop (run only the
-        # iterations whose start rtz is still above tol^2 — exactly cg()'s
-        # while_loop semantics).
-        G = np.asarray(jnp.sum(gram_b, axis=0), np.dtype(policy.gram))
-        coef_np, rtzs, m = cycle_coefficients(G, s, m, theta, tol2)
-        if m == 0:
-            break
-        hist.extend(np.sqrt(np.abs(v)) for v in rtzs)
-        coef = jnp.asarray(coef_np, acc)
-        x2, r2, p2, rcr_b = _ax.nekbone_sstep_update_pallas(
-            x2, p2, r2, basis, coef, cx, cy, cz, n=n, grid=grid, sz=sz,
-            s=s, interpret=interpret, acc_dtype=policy.accum)
-        rcr_last = jnp.sum(rcr_b)
+        with (rec.span("sstep.cycle", it=it, s=s)
+              if rec is not None else _trace.NULL_SPAN):
+            with _trace.profiler_annotation("nekbone.sstep_powers"):
+                basis, gram_b = _powers_call(
+                    p2, r2, D_op, D_op.T, gext, mx, my, mzext, cx, cy,
+                    cz, inv_theta, n=n, grid=grid, sz=sz, s=s,
+                    interpret=interpret, acc_name=policy.accum,
+                    layout=layout, grid_order=grid_order)
+            # the policy's gram dtype is always float64
+            # (PrecisionPolicy.gram); cycle_coefficients resolves the
+            # in-cycle stop (run only the iterations whose start rtz is
+            # still above tol^2 — exactly cg()'s while_loop semantics).
+            G = np.asarray(jnp.sum(gram_b, axis=0), np.dtype(policy.gram))
+            coef_np, rtzs, m = cycle_coefficients(G, s, m, theta, tol2)
+            if m == 0:
+                break
+            hist.extend(np.sqrt(np.abs(v)) for v in rtzs)
+            coef = jnp.asarray(coef_np, acc)
+            with _trace.profiler_annotation("nekbone.sstep_update"):
+                x2, r2, p2, rcr_b = _ax.nekbone_sstep_update_pallas(
+                    x2, p2, r2, basis, coef, cx, cy, cz, n=n, grid=grid,
+                    sz=sz, s=s, interpret=interpret,
+                    acc_dtype=policy.accum)
+            rcr_last = jnp.sum(rcr_b)
         it += m
         if tol2 is not None and m < s:
             break

@@ -369,14 +369,23 @@ def pmg_vcycle_reference(spec: PMGPrecond, *, D, g,
         return interp3(e, transfers[lev]) * mf
 
     def cycle(r, lev):
-        if lev == L - 1:
-            Dc, gc, mc, cc = levels[lev]
-            return coarse_solve_fixed(r, Dc, gc, grid, mc, cc,
-                                      iters=spec.coarse_iters)
-        z = smooth(r, lev)
-        z = z + prolong(cycle(restrict(r - apply_a(z, lev), lev), lev + 1),
-                        lev)
-        return z + smooth(r - apply_a(z, lev), lev)
+        # host-recursion V-cycle: each level is a real host region, so a
+        # trace (when on) gets one timed "pmg.vcycle" span per level per
+        # application — the fused driver's statically-unrolled ladder
+        # only exposes its levels at setup (precond._dispatch).
+        from repro.obs import trace as _trace
+
+        rec = _trace.active()
+        with (rec.span("pmg.vcycle", level=lev, n=ns[lev])
+              if rec is not None else _trace.NULL_SPAN):
+            if lev == L - 1:
+                Dc, gc, mc, cc = levels[lev]
+                return coarse_solve_fixed(r, Dc, gc, grid, mc, cc,
+                                          iters=spec.coarse_iters)
+            z = smooth(r, lev)
+            z = z + prolong(
+                cycle(restrict(r - apply_a(z, lev), lev), lev + 1), lev)
+            return z + smooth(r - apply_a(z, lev), lev)
 
     def M(r):
         return cycle(r, 0)

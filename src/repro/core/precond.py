@@ -808,27 +808,44 @@ def _dispatch(b, precond, tol2, max_iter, *, policy, n, grid, sz, interpret,
         return _pcg_cheb(b, D_op, D_op.T, g3, mx, my, mz, cx, cy, cz,
                          coef, tol2, sz_c=sz_c, k=precond.k, **common)
     if isinstance(precond, _pmg.PMGPrecond):
+        from repro.obs import trace as _trace
+
+        rec = _trace.active()
         ns_t = precond.ns
         # per-level slab splits: the Az/interp kernels at each degree get
         # their own ``pmg:<level>`` autotune key; the level-0 smoother may
         # reuse the caller's cheb_sz pin (the paper-case workloads pin it).
-        szs = tuple(_autotune.pick_slab_sz(grid, ns_t[lev], b.dtype,
-                                           acc_dtype=policy.accum,
-                                           precond=f"pmg:{lev}")
-                    for lev in range(len(ns_t) - 1))
-        cheb_szs = tuple(
-            (cheb_sz if lev == 0 and cheb_sz is not None else
-             _autotune.pick_slab_sz_cheb(grid, ns_t[lev], precond.k,
-                                         b.dtype,
-                                         acc_dtype=policy.accum))
-            for lev in range(len(ns_t) - 1))
+        # The per-level host work (autotune picks) is the V-cycle's host
+        # boundary — the jitted driver unrolls the ladder statically, so
+        # these "pmg.vcycle.level" spans are where the per-level structure
+        # is visible to a trace (DESIGN.md §14.2).
+        szs = []
+        cheb_szs = []
+        for lev in range(len(ns_t) - 1):
+            with (rec.span("pmg.vcycle.level", level=lev, n=ns_t[lev],
+                           k=precond.k)
+                  if rec is not None else _trace.NULL_SPAN):
+                szs.append(_autotune.pick_slab_sz(
+                    grid, ns_t[lev], b.dtype, acc_dtype=policy.accum,
+                    precond=f"pmg:{lev}"))
+                cheb_szs.append(
+                    cheb_sz if lev == 0 and cheb_sz is not None else
+                    _autotune.pick_slab_sz_cheb(grid, ns_t[lev],
+                                                precond.k, b.dtype,
+                                                acc_dtype=policy.accum))
+        szs, cheb_szs = tuple(szs), tuple(cheb_szs)
         levels = _pmg.pmg_level_pytree(precond, grid,
                                        policy.op_storage_dtype.name,
                                        policy.accum)
-        return _pcg_pmg(b, D_op, D_op.T, g3, mx, my, mz, cx, cy, cz,
-                        levels, tol2, ns=ns_t, szs=szs, cheb_szs=cheb_szs,
-                        k=precond.k, coarse_iters=precond.coarse_iters,
-                        **common)
+        with (rec.span("pmg.dispatch", levels=len(ns_t),
+                       coarse_n=ns_t[-1])
+              if rec is not None else _trace.NULL_SPAN):
+            with _trace.profiler_annotation("nekbone.pcg_pmg"):
+                return _pcg_pmg(b, D_op, D_op.T, g3, mx, my, mz, cx, cy,
+                                cz, levels, tol2, ns=ns_t, szs=szs,
+                                cheb_szs=cheb_szs, k=precond.k,
+                                coarse_iters=precond.coarse_iters,
+                                **common)
     raise TypeError(f"unsupported preconditioner {precond!r}")
 
 

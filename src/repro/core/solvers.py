@@ -230,9 +230,16 @@ def solve_case(case, f: jnp.ndarray, *, b: int | None = None,
     if b > 1 and not batched:
         raise ValueError(f"b={b} needs a (b, E, n, n, n) rhs; "
                          f"got {f.shape}")
-    res = _solve_resolved(case, f[0] if (batched and b == 1) else f,
-                          b=b, niter=niter, tol=tol, max_iter=max_iter,
-                          pc_name=pc_name)
+    f_in = f[0] if (batched and b == 1) else f
+    from repro.obs import trace as _trace
+
+    rec = _trace.active()
+    if rec is None:            # tracing off: the plain dispatch, nothing else
+        res = _solve_resolved(case, f_in, b=b, niter=niter, tol=tol,
+                              max_iter=max_iter, pc_name=pc_name)
+    else:
+        res = _traced_solve(rec, case, f_in, b=b, niter=niter, tol=tol,
+                            max_iter=max_iter, pc_name=pc_name)
     # a batched rhs always comes back batched, even at b=1 through a
     # single-RHS route (callers index res.x[j] uniformly).
     if batched and b == 1 and res.x.ndim == 4:
@@ -240,7 +247,7 @@ def solve_case(case, f: jnp.ndarray, *, b: int | None = None,
                           iters_taken=res.iters_taken[None],
                           achieved_rtol=res.achieved_rtol[None],
                           rnorm=res.rnorm[None], pipeline=res.pipeline,
-                          precond=res.precond)
+                          precond=res.precond, telemetry=res.telemetry)
     return res
 
 
@@ -248,6 +255,40 @@ def _solve_resolved(case, f, *, b, niter, tol, max_iter, pc_name):
     name = route_name(case, b=b, niter=niter, pc_name=pc_name)
     return REGISTRY[name](case, f, b=b, niter=niter, tol=tol,
                           max_iter=max_iter, pc_name=pc_name)
+
+
+def _traced_solve(rec, case, f, *, b, niter, tol, max_iter, pc_name):
+    """The tracing-on dispatch: same :func:`_solve_resolved` call (so
+    the solve output is bitwise identical), wrapped in a ``solve`` span
+    with a :class:`~repro.obs.metrics.SolveTelemetry` attached to the
+    result's non-pytree ``telemetry`` field.  The ``block_until_ready``
+    and the iters/rtol device reads in ``capture_solve`` are syncs the
+    tracing-off path never pays."""
+    import dataclasses
+
+    import jax
+
+    from repro.kernels import autotune as _autotune
+    from repro.kernels.timing import stopwatch
+    from repro.obs import metrics as obs_metrics
+
+    route = route_name(case, b=b, niter=niter, pc_name=pc_name)
+    at0 = _autotune.cache_stats()
+    sw = stopwatch()
+    with rec.span("solve", route=route, b=b, niter=niter,
+                  precond=pc_name, ax_impl=getattr(case, "ax_impl", None)):
+        res = _solve_resolved(case, f, b=b, niter=niter, tol=tol,
+                              max_iter=max_iter, pc_name=pc_name)
+        jax.block_until_ready(res.x)
+    wall = sw.us()
+    at1 = _autotune.cache_stats()
+    rec.count("solves")
+    tel = obs_metrics.capture_solve(
+        res, route=route, b=b, niter=niter,
+        tol=None if niter is not None else tol, wall_us=wall,
+        phases={"dispatch": round(wall, 3)},
+        autotune={k: at1[k] - at0.get(k, 0) for k in at1})
+    return dataclasses.replace(res, telemetry=tel)
 
 
 def solve(case_or_config, f: jnp.ndarray | None = None, *,

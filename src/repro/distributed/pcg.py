@@ -295,10 +295,19 @@ def _run(b, precond, tol2, max_iter, *, D, g, grid, mask, c, sz, cheb_sz,
     common = (rep(D_op), rep(D_op.T), shard(g3), rep(mx), rep(my),
               shard(mz), rep(cx), rep(cy), shard(cz))
 
+    # tracing: the sharded solve is one jitted program — the host
+    # boundary is this dispatch, recorded as a single span.
+    from repro.obs import trace as _trace
+
+    rec = _trace.active()
     if isinstance(precond, JacobiPrecond):
         invd2 = shard(jnp.asarray(precond.invdiag,
                                   policy.op_storage_dtype).reshape(E, n3))
-        x2, kk, hist = _jacobi_call(b2, invd2, *common, tol2, **statics)
+        with (rec.span("pcg.sharded_dispatch", precond="jacobi",
+                       ndev=ndev)
+              if rec is not None else _trace.NULL_SPAN):
+            x2, kk, hist = _jacobi_call(b2, invd2, *common, tol2,
+                                        **statics)
     elif isinstance(precond, ChebyshevPrecond):
         k = int(precond.k)
         if k > ez_l:
@@ -316,8 +325,11 @@ def _run(b, precond, tol2, max_iter, *, D, g, grid, mask, c, sz, cheb_sz,
         gext = shard(_ax.sstep_extend_field(g3, grid, sz_c, k))
         mzext = shard(_ax.sstep_extend_zfactor(mz, sz_c, k))
         coef = rep(jnp.asarray(precond.scalars(), policy.accum_dtype))
-        x2, kk, hist = _cheb_call(b2, *common, gext, mzext, coef, tol2,
-                                  sz_c=sz_c, k=k, **statics)
+        with (rec.span("pcg.sharded_dispatch", precond=f"cheb{k}",
+                       ndev=ndev)
+              if rec is not None else _trace.NULL_SPAN):
+            x2, kk, hist = _cheb_call(b2, *common, gext, mzext, coef,
+                                      tol2, sz_c=sz_c, k=k, **statics)
     else:
         raise TypeError(f"unsupported preconditioner {precond!r}")
     return CGResult(x=jnp.asarray(np.asarray(x2)).reshape(b.shape),

@@ -68,7 +68,7 @@ from repro.kernels import autotune as _autotune
 from repro.kernels import nekbone_ax as _ax
 
 __all__ = ["cg_sstep_sharded_fixed_iters", "cycle_collective_counts",
-           "exchange_ghost_slabs", "count_collectives"]
+           "cycle_traceables", "exchange_ghost_slabs", "count_collectives"]
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +336,11 @@ def cg_sstep_sharded_fixed_iters(
     rcr_parts = None
     rcr_last = None
     it = 0
+    # tracing: recorder read once per solve; one `is None` test per
+    # sharded cycle when off.
+    from repro.obs import trace as _trace
+
+    rec = _trace.active()
     while it < niter:
         if rcr_parts is not None:
             # the update kernel's rcr partials come back per-shard (no
@@ -345,16 +350,18 @@ def cg_sstep_sharded_fixed_iters(
             if tol2 is not None and abs(rcr_last) <= tol2:
                 break
         m = min(s, niter - it)
-        basis, G = _cycle_call(p2, r2, D_op, Dt_op, gext, mzext, mx, my,
-                               cx, cy, cz, inv_theta, **statics)
-        Gh = np.asarray(G, np.dtype(policy.gram))
-        coef_np, rtzs, m = cycle_coefficients(Gh, s, m, theta, tol2)
-        if m == 0:
-            break
-        hist.extend(np.sqrt(np.abs(v)) for v in rtzs)
-        coef = rep(jnp.asarray(coef_np, acc))
-        x2, r2, p2, rcr_parts = _update_call(x2, p2, r2, basis, coef, cx,
-                                             cy, cz, **statics)
+        with (rec.span("sstep.sharded_cycle", it=it, s=s, ndev=ndev)
+              if rec is not None else _trace.NULL_SPAN):
+            basis, G = _cycle_call(p2, r2, D_op, Dt_op, gext, mzext, mx,
+                                   my, cx, cy, cz, inv_theta, **statics)
+            Gh = np.asarray(G, np.dtype(policy.gram))
+            coef_np, rtzs, m = cycle_coefficients(Gh, s, m, theta, tol2)
+            if m == 0:
+                break
+            hist.extend(np.sqrt(np.abs(v)) for v in rtzs)
+            coef = rep(jnp.asarray(coef_np, acc))
+            x2, r2, p2, rcr_parts = _update_call(x2, p2, r2, basis, coef,
+                                                 cx, cy, cz, **statics)
         it += m
         if tol2 is not None and m < s:
             break
@@ -413,18 +420,18 @@ def count_collectives(fn, *args) -> dict:
     return counts
 
 
-def cycle_collective_counts(*, grid: tuple[int, int, int], n: int,
-                            s: int = 4, sz: int = 1, mesh=None,
-                            axis_name: str = "z", ndev: int | None = None,
-                            interpret: bool = True,
-                            precision=None) -> dict:
-    """Collective counts of one sharded s-step cycle + update (traced).
+def cycle_traceables(*, grid: tuple[int, int, int], n: int,
+                     s: int = 4, sz: int = 1, mesh=None,
+                     axis_name: str = "z", ndev: int | None = None,
+                     interpret: bool = True, precision=None):
+    """The sharded cycle/update launches as traceable (fn, arg-spec) pairs.
 
-    Returns ``{"cycle": {...}, "update": {...}}``.  The DESIGN.md §10
-    contract — asserted by the acceptance test — is
-    ``cycle == {"ppermute": 2, "psum": 1}`` (one stacked p/r halo exchange,
-    one Gram reduction) and ``update == {}`` (collective-free).  Tracing
-    needs no committed arrays, so this works at any ``ndev`` including 1.
+    Returns ``((cycle_fn, cycle_args), (update_fn, update_args))`` with
+    ``jax.ShapeDtypeStruct`` arg specs shaped exactly as the sharded
+    driver's per-cycle operands.  Tracing needs no committed arrays, so
+    this works at any ``ndev`` including 1 — the surface behind both
+    :func:`cycle_collective_counts` (the §10 contract test) and the
+    :mod:`repro.obs.drift` collective checks.
     """
     policy = resolve_policy(precision, jnp.float32)
     mesh, axis_name, ndev = _resolve_mesh(mesh, axis_name, ndev)
@@ -457,5 +464,23 @@ def cycle_collective_counts(*, grid: tuple[int, int, int], n: int,
                         policy.accum)
     upd = _update_mapped(mesh, axis_name, n, grid_local, sz, s, interpret,
                          policy.accum)
+    return (cyc, cycle_args), (upd, update_args)
+
+
+def cycle_collective_counts(*, grid: tuple[int, int, int], n: int,
+                            s: int = 4, sz: int = 1, mesh=None,
+                            axis_name: str = "z", ndev: int | None = None,
+                            interpret: bool = True,
+                            precision=None) -> dict:
+    """Collective counts of one sharded s-step cycle + update (traced).
+
+    Returns ``{"cycle": {...}, "update": {...}}``.  The DESIGN.md §10
+    contract — asserted by the acceptance test — is
+    ``cycle == {"ppermute": 2, "psum": 1}`` (one stacked p/r halo exchange,
+    one Gram reduction) and ``update == {}`` (collective-free).
+    """
+    (cyc, cycle_args), (upd, update_args) = cycle_traceables(
+        grid=grid, n=n, s=s, sz=sz, mesh=mesh, axis_name=axis_name,
+        ndev=ndev, interpret=interpret, precision=precision)
     return {"cycle": count_collectives(cyc, *cycle_args),
             "update": count_collectives(upd, *update_args)}

@@ -51,7 +51,7 @@ __all__ = ["vmem_block_e", "pick_block_e", "candidate_blocks",
            "candidate_slab_sizes_cheb", "pick_slab_sz_cheb",
            "candidate_configs", "pick_slab_config", "pick_sstep_config",
            "pick_cheb_config", "pick_pipeline", "AUTO_V2_MIN_E",
-           "clear_cache", "cache_info", "cache_path"]
+           "clear_cache", "cache_info", "cache_path", "cache_stats"]
 
 _CACHE: dict[tuple, object] = {}
 _MEASURED: set[tuple] = set()     # keys whose value came from a timing sweep
@@ -135,6 +135,17 @@ def _save_disk_locked() -> None:
         pass  # read-only cache dir: persistence is best-effort
 
 
+# hit/miss totals for the telemetry layer (obs/metrics.SolveTelemetry
+# reports the per-solve delta); guarded by _LOCK like the cache itself.
+_STATS = {"hits": 0, "misses": 0}
+
+
+def cache_stats() -> dict:
+    """Process-lifetime autotune cache counters ``{"hits", "misses"}``."""
+    with _LOCK:
+        return dict(_STATS)
+
+
 def _cached_pick(key: tuple, pick: Callable[[], tuple]):
     """Shared lookup -> pick -> memoize (+persist if measured) path.
 
@@ -142,10 +153,16 @@ def _cached_pick(key: tuple, pick: Callable[[], tuple]):
     closure (synthetic operands, device transfers), so the warm path must
     never touch it — and returns ``(best, measured)``.
     """
+    from repro.obs import trace
+
     with _LOCK:
         _load_disk_locked()
         if key in _CACHE:
+            _STATS["hits"] += 1
+            trace.count("autotune.cache_hits")
             return _CACHE[key]
+        _STATS["misses"] += 1
+    trace.count("autotune.cache_misses")
 
     best, measured = pick()
 

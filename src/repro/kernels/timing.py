@@ -17,7 +17,27 @@ from __future__ import annotations
 
 import time
 
-__all__ = ["measure", "median"]
+__all__ = ["measure", "median", "stopwatch", "Stopwatch"]
+
+
+class Stopwatch:
+    """Monotonic elapsed-µs reader (``time.perf_counter_ns`` based — the
+    same clock discipline as :func:`measure`).  The telemetry layer's
+    phase timer: ``sw = stopwatch(); ...; sw.us()``."""
+
+    __slots__ = ("_t0",)
+
+    def __init__(self):
+        self._t0 = time.perf_counter_ns()
+
+    def us(self) -> float:
+        """Microseconds since construction."""
+        return (time.perf_counter_ns() - self._t0) / 1e3
+
+
+def stopwatch() -> Stopwatch:
+    """Start a :class:`Stopwatch` now."""
+    return Stopwatch()
 
 
 def median(xs) -> float:

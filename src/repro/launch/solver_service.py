@@ -39,7 +39,8 @@ import jax.numpy as jnp
 
 from repro.core.cg import SolveResult
 
-__all__ = ["SolveRequest", "ServiceResult", "SolverService", "bench_service"]
+__all__ = ["SolveRequest", "ServiceResult", "DispatchRecord",
+           "SolverService", "bench_service"]
 
 
 @dataclasses.dataclass
@@ -79,6 +80,51 @@ class ServiceResult:
     batch_index: int                        # its lane in that dispatch
 
 
+@dataclasses.dataclass(eq=False)
+class DispatchRecord:
+    """One dispatched batch: the audit row of ``SolverService.dispatch_log``.
+
+    Promoted from the ad-hoc ``(bucket, request_ids)`` tuple; the typed
+    fields feed :class:`repro.obs.metrics.ServiceMetrics` and the trace.
+
+    Deprecation shim: the old tuple shape still works — iterating or
+    indexing a record yields ``(bucket, request_ids)`` and records
+    compare equal to that tuple (pinned by tests/test_solver_service.py)
+    — but new code should use the named fields.
+    """
+
+    bucket: tuple
+    request_ids: list
+    batch_size: int = 0
+    wall_us: float = 0.0
+    pipeline: str | None = None
+
+    def __post_init__(self):
+        if not self.batch_size:
+            self.batch_size = len(self.request_ids)
+
+    # -- legacy (bucket, request_ids) tuple protocol --------------------
+    def __iter__(self):
+        return iter((self.bucket, self.request_ids))
+
+    def __len__(self) -> int:
+        return 2
+
+    def __getitem__(self, i):
+        return (self.bucket, self.request_ids)[i]
+
+    def __eq__(self, other):
+        if isinstance(other, tuple):
+            return (self.bucket, self.request_ids) == other
+        if isinstance(other, DispatchRecord):
+            return ((self.bucket, self.request_ids)
+                    == (other.bucket, other.request_ids))
+        return NotImplemented
+
+    def __hash__(self):
+        return hash((self.bucket, tuple(self.request_ids)))
+
+
 def _bucket_key(req: SolveRequest) -> tuple:
     """Compatibility key: everything that must match for two requests to
     share one batched solve (same compiled case + same stopping rule)."""
@@ -101,13 +147,19 @@ class SolverService:
     def __init__(self, *, max_b: int = 8):
         if max_b < 1:
             raise ValueError(f"max_b must be >= 1, got {max_b}")
+        from repro.obs.metrics import ServiceMetrics
+
         self.max_b = max_b
         self._queue: list[SolveRequest] = []
         self._next_id = itertools.count()
         self._cases: dict[tuple, Any] = {}
-        # (bucket_key, [request_id, ...]) per dispatched batch, in
-        # dispatch order — the audit trail the scheduling tests pin.
-        self.dispatch_log: list[tuple[tuple, list[int]]] = []
+        # One DispatchRecord per dispatched batch, in dispatch order —
+        # the audit trail the scheduling tests pin (records still
+        # unpack/compare as the legacy (bucket, request_ids) tuples).
+        self.dispatch_log: list[DispatchRecord] = []
+        # always-on queue/dispatch metrics (DESIGN.md §14.2): a handful
+        # of host floats per dispatch, JSON-snapshot-able.
+        self.metrics = ServiceMetrics()
 
     # ------------------------------------------------------------------
     @property
@@ -119,6 +171,7 @@ class SolverService:
         rid = next(self._next_id)
         req.request_id = rid
         self._queue.append(req)
+        self.metrics.observe_submit(len(self._queue))
         return rid
 
     # ------------------------------------------------------------------
@@ -134,13 +187,26 @@ class SolverService:
                   ) -> list[ServiceResult]:
         from repro.core import solvers as solvers_mod
 
+        from repro.kernels.timing import stopwatch
+        from repro.obs import trace as _trace
+
         case = self._case_for(chunk[0].config)
         first = chunk[0]
         f = jnp.stack([jnp.asarray(r.f) for r in chunk])
-        res: SolveResult = solvers_mod.solve_case(
-            case, f, b=len(chunk), niter=first.niter, tol=first.tol,
-            max_iter=first.max_iter, precond=first.precond)
-        self.dispatch_log.append((bucket, [r.request_id for r in chunk]))
+        rec = _trace.active()
+        sw = stopwatch()
+        with (rec.span("service.dispatch", batch=len(chunk),
+                       max_b=self.max_b)
+              if rec is not None else _trace.NULL_SPAN):
+            res: SolveResult = solvers_mod.solve_case(
+                case, f, b=len(chunk), niter=first.niter, tol=first.tol,
+                max_iter=first.max_iter, precond=first.precond)
+            jax.block_until_ready(res.x)
+        wall = sw.us()
+        self.dispatch_log.append(DispatchRecord(
+            bucket=bucket, request_ids=[r.request_id for r in chunk],
+            batch_size=len(chunk), wall_us=wall, pipeline=res.pipeline))
+        self.metrics.observe_dispatch(bucket, len(chunk), self.max_b, wall)
 
         def lane(arr, j):
             a = jnp.asarray(arr)
@@ -165,6 +231,7 @@ class SolverService:
         if not self._queue:
             return []
         queue, self._queue = self._queue, []
+        self.metrics.observe_depth(0)
         buckets: dict[tuple, list[SolveRequest]] = {}
         for req in queue:
             buckets.setdefault(_bucket_key(req), []).append(req)

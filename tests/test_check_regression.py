@@ -453,3 +453,55 @@ def test_solver_service_presence_is_timing_like():
     problems = compare(fresh, _payload_v7(), timing_problems=timing)
     assert not any("solver_service" in p for p in problems)
     assert any("solver_service" in t for t in timing)
+
+
+# ---------------------------------------------------------------------------
+# schema v9: provenance-annotated backend mismatch + the telemetry section
+# ---------------------------------------------------------------------------
+
+def _payload_v9(**overrides):
+    base = _payload(schema="repro-bench/9", schema_version=9,
+                    provenance={"machine": "linux-x86_64-1cpu",
+                                "python": "3.10.16",
+                                "jax_version": "0.4.37",
+                                "backend": "cpu", "x64": False},
+                    telemetry={"drift": {"ok": True, "rows": []}})
+    base.update(overrides)
+    return base
+
+
+def test_backend_mismatch_explained_by_provenance():
+    base = _payload_v9()
+    fresh = _payload_v9(reference_backend="tpu")
+    fresh["provenance"] = dict(fresh["provenance"], backend="tpu",
+                               jax_version="0.7.0")
+    warnings = []
+    problems = compare(fresh, base, warnings=warnings)
+    assert problems == []
+    msg = next(w for w in warnings if "backend mismatch" in w)
+    # the schema-v9 provenance delta names exactly what differs
+    assert "provenance delta" in msg
+    assert "backend: fresh='tpu' baseline='cpu'" in msg
+    assert "jax_version: fresh='0.7.0' baseline='0.4.37'" in msg
+    assert "machine" not in msg.split("provenance delta")[1]
+
+
+def test_backend_mismatch_without_provenance_stays_bare():
+    """Pre-v9 files have no provenance record; the warning must still
+    fire, just without the delta suffix."""
+    base = _payload()
+    fresh = _payload(reference_backend="tpu")
+    warnings = []
+    compare(fresh, base, warnings=warnings)
+    msg = next(w for w in warnings if "backend mismatch" in w)
+    assert "provenance delta" not in msg
+
+
+def test_v9_payload_passes_and_telemetry_is_not_gated():
+    """The telemetry section is informational: absent, present, or
+    drifted-false it must never fail the gate."""
+    assert compare(_payload_v9(), _payload_v9()) == []
+    fresh = _payload_v9(telemetry=None)
+    assert compare(fresh, _payload_v9()) == []
+    fresh = _payload_v9(telemetry={"drift": {"ok": False, "rows": []}})
+    assert compare(fresh, _payload_v9()) == []

@@ -1,0 +1,119 @@
+"""obs/drift.py: jaxpr stream charging + the cost-model drift gate.
+
+The full three-pipeline sweep lives in the obs-smoke CI leg
+(benchmarks/obs_smoke.py); here the charging primitives are checked on
+hand-counted programs and the gate semantics on one cheap pipeline.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.obs import drift
+
+
+# ---------------------------------------------------------------------------
+# charge_streams / measure_* on hand-counted programs
+# ---------------------------------------------------------------------------
+
+def test_charge_streams_counts_leaf_operands():
+    def f(a, b):
+        return a + b  # one leaf eqn: reads both, writes one
+
+    a = jnp.zeros((8,), jnp.float32)
+    r, w = drift.measure_call_bytes(f, a, a)
+    assert r == 2 * 8 * 4
+    assert w == 8 * 4
+
+
+def test_charge_streams_descends_structural_eqns():
+    @jax.jit
+    def inner(a):
+        return a * 2.0
+
+    def f(a):
+        return inner(a) + 1.0
+
+    a = jnp.zeros((4,), jnp.float32)
+    r, w = drift.measure_call_bytes(f, a)
+    # pjit boundary must not be double-charged: the mul inside plus the
+    # add outside write 16 bytes each; reads are those two 16-byte
+    # operands plus the scalar literals (4 bytes apiece)
+    assert w == 2 * 16
+    assert 2 * 16 <= r <= 2 * 16 + 16
+
+
+def test_measure_iteration_bytes_charges_loop_body():
+    def f(a):
+        def body(c, _):
+            return c + 1.0, None
+        return jax.lax.scan(body, a, None, length=5)[0]
+
+    a = jnp.zeros((16,), jnp.float32)
+    r, w = drift.measure_iteration_bytes(f, a)
+    # ONE iteration's body, not 5x: the add reads carry + scalar
+    assert w == 16 * 4
+    assert r >= 16 * 4
+    assert r < 2 * 16 * 4 + 8  # carry + broadcast scalar, nothing else
+
+
+def test_measure_iteration_bytes_requires_a_loop():
+    with pytest.raises(ValueError):
+        drift.measure_iteration_bytes(lambda a: a + 1.0,
+                                      jnp.zeros((4,), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# report / gate semantics
+# ---------------------------------------------------------------------------
+
+def test_unknown_pipeline_raises():
+    with pytest.raises(ValueError):
+        drift.check_bytes("made_up_pipeline")
+    with pytest.raises(ValueError):
+        drift.check_collectives("made_up_pipeline")
+
+
+def test_report_to_dict_schema():
+    row = drift.DriftRow(pipeline="p", check="c", measured=1, expected=1,
+                         ok=True, ratio=1.0, band=(0.9, 1.1))
+    rep = drift.DriftReport(rows=[row])
+    assert rep.ok and rep.failures() == []
+    d = rep.to_dict()
+    assert d["schema"] == "model-drift/1"
+    assert d["ok"] is True
+    assert d["rows"][0]["pipeline"] == "p"
+    assert "provenance" in d
+
+
+def test_assert_no_drift_raises_on_failure():
+    bad = drift.DriftRow(pipeline="p", check="c", measured=2, expected=1,
+                         ok=False, detail="measured 2x the book")
+    with pytest.raises(drift.ModelDriftError) as ei:
+        drift.assert_no_drift(drift.DriftReport(rows=[bad]))
+    assert "p/c" in str(ei.value)
+    assert "measured 2x the book" in str(ei.value)
+
+
+def test_assert_no_drift_passes_clean_report():
+    good = drift.DriftRow(pipeline="p", check="c", measured=1, expected=1,
+                          ok=True)
+    rep = drift.assert_no_drift(drift.DriftReport(rows=[good]))
+    assert rep.ok
+
+
+# ---------------------------------------------------------------------------
+# one real pipeline end to end (the other two + the byte bands run in the
+# obs-smoke CI leg; collectives here are make_jaxpr-only and cheap)
+# ---------------------------------------------------------------------------
+
+def test_fused_v2_collective_contract():
+    row = drift.check_collectives("fused_v2")
+    assert row.ok, row.detail
+    assert row.measured == {}  # single-device: collective-free
+
+
+def test_sstep_collective_contract():
+    row = drift.check_collectives("sstep_v3")
+    assert row.ok, row.detail
+    assert row.measured["cycle"] == {"ppermute": 2, "psum": 1}
+    assert row.measured["update"] == {}

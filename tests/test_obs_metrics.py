@@ -1,0 +1,124 @@
+"""obs/metrics.py: histograms, service metrics, per-solve telemetry."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import trace
+from repro.obs.metrics import Histogram, ServiceMetrics, capture_solve
+
+
+# ---------------------------------------------------------------------------
+# Histogram
+# ---------------------------------------------------------------------------
+
+def test_histogram_buckets_and_stats():
+    h = Histogram((1.0, 10.0))
+    for v in (0.5, 5.0, 5.0, 50.0):
+        h.record(v)
+    snap = h.snapshot()
+    assert snap["buckets"] == {"le_1": 1, "le_10": 2, "inf": 1}
+    assert snap["count"] == 4
+    assert snap["min"] == 0.5 and snap["max"] == 50.0
+    assert snap["mean"] == pytest.approx(60.5 / 4)
+
+
+def test_histogram_empty_snapshot():
+    snap = Histogram((1.0,)).snapshot()
+    assert snap["count"] == 0
+    assert snap["mean"] is None and snap["min"] is None
+
+
+def test_histogram_requires_bounds():
+    with pytest.raises(ValueError):
+        Histogram(())
+
+
+def test_histogram_boundary_value_goes_low():
+    h = Histogram((1.0, 10.0))
+    h.record(1.0)  # upper edges are inclusive
+    assert h.snapshot()["buckets"]["le_1"] == 1
+
+
+# ---------------------------------------------------------------------------
+# ServiceMetrics
+# ---------------------------------------------------------------------------
+
+def test_service_metrics_queue_and_dispatch():
+    m = ServiceMetrics()
+    m.observe_submit(1)
+    m.observe_submit(2)
+    m.observe_submit(3)
+    m.observe_depth(0)
+    bucket = ((8, 5), "f32")
+    m.observe_dispatch(bucket, batch=2, max_b=4, wall_us=2_000.0)
+    m.observe_dispatch(bucket, batch=1, max_b=4, wall_us=20_000.0)
+    snap = m.snapshot()
+    assert snap["submitted"] == 3
+    assert snap["queue_depth"] == 0
+    assert snap["queue_high_water"] == 3
+    assert snap["dispatches"] == 2
+    assert snap["requests_served"] == 3
+    assert snap["latency_ms"]["count"] == 2
+    assert snap["occupancy"]["buckets"]["le_0.25"] == 1  # batch 1 of 4
+    assert snap["occupancy"]["buckets"]["le_0.5"] == 1   # batch 2 of 4
+    per = snap["per_bucket"]
+    assert list(per) == [repr(bucket)]  # JSON-safe keys
+    assert per[repr(bucket)]["latency_ms"]["count"] == 2
+
+
+def test_service_metrics_emit_to_active_recorder():
+    m = ServiceMetrics()
+    with trace.recording() as rec:
+        m.observe_submit(5)
+        m.observe_dispatch(("b",), batch=3, max_b=4, wall_us=1.0)
+    assert rec.gauges["service.queue_depth"] == 5
+    assert rec.counters["service.dispatches"] == 1
+    assert rec.counters["service.requests"] == 3
+
+
+# ---------------------------------------------------------------------------
+# capture_solve
+# ---------------------------------------------------------------------------
+
+class _FakeResult:
+    pipeline = "fused_v2"
+    precond = None
+    iters_taken = np.asarray([3, 5])
+    achieved_rtol = jnp.asarray([1e-9, 1e-7])
+
+
+def test_capture_solve_reduces_over_batch():
+    tel = capture_solve(_FakeResult(), route="block", b=2, niter=5,
+                        tol=None, wall_us=123.4,
+                        phases={"dispatch": 123.4},
+                        autotune={"hits": 1, "misses": 0})
+    assert tel.iters == 5                      # max over lanes
+    assert tel.achieved_rtol == pytest.approx(1e-7)  # worst lane
+    assert tel.route == "block" and tel.pipeline == "fused_v2"
+    assert tel.autotune == {"hits": 1, "misses": 0}
+    assert tel.provenance["machine"] == trace.machine_tag()
+    d = tel.to_dict()
+    assert d["wall_us"] == pytest.approx(123.4)
+    assert d["phases"] == {"dispatch": 123.4}
+
+
+def test_solve_case_attaches_telemetry_only_when_tracing():
+    from repro.core.nekbone import NekboneCase
+
+    case = NekboneCase(n=4, grid=(2, 2, 2), dtype=jnp.float32,
+                       ax_impl="pallas_fused_cg_v2")
+    _, f = case.manufactured()
+    off = case.solve(f, niter=3)
+    assert off.telemetry is None
+    with trace.recording() as rec:
+        on = case.solve(f, niter=3)
+    tel = on.telemetry
+    assert tel is not None
+    assert tel.iters == 3
+    assert tel.wall_us > 0
+    assert tel.route == "v2"
+    assert rec.counters.get("solves") == 1
+    assert "solve" in [r["name"] for r in rec.records
+                       if r["type"] == "span"]
+    # bitwise: instrumentation must not perturb the solve
+    assert np.asarray(off.x).tobytes() == np.asarray(on.x).tobytes()

@@ -110,3 +110,52 @@ def test_warm_start_populates_caches(setup, tmp_path, monkeypatch):
 def test_rejects_bad_max_b():
     with pytest.raises(ValueError, match="max_b"):
         SolverService(max_b=0)
+
+
+# ---------------------------------------------------------------------------
+# DispatchRecord: the tuple shim (ISSUE 10 satellite).  dispatch_log used
+# to hold (bucket, request_ids) tuples; the dataclass must keep every
+# legacy access pattern working — the asserts above (`!= []`, iteration
+# unpacking, `{k for k, _ in ...}`, len) already exercise most of it,
+# this pins the rest explicitly so a refactor cannot silently drop it.
+# ---------------------------------------------------------------------------
+
+def test_dispatch_record_tuple_shim():
+    from repro.launch.solver_service import DispatchRecord
+
+    rec = DispatchRecord(bucket=("bk",), request_ids=[1, 2, 3],
+                         wall_us=5.0, pipeline="fused_v2_rhs3")
+    # legacy tuple protocol: 2-tuple of (bucket, request_ids)
+    assert len(rec) == 2
+    assert rec[0] == ("bk",) and rec[1] == [1, 2, 3]
+    bucket, rids = rec
+    assert bucket == ("bk",) and rids == [1, 2, 3]
+    assert rec == (("bk",), [1, 2, 3])
+    assert rec != (("other",), [1, 2, 3])
+    # equality against another record compares the same 2-tuple view
+    assert rec == DispatchRecord(bucket=("bk",), request_ids=[1, 2, 3])
+    # hashable (bucket keys land in sets in the tests above)
+    assert isinstance(hash(rec), int)
+    # batch_size fills from request_ids when not given
+    assert rec.batch_size == 3
+
+
+def test_dispatch_log_records_carry_telemetry(setup):
+    cfg, case, f = setup
+    from repro.launch.solver_service import DispatchRecord
+
+    svc = SolverService(max_b=2)
+    for _ in range(3):
+        svc.submit(SolveRequest(f=f, config=cfg, niter=2))
+    svc.drain()
+    assert len(svc.dispatch_log) == 2
+    for rec in svc.dispatch_log:
+        assert isinstance(rec, DispatchRecord)
+        assert rec.wall_us > 0
+        assert rec.pipeline is not None
+    assert [r.batch_size for r in svc.dispatch_log] == [2, 1]
+    snap = svc.metrics.snapshot()
+    assert snap["dispatches"] == 2
+    assert snap["requests_served"] == 3
+    assert snap["queue_high_water"] == 3
+    assert snap["latency_ms"]["count"] == 2
